@@ -1,0 +1,45 @@
+"""Fig. 10 analogue: preparation and query time vs lake size (equal-sized
+files, growing count — the paper's 1–10 GB synthetic study, scaled to this
+host). Checks FREYJA's linear-prep / size-independent-query behaviour."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, bench_model
+
+
+def run(scales=(1, 2, 4, 8)):
+    from repro.core import LakeSpec, generate_lake, profile_lake
+    from repro.kernels import ops
+
+    model = bench_model()
+    rows = []
+    prep_times = []
+    for s in scales:
+        spec = LakeSpec(n_domains=16, n_tables=12 * s, row_budget=1024,
+                        rows_log_mean=6.5, seed=40 + s)
+        lake = generate_lake(spec)
+        with Timer() as t_prep:
+            prof = profile_lake(lake.batch)
+        prep_times.append((lake.n_columns, t_prep.s))
+        z = prof.zscored.astype(np.float32)
+        w = prof.words
+        q = np.arange(8)
+        _ = np.asarray(ops.fused_score(z[q], w[q], z, w, model.gbdt))
+        with Timer() as t_q:
+            _ = np.asarray(ops.fused_score(z[q], w[q], z, w, model.gbdt))
+        rows.append((f"fig10/scale_{s}x/prep", t_prep.s * 1e6,
+                     f"{lake.n_columns} cols {lake.raw_bytes/1e6:.0f}MB "
+                     f"{t_prep.s:.2f}s"))
+        rows.append((f"fig10/scale_{s}x/query", t_q.s / 8 * 1e6,
+                     f"{t_q.s/8*1e3:.2f} ms/query"))
+    # linearity: prep time per column should be ~constant
+    per_col = [t / c for c, t in prep_times]
+    rows.append(("fig10/prep_linearity", 0.0,
+                 f"ms/col: {['%.2f' % (x*1e3) for x in per_col]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

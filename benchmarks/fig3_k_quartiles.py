@@ -1,0 +1,38 @@
+"""Fig. 3 analogue: distribution of semantic vs syntactic join candidates
+across cardinality-proportion (K) quartile bins."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, bench_lake
+
+
+def run(n_queries: int = 40):
+    from repro.core import select_queries
+    from repro.core.predictor import exact_jk
+
+    lake = bench_lake(0)
+    qids = select_queries(lake, n_queries)
+    with Timer() as t:
+        j, k = exact_jk(lake, qids)
+
+    qq = np.repeat(qids, lake.n_columns)
+    cc = np.tile(np.arange(lake.n_columns), len(qids))
+    sem = lake.is_semantic(qq, cc).reshape(len(qids), -1)
+    cand = (j > 0) & (qq.reshape(len(qids), -1) != cc.reshape(len(qids), -1))
+
+    rows = []
+    for lo, hi in [(0.0, 0.25), (0.25, 0.5), (0.5, 0.75), (0.75, 1.01)]:
+        m = cand & (k >= lo) & (k < hi)
+        n_sem = int((sem & m).sum())
+        n_syn = int((~sem & m).sum())
+        frac = n_sem / max(n_sem + n_syn, 1)
+        rows.append((f"fig3/K[{lo:.2f},{hi:.2f})/sem_frac",
+                     t.s / len(qids) * 1e6,
+                     f"{frac:.3f} (sem={n_sem} syn={n_syn})"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,109 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts. §Perf (hillclimb log) and §Paper (benchmark results) are
+maintained by hand and appended from templates in this repo.
+
+  PYTHONPATH=src:. python -m benchmarks.gen_experiments > artifacts/roofline.md
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load_cells
+
+HBM_PER_CHIP = 16e9   # TPU v5e
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "?"
+    return f"{b/1e9:.2f}GB"
+
+
+def dryrun_section():
+    out = ["## §Dry-run — lower+compile status (every arch × shape × mesh)",
+           "",
+           "All cells `.lower().compile()` against 512 placeholder host "
+           "devices. `mem/dev` is XLA `memory_analysis` peak per device "
+           "(bf16 weights; decode caches included in arguments).",
+           "",
+           "| arch | shape | single-pod 16×16 | multi-pod 2×16×16 | mem/dev (single) | fits 16GB |",
+           "|---|---|---|---|---|---|"]
+    singles = {(c["arch"], c["shape"]): c for c in load_cells("single")}
+    multis = {(c["arch"], c["shape"]): c for c in load_cells("multi")}
+    for key in sorted(singles):
+        c1, c2 = singles[key], multis.get(key, {})
+        st1 = c1["status"] + ("" if c1["status"] != "skip" else " (rule)")
+        st2 = c2.get("status", "?")
+        mem = c1.get("memory", {}).get("peak_bytes") if c1["status"] == "ok" else None
+        fits = "—" if mem is None else ("yes" if mem < HBM_PER_CHIP else
+                                        "**no (bf16)**")
+        out.append(f"| {key[0]} | {key[1]} | {st1} | {st2} | {fmt_bytes(mem)} | {fits} |")
+    return "\n".join(out)
+
+
+def roofline_section():
+    out = ["## §Roofline — per-cell terms (single-pod 16×16, analytic model)",
+           "",
+           "Terms per device/step: compute = FLOPs/(197 TF/s), memory = HBM "
+           "bytes/(819 GB/s), collective = bytes moved/(50 GB/s link). "
+           "`MODEL/HLO` = 6·N_active·D over total modeled FLOPs (remat and "
+           "attention make it < 1). `frac` = useful-compute time / bound "
+           "(the roofline fraction §Perf climbs). XLA cost_analysis numbers "
+           "are stored alongside in the artifacts but count While bodies "
+           "once — the analytic model (launch/costmodel.py) is the "
+           "reference; formulas in DESIGN.md §7.",
+           "",
+           "| arch | shape | t_compute | t_memory | t_collective | bound | MODEL/HLO | frac | one-line diagnosis |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    diag = {
+        "collective": "TP-16 activation all-reduces dominate — reshape mesh/shard weights (§Perf)",
+        "memory": "HBM streaming (weights or KV cache) dominates",
+        "compute": "MXU-bound — at roofline",
+    }
+    for c in load_cells("single"):
+        if c["status"] != "ok":
+            continue
+        name = c["arch"]
+        extra = diag[c["bottleneck"]]
+        if c["kind"] == "decode":
+            extra = "KV/state cache streaming dominates (int8 KV halves it)"
+        if name == "freyja-discovery":
+            extra = "profile streaming (fused kernel keeps it bandwidth-bound)"
+        out.append(
+            f"| {name} | {c['shape']} | {c['t_compute_s']:.3f}s | "
+            f"{c['t_memory_s']:.3f}s | {c['t_collective_s']:.3f}s | "
+            f"**{c['bottleneck']}** | "
+            f"{c.get('useful_flops_ratio', float('nan')):.2f} | "
+            f"{c.get('roofline_fraction', float('nan')):.2f} | {extra} |")
+    return "\n".join(out)
+
+
+def collective_detail_section():
+    out = ["### Collective schedule (from compiled HLO, multi-pod mesh)",
+           "",
+           "| arch | shape | AG | AR | RS | A2A | CP | dominant op bytes/dev (once-counted) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for c in load_cells("multi"):
+        if c["status"] != "ok":
+            continue
+        n = c.get("collective_counts", {})
+        b = c.get("collectives", {})
+        dom = max(b.items(), key=lambda kv: kv[1])[0] if b else "-"
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {n.get('all-gather', 0)} | "
+            f"{n.get('all-reduce', 0)} | {n.get('reduce-scatter', 0)} | "
+            f"{n.get('all-to-all', 0)} | {n.get('collective-permute', 0)} | "
+            f"{dom}: {b.get(dom, 0)/1e6:.1f}MB |")
+    return "\n".join(out)
+
+
+def main():
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+    print()
+    print(collective_detail_section())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline report: reads the dry-run artifacts and emits the per-cell
+three-term roofline table (EXPERIMENTS.md §Roofline is generated from this).
+Run the dry-run sweep first: ``python -m repro.launch.dryrun --all --mesh both``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh_kind: str | None = None, tag: str = ""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*{tag}.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if mesh_kind and c.get("mesh_kind") != mesh_kind:
+            continue
+        if tag and not os.path.basename(path).endswith(f"{tag}.json"):
+            continue
+        if not tag and "_opt" in os.path.basename(path):
+            continue
+        cells.append(c)
+    return cells
+
+
+def run():
+    rows = []
+    for c in load_cells(mesh_kind="single"):
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        if c["status"] == "skip":
+            rows.append((name, 0.0, f"SKIP: {c['reason']}"))
+            continue
+        if c["status"] != "ok":
+            rows.append((name, 0.0, f"ERROR: {c.get('error', '?')[:80]}"))
+            continue
+        ratio = c.get("useful_flops_ratio", 0.0)
+        rows.append((
+            name, c["bound_s"] * 1e6,
+            f"bound={c['bottleneck']} tc={c['t_compute_s']:.4f}s "
+            f"tm={c['t_memory_s']:.4f}s tx={c['t_collective_s']:.4f}s "
+            f"useful_flops={ratio:.2f}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run: python -m repro.launch.dryrun --all --mesh both"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

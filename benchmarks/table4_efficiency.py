@@ -1,0 +1,66 @@
+"""Table IV analogue: preparation vs query time.
+
+FREYJA preparation = profiling the lake (JAX, jitted, batch).
+FREYJA query      = distance + GBDT inference + top-k (fused kernel).
+Baselines: exact multiset-Jaccard all-pairs (what the paper says is
+infeasible at scale), and MinHash signature build/query.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, bench_lake, bench_model
+
+
+def run(n_queries: int = 30):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import profile_lake, select_queries
+    from repro.core.predictor import exact_jk
+    from repro.kernels import ops, ref
+
+    lake = bench_lake(0)
+    model = bench_model()
+    qids = select_queries(lake, n_queries)
+    rows = []
+
+    # --- preparation ---
+    with Timer() as t_prof:
+        prof = profile_lake(lake.batch)
+    rows.append(("table4/freyja/prep", t_prof.s * 1e6,
+                 f"{t_prof.s:.2f}s for {lake.n_columns} cols "
+                 f"({lake.raw_bytes/1e6:.1f}MB raw)"))
+    with Timer() as t_mh:
+        sig = np.asarray(ops.minhash(lake.batch.values32, n_perm=128))
+    rows.append(("table4/minhash/prep", t_mh.s * 1e6, f"{t_mh.s:.2f}s"))
+    rows.append(("table4/exact/prep", 0.0, "0 (sketches built at ingest)"))
+
+    # --- query (warm, per query column) ---
+    z = prof.zscored.astype(np.float32)
+    w = prof.words
+    _ = ops.fused_score(z[qids[:1]], w[qids[:1]], z, w, model.gbdt)  # compile
+    with Timer() as t_q:
+        s = np.asarray(ops.fused_score(z[qids], w[qids], z, w, model.gbdt))
+        ids = np.argsort(-s, axis=1)[:, :10]
+    rows.append(("table4/freyja/query", t_q.s / len(qids) * 1e6,
+                 f"{t_q.s/len(qids)*1e3:.2f} ms/query"))
+
+    with Timer() as t_e:
+        j, k = exact_jk(lake, qids)
+    rows.append(("table4/exact/query", t_e.s / len(qids) * 1e6,
+                 f"{t_e.s/len(qids)*1e3:.2f} ms/query"))
+
+    sigj = jnp.asarray(sig)
+    _ = np.asarray(ref.minhash_jaccard_ref(sigj[qids[:1], None], sigj[None]))
+    with Timer() as t_m:
+        est = np.asarray(ref.minhash_jaccard_ref(sigj[qids][:, None], sigj[None]))
+    rows.append(("table4/minhash/query", t_m.s / len(qids) * 1e6,
+                 f"{t_m.s/len(qids)*1e3:.2f} ms/query"))
+    rows.append(("table4/speedup/exact_over_freyja", 0.0,
+                 f"{t_e.s / max(t_q.s, 1e-9):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

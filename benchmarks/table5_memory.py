@@ -1,0 +1,33 @@
+"""Table V analogue: memory footprint of discovery structures vs raw lake.
+
+The paper reports FREYJA profiles at <1% of lake size; we compare profiles
+vs exact sketches vs MinHash signatures."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, bench_lake, bench_profiles
+
+
+def run():
+    import numpy as np
+    from repro.kernels import ops
+
+    lake = bench_lake(0)
+    prof = bench_profiles(0)
+    raw = max(lake.raw_bytes, 1)
+    sig = np.asarray(ops.minhash(lake.batch.values32, n_perm=128))
+    sizes = {
+        "freyja_profiles": prof.nbytes(),
+        "exact_sketches": lake.packed.nbytes(),
+        "minhash_sigs": sig.nbytes,
+        "raw_lake": raw,
+    }
+    rows = []
+    for name, b in sizes.items():
+        rows.append((f"table5/{name}", 0.0,
+                     f"{b/1e6:.3f} MB ({100*b/raw:.2f}% of raw)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

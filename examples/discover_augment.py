@@ -1,0 +1,40 @@
+"""Data augmentation via join discovery — the paper's downstream use case:
+a base table is widened with the best-ranked joinable columns before
+training a model on it (here: the discovered joins feed the data pipeline).
+
+  PYTHONPATH=src python examples/discover_augment.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (DiscoveryIndex, GBDTConfig, LakeSpec, generate_lake,
+                        profile_lake, select_queries, train_quality_model)
+from repro.data.pipeline import augmented_table_pipeline
+
+
+def main():
+    lake = generate_lake(LakeSpec(n_domains=12, n_tables=30, row_budget=1024,
+                                  rows_log_mean=6.2, seed=4))
+    prof = profile_lake(lake.batch)
+    model = train_quality_model([lake], GBDTConfig(n_trees=30, depth=4),
+                                n_query=64)
+    index = DiscoveryIndex(profiles=prof, model=model, table_ids=lake.table)
+
+    base_cols = select_queries(lake, 5)
+    print("augmenting base columns with discovered join partners:\n")
+    total_new = 0
+    for q in base_cols:
+        ids, scores = augmented_table_pipeline(lake, index, int(q), k=3)
+        partners = [(lake.batch.names[i], f"{s:.3f}")
+                    for i, s in zip(ids, scores) if np.isfinite(s) and s > 0.1]
+        total_new += len(partners)
+        print(f"  base {lake.batch.names[q]:22s} += {partners}")
+    print(f"\n{total_new} columns discovered for augmentation across "
+          f"{len(base_cols)} base tables")
+    assert total_new > 0
+
+
+if __name__ == "__main__":
+    main()

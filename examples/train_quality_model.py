@@ -1,0 +1,54 @@
+"""The paper's core experiment: train the general-purpose join-quality
+model on synthetic lakes, evaluate ranking quality on a held-out lake, and
+save the model for reuse (FREYJA ships one model, no per-lake fine-tuning).
+
+  PYTHONPATH=src python examples/train_quality_model.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import numpy as np
+
+from repro.core import (DiscoveryIndex, GBDTConfig, LakeSpec, generate_lake,
+                        profile_lake, rank, select_queries,
+                        train_quality_model)
+
+
+def main():
+    t0 = time.time()
+    train_lakes = [generate_lake(LakeSpec(n_domains=14, n_tables=40,
+                                          row_budget=2048, rows_log_mean=6.8,
+                                          coverage_range=(0.5, 1.0),
+                                          gran_ratio=(4, 8), seed=s))
+                   for s in (100, 101)]
+    print(f"generated {len(train_lakes)} training lakes "
+          f"({sum(l.n_columns for l in train_lakes)} columns) "
+          f"in {time.time()-t0:.1f}s")
+
+    t0 = time.time()
+    model = train_quality_model(train_lakes, GBDTConfig(), n_query=128)
+    print(f"trained GBDT (50 oblivious trees, depth 5): "
+          f"R² = {model.train_r2:.3f} in {time.time()-t0:.1f}s")
+    os.makedirs("artifacts", exist_ok=True)
+    model.save("artifacts/quality_model.npz")
+    print("saved to artifacts/quality_model.npz")
+
+    # held-out evaluation (different seed AND different spec)
+    lake = generate_lake(LakeSpec(n_domains=20, n_tables=60, row_budget=2048,
+                                  rows_log_mean=6.8, coverage_range=(0.5, 1.0),
+                                  gran_ratio=(4, 8), seed=0))
+    prof = profile_lake(lake.batch)
+    idx = DiscoveryIndex(profiles=prof, model=model, table_ids=lake.table)
+    qids = select_queries(lake, 30)
+    for k in (1, 3, 5, 10):
+        scores, ids = rank(idx, qids, k=k)
+        valid = np.isfinite(scores)
+        sem = lake.is_semantic(np.repeat(qids, k),
+                               ids.reshape(-1)).reshape(len(qids), k)
+        print(f"held-out lake P@{k:2d} = {(sem & valid).sum()/valid.sum():.3f}")
+
+
+if __name__ == "__main__":
+    main()

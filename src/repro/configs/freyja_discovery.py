@@ -1,0 +1,6 @@
+"""FREYJA's own distributed discovery step as a dry-runnable config: the
+paper's query path (profile distances -> GBDT -> top-k) over a sharded
+profile corpus. Not an LM; used by launch/dryrun.py as an extra cell."""
+N_COLUMNS = 16 * 1024 * 1024       # 16M columns (a very large lake)
+N_QUERIES = 64
+TOP_K = 100

@@ -1,0 +1,22 @@
+"""FREYJA core: the paper's contribution as composable JAX modules."""
+from repro.core import features
+from repro.core.discovery import DiscoveryIndex, rank, rank_sharded
+from repro.core.gbdt import GBDTConfig, GBDTParams, fit_gbdt
+from repro.core.ingest import ColumnBatch, ColumnSketch, ingest_string_columns
+from repro.core.lakegen import Lake, LakeSpec, generate_lake, select_queries
+from repro.core.predictor import (JoinQualityModel, build_training_set,
+                                  train_quality_model)
+from repro.core.profiles import LakeProfiles, profile_lake
+from repro.core.quality import (cardinality_proportion, containment,
+                                continuous_quality, discrete_quality,
+                                multiset_jaccard, set_jaccard)
+
+__all__ = [
+    "features", "DiscoveryIndex", "rank", "rank_sharded", "GBDTConfig",
+    "GBDTParams", "fit_gbdt", "ColumnBatch", "ColumnSketch",
+    "ingest_string_columns", "Lake", "LakeSpec", "generate_lake",
+    "select_queries", "JoinQualityModel", "build_training_set",
+    "train_quality_model", "LakeProfiles", "profile_lake",
+    "cardinality_proportion", "containment", "continuous_quality",
+    "discrete_quality", "multiset_jaccard", "set_jaccard",
+]

@@ -1,0 +1,226 @@
+"""Synthetic data-lake generator with join ground truth *by construction*.
+
+The paper hand-labels 4,318 candidate joins from 160 open datasets (plus the
+SANTOS/TUS/D3L benchmark lakes). Offline we cannot fetch those, so this
+module synthesizes lakes that reproduce the *generating process* the paper
+describes for real lakes:
+
+* **domains** — independent semantic concepts, each with its own vocabulary
+  of values, value-frequency skew (Zipf), and string format;
+* **granularity chains** — a domain can exist at several granularity levels
+  (cities-of-a-country ⊂ cities-of-a-continent): coarser levels are subsets
+  of finer ones, so cross-level pairs overlap heavily yet are *not* semantic
+  joins (the paper's central observation about cardinality proportion);
+* **surface-form collisions** — collision groups of domains share a fraction
+  of raw values ("pol, jap, chn" = countries *or* languages): high overlap,
+  different semantics → syntactic joins;
+* **heterogeneity** — per-column row counts, vocabulary coverage, skew and
+  null rates vary widely (data-lake syntactic variability).
+
+Labels: a pair is **semantic** iff same domain and same granularity level;
+**syntactic** iff it intersects but is not semantic (cross-granularity or
+collision-group or chance overlap). Pairs with empty intersection are not
+join candidates (the paper filters those out too).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.ingest import ColumnBatch, ColumnSketch, pack_columns
+from repro.core.sketches import PackedSketches, pack_sketches
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    z = (x.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15))
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+@dataclasses.dataclass
+class LakeSpec:
+    n_domains: int = 24
+    n_tables: int = 60
+    cols_per_table: tuple[int, int] = (3, 10)
+    # granularity: probability a domain has 2 / 3 levels; size ratio per level
+    p_multi_gran: float = 0.5
+    gran_ratio: tuple[int, int] = (3, 6)
+    # vocabulary sizes (lognormal over base level)
+    vocab_log_mean: float = 6.0       # ~400 values
+    vocab_log_sigma: float = 1.0
+    # per-column sampling
+    rows_log_mean: float = 7.0        # ~1100 rows
+    rows_log_sigma: float = 0.9
+    # within-(domain, granularity) row-count spread. The paper's central
+    # assumption is that columns describing the same concept at the same
+    # granularity have comparable scales; rows_within_sigma ≪ rows_log_sigma
+    # encodes that (per-concept base size × small per-column jitter).
+    rows_within_sigma: float = 0.35
+    row_budget: int = 4096
+    zipf_range: tuple[float, float] = (0.01, 1.4)
+    coverage_range: tuple[float, float] = (0.35, 1.0)
+    null_range: tuple[float, float] = (0.0, 0.1)
+    # surface-form collisions
+    n_collision_groups: int = 4
+    collision_frac: float = 0.5
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Lake:
+    spec: LakeSpec
+    batch: ColumnBatch
+    sketches: list[ColumnSketch]
+    packed: PackedSketches
+    domain: np.ndarray      # (C,) int32 domain id per column
+    gran: np.ndarray        # (C,) int32 granularity level per column
+    table: np.ndarray       # (C,) int32
+    raw_bytes: int          # nominal "CSV" size: sum of char_len + separators
+
+    @property
+    def n_columns(self) -> int:
+        return self.batch.n_columns
+
+    def is_semantic(self, i: int | np.ndarray, j: int | np.ndarray) -> np.ndarray:
+        return (self.domain[i] == self.domain[j]) & (self.gran[i] == self.gran[j])
+
+
+def _build_domain_vocabs(spec: LakeSpec, rng: np.random.Generator):
+    """Global value-id vocabularies per (domain, granularity level)."""
+    vocabs: list[list[np.ndarray]] = []
+    next_id = 1
+    for d in range(spec.n_domains):
+        base = int(np.clip(rng.lognormal(spec.vocab_log_mean, spec.vocab_log_sigma), 24, 200_000))
+        levels = [np.arange(next_id, next_id + base, dtype=np.uint64)]
+        next_id += base
+        n_levels = 1
+        if rng.random() < spec.p_multi_gran:
+            n_levels = int(rng.integers(2, 4))
+        for _ in range(1, n_levels):
+            ratio = int(rng.integers(spec.gran_ratio[0], spec.gran_ratio[1] + 1))
+            extra = levels[-1].shape[0] * (ratio - 1)
+            finer = np.concatenate([levels[-1], np.arange(next_id, next_id + extra, dtype=np.uint64)])
+            next_id += extra
+            levels.append(finer)
+        vocabs.append(levels)
+
+    # collision groups: domains in a group alias a fraction of their *base*
+    # values to shared ids (same surface form, different semantics)
+    dom_ids = rng.permutation(spec.n_domains)
+    gsize = max(2, spec.n_domains // max(spec.n_collision_groups, 1)) if spec.n_collision_groups else 0
+    for g in range(spec.n_collision_groups):
+        members = dom_ids[g * gsize:(g + 1) * gsize]
+        if len(members) < 2:
+            continue
+        share = int(min(min(vocabs[m][0].shape[0] for m in members) * spec.collision_frac, 4096))
+        if share < 1:
+            continue
+        shared = np.arange(next_id, next_id + share, dtype=np.uint64)
+        next_id += share
+        for m in members:
+            for lv in range(len(vocabs[m])):
+                v = vocabs[m][lv].copy()
+                pos = rng.choice(v.shape[0], size=share, replace=False)
+                v[pos] = shared
+                vocabs[m][lv] = v
+    return vocabs
+
+
+def _string_format(domain: int):
+    """Deterministic per-domain string format (drives syntactic features)."""
+    r = np.random.default_rng(0xD0 + domain)
+    base_len = int(r.integers(3, 24))
+    spread = int(r.integers(1, 12))
+    max_words = int(r.integers(1, 5))
+    return base_len, spread, max_words
+
+
+def _value_strings(vids: np.ndarray, domain: int):
+    base_len, spread, max_words = _string_format(domain)
+    h = splitmix64(vids)
+    char_len = (base_len + (h % np.uint64(spread)).astype(np.int64)).astype(np.float32)
+    word_cnt = (1 + (h >> np.uint64(17)) % np.uint64(max_words)).astype(np.float32)
+    return char_len, word_cnt
+
+
+def generate_lake(spec: LakeSpec) -> Lake:
+    rng = np.random.default_rng(spec.seed)
+    vocabs = _build_domain_vocabs(spec, rng)
+
+    # per-(domain, granularity) base row scale — concepts have a size
+    base_rows = {
+        (d, lv): float(np.clip(rng.lognormal(spec.rows_log_mean + 0.5 * lv,
+                                             spec.rows_log_sigma),
+                               16, spec.row_budget))
+        for d in range(spec.n_domains) for lv in range(len(vocabs[d]))
+    }
+
+    names, h64s, cls, wcs = [], [], [], []
+    dom_l, gran_l, tab_l = [], [], []
+    raw_bytes = 0
+
+    col_id = 0
+    for t in range(spec.n_tables):
+        n_cols = int(rng.integers(spec.cols_per_table[0], spec.cols_per_table[1] + 1))
+        for _ in range(n_cols):
+            d = int(rng.integers(0, spec.n_domains))
+            lv = int(rng.integers(0, len(vocabs[d])))
+            vocab = vocabs[d][lv]
+            n_rows = int(np.clip(
+                base_rows[(d, lv)] * rng.lognormal(0.0, spec.rows_within_sigma),
+                16, spec.row_budget))
+            cov = rng.uniform(*spec.coverage_range)
+            support_n = max(2, min(int(vocab.shape[0] * cov), vocab.shape[0], n_rows * 4))
+            support = rng.choice(vocab, size=support_n, replace=False)
+            a = rng.uniform(*spec.zipf_range)
+            p = (np.arange(1, support_n + 1, dtype=np.float64)) ** (-a)
+            p /= p.sum()
+            vids = rng.choice(support, size=n_rows, p=p)
+            null_frac = rng.uniform(*spec.null_range)
+            keep = rng.random(n_rows) >= null_frac
+            vids = vids[keep]
+            if vids.shape[0] < 4:
+                vids = support[:4].astype(np.uint64)
+            h64 = splitmix64(vids)
+            cl, wc = _value_strings(vids, d)
+            raw_bytes += int(cl.sum()) + vids.shape[0]
+
+            names.append(f"t{t}_c{col_id}_d{d}g{lv}")
+            h64s.append(h64)
+            cls.append(cl)
+            wcs.append(wc)
+            dom_l.append(d)
+            gran_l.append(lv)
+            tab_l.append(t)
+            col_id += 1
+
+    batch, sketches = pack_columns(names, h64s, cls, wcs, row_budget=spec.row_budget,
+                                   table_ids=tab_l)
+    packed = pack_sketches(sketches)
+    return Lake(spec=spec, batch=batch, sketches=sketches, packed=packed,
+                domain=np.asarray(dom_l, np.int32), gran=np.asarray(gran_l, np.int32),
+                table=np.asarray(tab_l, np.int32), raw_bytes=raw_bytes)
+
+
+def select_queries(lake: Lake, n_queries: int, min_semantic: int = 3,
+                   seed: int = 1) -> np.ndarray:
+    """Query columns having at least ``min_semantic`` semantic partners
+    outside their own table (mirrors the paper's query selection)."""
+    rng = np.random.default_rng(seed)
+    c = lake.n_columns
+    counts = np.zeros((c,), np.int32)
+    for d in np.unique(lake.domain):
+        for g in np.unique(lake.gran):
+            m = np.flatnonzero((lake.domain == d) & (lake.gran == g))
+            if m.size < 2:
+                continue
+            # partners outside own table
+            for i in m:
+                counts[i] = np.sum(lake.table[m] != lake.table[i])
+    cand = np.flatnonzero(counts >= min_semantic)
+    if cand.size == 0:
+        cand = np.argsort(-counts)[:n_queries]
+    rng.shuffle(cand)
+    return np.sort(cand[:n_queries]).astype(np.int32)

@@ -1,0 +1,126 @@
+"""The paper's join-quality metric (Section III-B / IV-A).
+
+* multiset Jaccard      J(A,B) = |A ∩ B|_multiset / (|A| + |B|)   ∈ [0, 0.5]
+* cardinality proportion K(A,B) = min(|A|,|B|) / max(|A|,|B|)     over
+  distinct cardinalities ∈ (0, 1]
+* discrete buckets      Q(A,B,L)
+* continuous quality    Q(A,B,s) = product of truncated-Gaussian CDFs with
+  the paper's fitted parameters (μ_J = 0 + strictness, μ_K = 0.44,
+  σ_J = 0.19, σ_K = 0.28, truncation [0, 1]).
+
+Notes vs. the paper text (documented in DESIGN.md §5):
+* The paper's Φ writes ``erf(x/2)``; the standard normal CDF is
+  ``erf(x/√2)`` — we implement the standard CDF (the paper's fitted σ values
+  only make sense with a proper CDF).
+* The paper's discrete formula as printed is non-monotone (``max i`` over
+  jointly loosening thresholds is always L). We implement the evident intent,
+  verified against the paper's own Example 3 (scenario 1 → High, scenario 2
+  → Medium for L = 4):
+
+      Q(A,B,L) = max{ i ∈ [1..L] : J ≥ 2^{-(L-i+1)}  ∧  K ≥ (i-1)/L },
+                 else 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Paper-fitted parameters (Section IV-A).
+MU_J = 0.0
+MU_K = 0.44
+SIGMA_J = 0.19
+SIGMA_K = 0.28
+STRICTNESS = {"relaxed": 0.0, "balanced": 0.25, "strict": 0.5}
+DEFAULT_STRICTNESS = 0.25   # the released model is trained at s = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityParams:
+    mu_j: float = MU_J
+    mu_k: float = MU_K
+    sigma_j: float = SIGMA_J
+    sigma_k: float = SIGMA_K
+    lo: float = 0.0
+    hi: float = 1.0
+
+
+def multiset_jaccard(inter: jnp.ndarray, n_a: jnp.ndarray, n_b: jnp.ndarray) -> jnp.ndarray:
+    """J from a precomputed multiset intersection size and multiset sizes."""
+    denom = jnp.maximum(n_a + n_b, 1).astype(jnp.float32)
+    return inter.astype(jnp.float32) / denom
+
+
+def cardinality_proportion(card_a: jnp.ndarray, card_b: jnp.ndarray) -> jnp.ndarray:
+    a = jnp.maximum(card_a.astype(jnp.float32), 1.0)
+    b = jnp.maximum(card_b.astype(jnp.float32), 1.0)
+    return jnp.minimum(a, b) / jnp.maximum(a, b)
+
+
+def containment(inter_set: jnp.ndarray, card_a: jnp.ndarray) -> jnp.ndarray:
+    """Set containment of A in B (baseline metric, Fig. 2)."""
+    return inter_set.astype(jnp.float32) / jnp.maximum(card_a.astype(jnp.float32), 1.0)
+
+
+def set_jaccard(inter_set: jnp.ndarray, card_a: jnp.ndarray, card_b: jnp.ndarray) -> jnp.ndarray:
+    """Classical set Jaccard (baseline metric, Fig. 2)."""
+    union = card_a + card_b - inter_set
+    return inter_set.astype(jnp.float32) / jnp.maximum(union.astype(jnp.float32), 1.0)
+
+
+def discrete_quality(j: jnp.ndarray, k: jnp.ndarray, levels: int = 4) -> jnp.ndarray:
+    """Q(A,B,L) — see module docstring for the monotone reformulation."""
+    q = jnp.zeros_like(j, dtype=jnp.int32)
+    for i in range(1, levels + 1):
+        ok = (j >= 2.0 ** -(levels - i + 1)) & (k >= (i - 1) / levels)
+        q = jnp.where(ok, i, q)
+    return q
+
+
+def _phi(x: jnp.ndarray) -> jnp.ndarray:
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(jnp.float32(2.0))))
+
+
+def truncated_cdf(x: jnp.ndarray, mu: float, sigma: float,
+                  lo: float = 0.0, hi: float = 1.0) -> jnp.ndarray:
+    """CDF of N(mu, sigma²) truncated to [lo, hi], evaluated at x."""
+    num = _phi((x - mu) / sigma) - _phi((lo - mu) / sigma)
+    den = _phi((hi - mu) / sigma) - _phi((lo - mu) / sigma)
+    return jnp.clip(num / den, 0.0, 1.0)
+
+
+def continuous_quality(j: jnp.ndarray, k: jnp.ndarray,
+                       strictness: float = DEFAULT_STRICTNESS,
+                       params: QualityParams = QualityParams()) -> jnp.ndarray:
+    """Q(A,B,s): the paper's continuous join-quality metric."""
+    cj = truncated_cdf(j, params.mu_j + strictness, params.sigma_j, params.lo, params.hi)
+    ck = truncated_cdf(k, params.mu_k, params.sigma_k, params.lo, params.hi)
+    return cj * ck
+
+
+# ---------------------------------------------------------------------------
+# Wasserstein re-fit (the paper's Fig. 6 procedure): grid-search (μ, σ) per
+# dimension to minimize the W1 distance between the truncated-Gaussian CDF and
+# the empirical distribution of the discrete metric's marginals.
+# ---------------------------------------------------------------------------
+
+def _w1_to_edf(samples, mu, sigma, grid):
+    import numpy as np
+    edf = np.searchsorted(np.sort(samples), grid, side="right") / max(len(samples), 1)
+    cdf = np.asarray(truncated_cdf(jnp.asarray(grid, jnp.float32), float(mu), float(sigma)))
+    return float(np.trapezoid(np.abs(edf - cdf), grid))
+
+
+def fit_truncated_gaussian(samples, mus, sigmas, n_grid: int = 256):
+    """Exhaustive (μ, σ) grid search minimizing W1 to the empirical dist."""
+    import numpy as np
+    grid = np.linspace(0.0, 1.0, n_grid)
+    best = (float("inf"), None, None)
+    for mu in mus:
+        for sg in sigmas:
+            d = _w1_to_edf(samples, mu, sg, grid)
+            if d < best[0]:
+                best = (d, float(mu), float(sg))
+    return {"w1": best[0], "mu": best[1], "sigma": best[2]}

@@ -1,0 +1,126 @@
+"""Exact multiset / set intersections from column sketches.
+
+The paper argues the all-pairs computation of J is infeasible at lake scale —
+FREYJA's point is to *predict* it. We still implement the exact path because
+(a) it labels the synthetic ground truth, (b) it is the "exact metric"
+comparison baseline in the benchmarks, and (c) tests validate the predictor
+against it.
+
+Two implementations:
+* numpy (uint64, exact) — offline label generation;
+* JAX batched (uint32 folded hashes, padded distinct arrays) — the
+  vectorized all-pairs baseline used in benchmarks; vmapped double
+  ``searchsorted`` + count gather.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as FT
+from repro.core.ingest import ColumnSketch, fold32
+
+
+# ---------------------------------------------------------------------------
+# numpy exact path (labels / ground truth)
+# ---------------------------------------------------------------------------
+
+def intersections_np(a: ColumnSketch, b: ColumnSketch) -> tuple[int, int]:
+    """(multiset intersection, set intersection) of two sketches."""
+    common, ia, ib = np.intersect1d(a.values, b.values, assume_unique=True,
+                                    return_indices=True)
+    multi = int(np.minimum(a.counts[ia], b.counts[ib]).sum())
+    return multi, int(common.shape[0])
+
+
+def pair_metrics_np(a: ColumnSketch, b: ColumnSketch) -> dict:
+    multi, inter_set = intersections_np(a, b)
+    ca, cb = a.cardinality, b.cardinality
+    j = multi / max(a.n_rows + b.n_rows, 1)
+    k = min(ca, cb) / max(max(ca, cb), 1)
+    jac = inter_set / max(ca + cb - inter_set, 1)
+    cont = inter_set / max(ca, 1)
+    return {"j_multi": j, "k": k, "jaccard": jac, "containment": cont,
+            "inter_multi": multi, "inter_set": inter_set}
+
+
+# ---------------------------------------------------------------------------
+# JAX batched path (padded distinct arrays)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedSketches:
+    """Padded distinct-value arrays for device-side exact metrics.
+
+    values: (C, K) uint32 sorted ascending with SENTINEL padding
+    counts: (C, K) float32 (0 padding)
+    card:   (C,) int32
+    n_rows: (C,) int32
+    """
+
+    values: np.ndarray
+    counts: np.ndarray
+    card: np.ndarray
+    n_rows: np.ndarray
+
+    def nbytes(self) -> int:
+        return self.values.nbytes + self.counts.nbytes + self.card.nbytes + self.n_rows.nbytes
+
+
+def pack_sketches(sketches: list[ColumnSketch], k_max: int | None = None) -> PackedSketches:
+    kcap = max((s.cardinality for s in sketches), default=1)
+    k = int(k_max or kcap)
+    c = len(sketches)
+    values = np.full((c, k), FT.HASH_SENTINEL, dtype=np.uint32)
+    counts = np.zeros((c, k), dtype=np.float32)
+    card = np.zeros((c,), dtype=np.int32)
+    n_rows = np.zeros((c,), dtype=np.int32)
+    for i, s in enumerate(sketches):
+        v32 = fold32(s.values)
+        order = np.argsort(v32, kind="stable")
+        sv, sc = v32[order], s.counts[order].astype(np.float32)
+        # fold32 can (rarely) merge two uint64 values; merge their counts
+        uv, start = np.unique(sv, return_index=True)
+        csum = np.add.reduceat(sc, start) if sv.size else np.zeros((0,), np.float32)
+        kk = min(uv.shape[0], k)
+        values[i, :kk] = uv[:kk]
+        counts[i, :kk] = csum[:kk]
+        card[i] = kk
+        n_rows[i] = s.n_rows
+    return PackedSketches(values=values, counts=counts, card=card, n_rows=n_rows)
+
+
+def _pair_intersections(va, ca_counts, vb, cb_counts):
+    """Intersections of two sorted padded sketches (uint32)."""
+    pos = jnp.searchsorted(vb, va)
+    pos = jnp.clip(pos, 0, vb.shape[0] - 1)
+    match = (vb[pos] == va) & (va != jnp.uint32(FT.HASH_SENTINEL))
+    inter_set = jnp.sum(match.astype(jnp.int32))
+    inter_multi = jnp.sum(jnp.where(match, jnp.minimum(ca_counts, cb_counts[pos]), 0.0))
+    return inter_multi, inter_set
+
+
+@partial(jax.jit)
+def batch_exact_metrics(q_values, q_counts, q_card, q_rows,
+                        c_values, c_counts, c_card, c_rows):
+    """All-pairs exact metrics: queries (Q, K) × corpus (N, K) -> (Q, N) each.
+
+    Returns dict of (Q, N) arrays: j_multi, k, jaccard, containment.
+    """
+    def one_query(va, ca_counts, card_a, rows_a):
+        def one_corpus(vb, cb_counts, card_b, rows_b):
+            inter_multi, inter_set = _pair_intersections(va, ca_counts, vb, cb_counts)
+            j = inter_multi / jnp.maximum((rows_a + rows_b).astype(jnp.float32), 1.0)
+            cf_a = jnp.maximum(card_a.astype(jnp.float32), 1.0)
+            cf_b = jnp.maximum(card_b.astype(jnp.float32), 1.0)
+            k = jnp.minimum(cf_a, cf_b) / jnp.maximum(cf_a, cf_b)
+            union = jnp.maximum(cf_a + cf_b - inter_set, 1.0)
+            return (j, k, inter_set / union, inter_set / cf_a)
+        return jax.vmap(one_corpus)(c_values, c_counts, c_card, c_rows)
+
+    j, k, jac, cont = jax.vmap(one_query)(q_values, q_counts, q_card, q_rows)
+    return {"j_multi": j, "k": k, "jaccard": jac, "containment": cont}

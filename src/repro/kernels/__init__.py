@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for FREYJA's perf-critical compute (interpret=True on
+CPU; see ops.py for the public entry points and ref.py for the oracles):
+
+  profile_distance / fused_score — pairwise profile distances (+ oblivious
+                                    GBDT scoring fused in-VMEM)
+  gbdt_infer                     — standalone oblivious-GBDT ensemble
+  minhash                        — signature build (syntactic baseline)
+  quality_cdf                    — truncated-Gaussian quality metric
+"""

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: oblivious-GBDT ensemble inference.
+
+The join-quality model is evaluated for every (query, corpus-column) pair —
+the per-query hot loop of FREYJA's ranking path. Oblivious trees make this
+branch-free (see ``core/gbdt.py``): per tree,
+
+  * feature select   — one-hot matmul ``(Nb, F) @ (F, D)``  (MXU),
+  * level compares   — ``(Nb, D)`` >= thresholds            (VPU),
+  * leaf index       — bit-pack of compares                 (VPU),
+  * leaf lookup      — one-hot matmul ``(Nb, 2^D) @ (2^D,)``(MXU).
+
+Rows are tiled into VMEM blocks of ``block_n``; the whole ensemble
+(T×D feature ids/thresholds + T×2^D leaves — a few KB for the paper's 50
+trees) is replicated into VMEM once per block. The tree loop is a
+``fori_loop`` so the program stays O(1) in T.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, feats_ref, thrs_ref, leaves_ref, out_ref, *, base: float):
+    x = x_ref[...]                      # (Nb, F) f32
+    feats = feats_ref[...]              # (T, D) i32
+    thrs = thrs_ref[...]                # (T, D) f32
+    leaves = leaves_ref[...]            # (T, 2^D) f32
+    t, d = feats.shape
+    nb, f = x.shape
+    n_leaves = leaves.shape[1]
+    pw2 = (2 ** jnp.arange(d, dtype=jnp.int32))[None, :]
+    f_iota = jnp.arange(f, dtype=jnp.int32)[:, None]
+    l_iota = jnp.arange(n_leaves, dtype=jnp.int32)[None, :]
+
+    def tree(ti, acc):
+        f_l = jax.lax.dynamic_slice(feats, (ti, 0), (1, d))[0]
+        t_l = jax.lax.dynamic_slice(thrs, (ti, 0), (1, d))[0]
+        lv = jax.lax.dynamic_slice(leaves, (ti, 0), (1, n_leaves))[0]
+        onehot_f = (f_iota == f_l[None, :]).astype(jnp.float32)   # (F, D)
+        sel = jax.lax.dot(x, onehot_f,
+                          precision=jax.lax.Precision.HIGHEST)    # (Nb, D)
+        bits = (sel >= t_l[None, :]).astype(jnp.int32)
+        idx = jnp.sum(bits * pw2, axis=-1)                        # (Nb,)
+        onehot_l = (idx[:, None] == l_iota).astype(jnp.float32)   # (Nb, 2^D)
+        return acc + jax.lax.dot(onehot_l, lv[:, None],
+                                 precision=jax.lax.Precision.HIGHEST)[:, 0]
+
+    acc0 = jnp.full((nb,), base, jnp.float32)
+    out_ref[...] = jax.lax.fori_loop(0, t, tree, acc0)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("base", "block_n", "interpret"))
+def gbdt_infer_pallas(x, feats, thrs, leaves, *, base: float,
+                      block_n: int = 1024, interpret: bool = True):
+    """x (N, F) f32 -> (N,) f32 predictions."""
+    n, f = x.shape
+    n_pad = -(-n // block_n) * block_n
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    t, d = feats.shape
+    out = pl.pallas_call(
+        functools.partial(_kernel, base=base),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((t, leaves.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(xp, feats, thrs, leaves)
+    return out[:n, 0]

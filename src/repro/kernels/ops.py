@@ -1,0 +1,60 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+``interpret=True`` mode — the kernel body executes as jnp ops, validating
+semantics against ``ref.py``. Callers never pass ``interpret`` themselves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gbdt import GBDTParams
+from repro.kernels.gbdt_infer import gbdt_infer_pallas
+from repro.kernels.minhash import make_permutations, minhash_pallas
+from repro.kernels.profile_distance import (fused_score_pallas,
+                                            profile_distance_pallas)
+from repro.kernels.quality_cdf import quality_cdf_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gbdt_infer(x, params: GBDTParams, *, block_n: int = 1024):
+    feats, thrs, leaves, base = params.astuple()
+    return gbdt_infer_pallas(jnp.asarray(x), jnp.asarray(feats),
+                             jnp.asarray(thrs), jnp.asarray(leaves),
+                             base=float(base), block_n=block_n,
+                             interpret=_interpret())
+
+
+def profile_distance(zq, wq, zc, wc, *, block_q: int = 8, block_n: int = 256):
+    return profile_distance_pallas(jnp.asarray(zq), jnp.asarray(wq),
+                                   jnp.asarray(zc), jnp.asarray(wc),
+                                   block_q=block_q, block_n=block_n,
+                                   interpret=_interpret())
+
+
+def fused_score(zq, wq, zc, wc, params: GBDTParams, *, block_q: int = 8,
+                block_n: int = 256):
+    feats, thrs, leaves, base = params.astuple()
+    return fused_score_pallas(jnp.asarray(zq), jnp.asarray(wq),
+                              jnp.asarray(zc), jnp.asarray(wc),
+                              jnp.asarray(feats), jnp.asarray(thrs),
+                              jnp.asarray(leaves), base=float(base),
+                              block_q=block_q, block_n=block_n,
+                              interpret=_interpret())
+
+
+def minhash(values, *, n_perm: int = 128, seed: int = 0,
+            block_c: int = 8, block_r: int = 256):
+    a, b = make_permutations(n_perm, seed)
+    return minhash_pallas(jnp.asarray(values), a, b, block_c=block_c,
+                          block_r=block_r, interpret=_interpret())
+
+
+def quality_cdf(j, k, *, strictness: float = 0.25, block: int = 4096):
+    return quality_cdf_pallas(jnp.asarray(j), jnp.asarray(k),
+                              strictness=strictness, block=block,
+                              interpret=_interpret())

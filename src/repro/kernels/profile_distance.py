@@ -1,0 +1,142 @@
+"""Pallas TPU kernels: profile distance features (+ fused scoring).
+
+``profile_distance``: the (Q, N, F_DIST) distance tensor between query
+profiles and a corpus tile — |Δz| per numeric slot, top-10 frequent-word
+overlap, first-word equality. Memory-bound streaming over the corpus:
+corpus tiles of ``block_n`` columns are staged through VMEM; queries are
+small and replicated per block.
+
+``fused_score``: the production path — distance features are consumed by the
+oblivious-GBDT ensemble *inside the kernel*, so the (Q, N, F) tensor never
+touches HBM: per (Q-tile, N-tile) the kernel writes only the (Qb, Nb) score
+block. This is the kernel the roofline/§Perf iteration targets (the paper's
+query path, arithmetic intensity lifted from ~1 flop/byte to ~T·D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import features as FT
+
+_SENT = np.uint32(FT.HASH_SENTINEL)
+
+
+def _distances(zq, wq, zc, wc):
+    """(Qb, Nb, F_DIST) from profile blocks (shared by both kernels)."""
+    d_num = jnp.abs(zq[:, None, :] - zc[None, :, :])          # (Qb, Nb, F_NUM)
+    ta = wq[:, :FT.N_FREQ_WORDS]                               # (Qb, 10)
+    tb = wc[:, :FT.N_FREQ_WORDS]                               # (Nb, 10)
+
+    def word(ai, acc):
+        wa = jax.lax.dynamic_slice(ta, (0, ai), (ta.shape[0], 1))  # (Qb, 1)
+        hit = (wa[:, :, None] == tb[None, :, :]).any(-1)           # (Qb, Nb)
+        return acc + jnp.where(wa != _SENT, hit, False).astype(jnp.float32)
+
+    overlap = jax.lax.fori_loop(0, FT.N_FREQ_WORDS, word,
+                                jnp.zeros((zq.shape[0], zc.shape[0]), jnp.float32))
+    overlap = overlap / FT.N_FREQ_WORDS
+    fa = wq[:, FT.FIRST_WORD]
+    fb = wc[:, FT.FIRST_WORD]
+    first = ((fa[:, None] == fb[None, :]) & (fa[:, None] != _SENT)).astype(jnp.float32)
+    return jnp.concatenate([d_num, overlap[..., None], first[..., None]], axis=-1)
+
+
+def _dist_kernel(zq_ref, wq_ref, zc_ref, wc_ref, out_ref):
+    out_ref[...] = _distances(zq_ref[...], wq_ref[...], zc_ref[...], wc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
+def profile_distance_pallas(zq, wq, zc, wc, *, block_q: int = 8,
+                            block_n: int = 256, interpret: bool = True):
+    """zq (Q,F_NUM) f32, wq (Q,F_WORDS) u32, corpus likewise -> (Q,N,F_DIST)."""
+    q, fn = zq.shape
+    n = zc.shape[0]
+    qp = -(-q // block_q) * block_q
+    np_ = -(-n // block_n) * block_n
+    zq = jnp.pad(zq, ((0, qp - q), (0, 0)))
+    wq = jnp.pad(wq, ((0, qp - q), (0, 0)), constant_values=np.uint32(FT.HASH_SENTINEL))
+    zc = jnp.pad(zc, ((0, np_ - n), (0, 0)))
+    wc = jnp.pad(wc, ((0, np_ - n), (0, 0)), constant_values=np.uint32(FT.HASH_SENTINEL))
+    fw = wq.shape[1]
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=(qp // block_q, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_q, fn), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, fw), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, fn), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, fw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n, FT.F_DIST), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp, np_, FT.F_DIST), jnp.float32),
+        interpret=interpret,
+    )(zq, wq, zc, wc)
+    return out[:q, :n]
+
+
+def _fused_kernel(zq_ref, wq_ref, zc_ref, wc_ref, feats_ref, thrs_ref,
+                  leaves_ref, out_ref, *, base: float):
+    d = _distances(zq_ref[...], wq_ref[...], zc_ref[...], wc_ref[...])
+    qb, nb, f = d.shape
+    x = d.reshape(qb * nb, f)
+    feats = feats_ref[...]
+    thrs = thrs_ref[...]
+    leaves = leaves_ref[...]
+    t, depth = feats.shape
+    n_leaves = leaves.shape[1]
+    pw2 = (2 ** jnp.arange(depth, dtype=jnp.int32))[None, :]
+    f_iota = jnp.arange(f, dtype=jnp.int32)[:, None]
+    l_iota = jnp.arange(n_leaves, dtype=jnp.int32)[None, :]
+
+    def tree(ti, acc):
+        f_l = jax.lax.dynamic_slice(feats, (ti, 0), (1, depth))[0]
+        t_l = jax.lax.dynamic_slice(thrs, (ti, 0), (1, depth))[0]
+        lv = jax.lax.dynamic_slice(leaves, (ti, 0), (1, n_leaves))[0]
+        onehot_f = (f_iota == f_l[None, :]).astype(jnp.float32)
+        sel = jax.lax.dot(x, onehot_f, precision=jax.lax.Precision.HIGHEST)
+        idx = jnp.sum((sel >= t_l[None, :]).astype(jnp.int32) * pw2, axis=-1)
+        onehot_l = (idx[:, None] == l_iota).astype(jnp.float32)
+        return acc + jax.lax.dot(onehot_l, lv[:, None],
+                                 precision=jax.lax.Precision.HIGHEST)[:, 0]
+
+    acc0 = jnp.full((qb * nb,), base, jnp.float32)
+    out_ref[...] = jax.lax.fori_loop(0, t, tree, acc0).reshape(qb, nb)
+
+
+@functools.partial(jax.jit, static_argnames=("base", "block_q", "block_n", "interpret"))
+def fused_score_pallas(zq, wq, zc, wc, feats, thrs, leaves, *, base: float,
+                       block_q: int = 8, block_n: int = 256,
+                       interpret: bool = True):
+    """Fused distance + GBDT scoring: -> (Q, N) f32 without HBM round-trip."""
+    q, fn = zq.shape
+    n = zc.shape[0]
+    qp = -(-q // block_q) * block_q
+    np_ = -(-n // block_n) * block_n
+    zq = jnp.pad(zq, ((0, qp - q), (0, 0)))
+    wq = jnp.pad(wq, ((0, qp - q), (0, 0)), constant_values=np.uint32(FT.HASH_SENTINEL))
+    zc = jnp.pad(zc, ((0, np_ - n), (0, 0)))
+    wc = jnp.pad(wc, ((0, np_ - n), (0, 0)), constant_values=np.uint32(FT.HASH_SENTINEL))
+    fw = wq.shape[1]
+    t, depth = feats.shape
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, base=base),
+        grid=(qp // block_q, np_ // block_n),
+        in_specs=[
+            pl.BlockSpec((block_q, fn), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, fw), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, fn), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, fw), lambda i, j: (j, 0)),
+            pl.BlockSpec((t, depth), lambda i, j: (0, 0)),
+            pl.BlockSpec((t, depth), lambda i, j: (0, 0)),
+            pl.BlockSpec((t, leaves.shape[1]), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp, np_), jnp.float32),
+        interpret=interpret,
+    )(zq, wq, zc, wc, feats, thrs, leaves)
+    return out[:q, :n]

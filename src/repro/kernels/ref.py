@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as FT
+from repro.core import quality
+
+SENTINEL = jnp.uint32(FT.HASH_SENTINEL)
+
+
+def gbdt_infer_ref(x, feats, thrs, leaves, base):
+    """Oblivious-GBDT inference. x (N, F) -> (N,)."""
+    t, d = feats.shape
+
+    def tree(acc, tp):
+        f_l, t_l, lv = tp
+        sel = x[:, f_l]                                   # (N, D)
+        bits = (sel >= t_l).astype(jnp.int32)
+        idx = jnp.sum(bits * (2 ** jnp.arange(d, dtype=jnp.int32)), axis=-1)
+        return acc + lv[idx], None
+
+    acc0 = jnp.full((x.shape[0],), base, jnp.float32)
+    out, _ = jax.lax.scan(tree, acc0, (feats, thrs, leaves))
+    return out
+
+
+def profile_distance_ref(z_q, w_q, z_c, w_c):
+    """Distance features for all (query, corpus) pairs.
+
+    z_q (Q, F_NUM) f32, w_q (Q, F_WORDS) u32, z_c (N, F_NUM), w_c (N, F_WORDS)
+    -> (Q, N, F_DIST) f32
+    """
+    d_num = jnp.abs(z_q[:, None, :] - z_c[None, :, :])
+    ta = w_q[:, :FT.N_FREQ_WORDS]
+    tb = w_c[:, :FT.N_FREQ_WORDS]
+    eq = (ta[:, None, :, None] == tb[None, :, None, :]) & (ta[:, None, :, None] != SENTINEL)
+    overlap = eq.any(-1).sum(-1).astype(jnp.float32) / FT.N_FREQ_WORDS
+    fa, fb = w_q[:, FT.FIRST_WORD], w_c[:, FT.FIRST_WORD]
+    first = ((fa[:, None] == fb[None, :]) & (fa[:, None] != SENTINEL)).astype(jnp.float32)
+    return jnp.concatenate([d_num, overlap[..., None], first[..., None]], axis=-1)
+
+
+def fused_score_ref(z_q, w_q, z_c, w_c, feats, thrs, leaves, base):
+    """profile_distance ∘ gbdt_infer without materializing (Q, N, F)."""
+    d = profile_distance_ref(z_q, w_q, z_c, w_c)
+    q, n, f = d.shape
+    return gbdt_infer_ref(d.reshape(q * n, f), feats, thrs, leaves, base).reshape(q, n)
+
+
+def minhash_ref(values, a, b):
+    """MinHash signatures. values (C, R) u32 (sentinel-padded), a/b (P,) u32
+    -> (C, P) u32 via universal hash h_p(v) = a_p * v + b_p (mod 2^32)."""
+    v = values[:, :, None].astype(jnp.uint32)
+    h = v * a[None, None, :] + b[None, None, :]
+    h = jnp.where(values[:, :, None] == SENTINEL, jnp.uint32(0xFFFFFFFF), h)
+    return jnp.min(h, axis=1)
+
+
+def minhash_jaccard_ref(sig_a, sig_b):
+    """Estimated *set* Jaccard from signatures (the MinHash baseline)."""
+    return jnp.mean((sig_a == sig_b).astype(jnp.float32), axis=-1)
+
+
+def quality_cdf_ref(j, k, strictness, params: quality.QualityParams = quality.QualityParams()):
+    """Continuous quality Q(A,B,s) — see core.quality."""
+    return quality.continuous_quality(j, k, strictness, params)

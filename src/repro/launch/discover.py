@@ -1,0 +1,69 @@
+"""FREYJA discovery driver: build a lake, profile it, train/load the quality
+model, and answer discovery-by-attribute queries.
+
+  PYTHONPATH=src python -m repro.launch.discover --tables 40 --queries 10
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (DiscoveryIndex, GBDTConfig, LakeSpec, generate_lake,
+                        profile_lake, rank, select_queries,
+                        train_quality_model)
+from repro.core.predictor import JoinQualityModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", type=int, default=40)
+    ap.add_argument("--domains", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=10)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--model", default=None, help="path to a trained model .npz")
+    ap.add_argument("--save-model", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    lake = generate_lake(LakeSpec(n_domains=args.domains, n_tables=args.tables,
+                                  seed=args.seed))
+    print(f"lake: {lake.n_columns} columns, {lake.raw_bytes/1e6:.1f} MB raw "
+          f"({time.perf_counter()-t0:.1f}s)")
+
+    t0 = time.perf_counter()
+    prof = profile_lake(lake.batch)
+    print(f"profiles: {prof.numeric.shape} in {time.perf_counter()-t0:.2f}s "
+          f"({prof.nbytes()/1e3:.1f} KB = "
+          f"{100*prof.nbytes()/max(lake.raw_bytes,1):.2f}% of raw)")
+
+    if args.model:
+        model = JoinQualityModel.load(args.model)
+        print(f"loaded model (train R² {model.train_r2:.3f})")
+    else:
+        t0 = time.perf_counter()
+        model = train_quality_model([lake], GBDTConfig())
+        print(f"trained model R² {model.train_r2:.3f} "
+              f"({time.perf_counter()-t0:.1f}s)")
+        if args.save_model:
+            model.save(args.save_model)
+
+    index = DiscoveryIndex(profiles=prof, model=model, names=lake.batch.names,
+                           table_ids=lake.table)
+    qids = select_queries(lake, args.queries)
+    t0 = time.perf_counter()
+    scores, ids = rank(index, qids, k=args.k)
+    dt = time.perf_counter() - t0
+    sem = lake.is_semantic(np.repeat(qids, args.k), ids.reshape(-1))
+    print(f"query: {len(qids)} queries in {dt:.3f}s "
+          f"({dt/max(len(qids),1)*1e3:.1f} ms/query), "
+          f"P@{args.k} = {sem.mean():.3f}")
+    for qi, (s_row, i_row) in list(zip(qids, zip(scores, ids)))[:3]:
+        names = [lake.batch.names[j] for j in i_row[:5]]
+        print(f"  q={lake.batch.names[qi]} -> {names}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` exposes per-device FLOPs and bytes-accessed but not
+collective traffic, so we parse the compiled HLO text and sum bytes moved
+per device for every collective op, with the standard ring-algorithm
+factors:
+
+    all-gather          result_bytes  × (n-1)/n
+    reduce-scatter      operand_bytes × (n-1)/n
+    all-reduce          2 × operand_bytes × (n-1)/n   (RS + AG phases)
+    all-to-all          operand_bytes × (n-1)/n
+    collective-permute  operand_bytes
+
+Group size ``n`` is parsed from ``replica_groups`` (iota or explicit form).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>.*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: dict[str, float] = {}
+    count_by_op: dict[str, int] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:        # async pair: count only the start
+            continue
+        result_bytes = _shape_bytes(m.group("result"))
+        # operand bytes: shapes appearing in the argument list
+        args = line[m.end():]
+        operand_bytes = _shape_bytes(args.split(")")[0])
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_LIST_RE.search(line)
+            n = len(gm2.group(1).split(",")) if gm2 else 2
+        n = max(n, 2)
+        ring = (n - 1) / n
+        if op == "all-gather":
+            b = result_bytes * ring
+        elif op == "reduce-scatter":
+            b = operand_bytes * ring
+        elif op == "all-reduce":
+            b = 2 * operand_bytes * ring
+        elif op == "all-to-all":
+            b = operand_bytes * ring
+        else:  # collective-permute
+            b = operand_bytes
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + b
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op=bytes_by_op, count_by_op=count_by_op)
+
+
+# ---- TPU v5e hardware constants (roofline denominators) -------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per-chip effective)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    t_c = flops_per_dev / PEAK_FLOPS
+    t_m = bytes_per_dev / HBM_BW
+    t_x = coll_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": dom,
+            "bound_s": max(t_c, t_m, t_x)}

@@ -1,0 +1,102 @@
+"""End-to-end training driver.
+
+Examples:
+  # ~100M-class model, real training on this host:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --reduce --steps 200 --batch 8 --seq 256
+
+  # full config under the production mesh (requires the pod):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import TokenPipeline
+from repro.dist import sharding as shd
+from repro.models import registry
+from repro.train.loop import train_loop
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.trainer import build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduce", action="store_true",
+                    help="use the reduced (smoke) config")
+    ap.add_argument("--width", type=int, default=0,
+                    help="override d_model of the reduced config (e.g. 768 "
+                         "for a ~100M-class model)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none", choices=["none", "local", "single", "multi"])
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch)
+    if args.reduce:
+        cfg = registry.reduced_config(cfg)
+        over = {}
+        if args.width:
+            over.update(d_model=args.width, d_ff=4 * args.width,
+                        n_heads=max(4, args.width // 64), d_head=64,
+                        n_kv=max(2, args.width // 128))
+        if args.layers:
+            over["n_layers"] = args.layers
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
+          f"active≈{cfg.active_param_count()/1e6:.1f}M")
+
+    mesh = None
+    if args.mesh == "local":
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh()
+    elif args.mesh in ("single", "multi"):
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+
+    key = jax.random.PRNGKey(0)
+    params, specs = registry.init_params(cfg, key)
+
+    moment_specs = None
+    to_device = None
+    if mesh is not None:
+        pshard = shd.param_shardings(specs, mesh)
+        params = jax.tree.map(jax.device_put, params, pshard)
+        mspec_named = shd.zero1_shardings(specs, params, mesh)
+        moment_specs = jax.tree.map(lambda ns: ns.spec, mspec_named)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        bshard = NamedSharding(mesh, P(shd.batch_axes(mesh)))
+
+        def to_device(batch):
+            return {k: jax.device_put(v, bshard) for k, v in batch.items()}
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=min(50, args.steps // 10 + 1))
+    opt_state = init_opt_state(params)
+    step = build_train_step(cfg, opt_cfg, mesh=mesh, accum=args.accum,
+                            moment_specs=moment_specs)
+    step = jax.jit(step, donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq=args.seq, global_batch=args.batch)
+    params, opt_state, hist = train_loop(
+        step, params, opt_state, pipe, steps=args.steps,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, to_device=to_device)
+    if hist:
+        print(f"first loss {hist[0][1]:.4f} -> last loss {hist[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

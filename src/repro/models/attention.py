@@ -1,0 +1,280 @@
+"""GQA attention: flash-style chunked training path + cached decode path.
+
+* ``attention_train``: online-softmax over KV chunks (lax.scan), so the
+  (S × S) score matrix never materializes — activation memory is
+  O(S · chunk). With ``sliding_window`` set, each query chunk attends only a
+  dynamic-sliced KV window of size (W + chunk): compute drops from O(S²) to
+  O(S · W) (this is what makes mixtral's SWA genuinely sub-quadratic here).
+* ``attention_decode``: one query token against a cache, scanned over cache
+  chunks with online softmax; sliding-window caches are ring buffers of size
+  W (keys stored post-RoPE at absolute positions).
+* Cross-attention (whisper decoder) reuses the same chunked machinery
+  without the causal mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm_vec
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key, dtype, *, cross: bool = False):
+    d, nh, nk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, nh * dh), dtype),
+         "wk": dense_init(ks[1], (d, nk * dh), dtype),
+         "wv": dense_init(ks[2], (d, nk * dh), dtype),
+         "wo": dense_init(ks[3], (nh * dh, d), dtype)}
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+         "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias and not cross:
+        p.update(bq=jnp.zeros((nh * dh,), dtype), bk=jnp.zeros((nk * dh,), dtype),
+                 bv=jnp.zeros((nk * dh,), dtype))
+        s.update(bq=("heads",), bk=("kv",), bv=("kv",))
+    if cfg.qk_norm and not cross:
+        p.update(q_norm=jnp.ones((dh,), dtype), k_norm=jnp.ones((dh,), dtype))
+        s.update(q_norm=("none",), k_norm=("none",))
+    return p, s
+
+
+def _qkv(p, cfg, xq, xkv, positions_q, positions_kv, *, rope: bool = True):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    nh, nk, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, sq, nh, dh)
+    k = k.reshape(b, skv, nk, dh)
+    v = v.reshape(b, skv, nk, dh)
+    if "q_norm" in p:
+        q = rms_norm_vec(q, p["q_norm"])
+        k = rms_norm_vec(k, p["k_norm"])
+    if rope:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        k = apply_rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdp_chunk(qc, kc, vc, mask, scale):
+    """One (q-chunk, kv-chunk) online-softmax step.
+
+    qc (B, Cq, nk, g, dh), kc (B, Ck, nk, dh), vc (B, Ck, nk, dh),
+    mask (Cq, Ck) bool (True = attend). Returns (scores_max, exp_sum,
+    weighted_v) contributions.
+    """
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                                   # (B,k,g,Cq)
+    e = jnp.exp(logits - m[..., None])
+    e = jnp.where(mask[None, None, None], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    wv = jnp.einsum("bkgqs,bskd->bkgqd", e, vc.astype(jnp.float32))
+    return m, l, wv
+
+
+def _merge(carry, new):
+    m0, l0, a0 = carry
+    m1, l1, a1 = new
+    m = jnp.maximum(m0, m1)
+    c0 = jnp.exp(m0 - m)
+    c1 = jnp.exp(m1 - m)
+    return m, l0 * c0 + l1 * c1, a0 * c0[..., None] + a1 * c1[..., None]
+
+
+def attention_train(p, cfg, x, positions, *, xkv=None, causal=True,
+                    return_kv: bool = False):
+    """Full training/prefill attention. x (B, S, d) -> (B, S, d).
+    With ``return_kv``, also returns the post-RoPE (k, v) for cache prefill.
+    """
+    b, s, d = x.shape
+    nh, nk, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    g = nh // nk
+    cq = min(cfg.attn_chunk, s)
+    assert s % cq == 0, (s, cq)
+    nq = s // cq
+    cross = xkv is not None
+    kv_src = xkv if cross else x
+    skv = kv_src.shape[1]
+    pos_kv = positions if not cross else jnp.zeros(kv_src.shape[:2], jnp.int32)
+    q, k, v = _qkv(p, cfg, x, kv_src, positions, pos_kv, rope=not cross)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q.reshape(b, nq, cq, nk, g, dh)
+
+    window = cfg.sliding_window if (causal and not cross) else None
+    if window is not None and s > window:
+        # --- sub-quadratic sliding-window path: O(S · W) ---
+        w = window
+        cw = w + cq                                    # static KV slice size
+
+        def q_chunk(qi, qc):
+            start = jnp.maximum(qi * cq - w, 0)
+            start = jnp.minimum(start, skv - cw) if skv >= cw else 0
+            kc = jax.lax.dynamic_slice_in_dim(k, start, min(cw, skv), axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, min(cw, skv), axis=1)
+            qpos = qi * cq + jnp.arange(cq)
+            kpos = start + jnp.arange(min(cw, skv))
+            mask = (kpos[None, :] <= qpos[:, None]) & \
+                   (kpos[None, :] > qpos[:, None] - w)
+            m, l, wv = _sdp_chunk(qc, kc, vc, mask, scale)
+            return l, wv
+
+        l, wv = jax.vmap(q_chunk, in_axes=(0, 1), out_axes=(0, 0))(
+            jnp.arange(nq), q)
+        # vmap puts nq first: (nq, B, k, g, Cq[, dh])
+        out = wv / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.moveaxis(out, 0, 1)                  # (B, nq, k, g, Cq, dh)
+        out = out.transpose(0, 1, 4, 2, 3, 5)          # (B, nq, Cq, k, g, dh)
+    else:
+        # --- chunked full/causal attention (online softmax over KV) ---
+        ck = cq if not cross else min(cfg.attn_chunk, skv)
+        nkc = skv // ck
+        ks = k.reshape(b, nkc, ck, nk, dh)
+        vs = v.reshape(b, nkc, ck, nk, dh)
+
+        def q_chunk(qi, qc):
+            def kv_step(carry, inp):
+                kj, kc, vc = inp
+                if causal and not cross:
+                    qpos = qi * cq + jnp.arange(cq)
+                    kpos = kj * ck + jnp.arange(ck)
+                    mask = kpos[None, :] <= qpos[:, None]
+                else:
+                    mask = jnp.ones((cq, ck), bool)
+                new = _sdp_chunk(qc, kc, vc, mask, scale)
+                return _merge(carry, new), None
+
+            init = (jnp.full((b, nk, g, cq), NEG_INF, jnp.float32),
+                    jnp.zeros((b, nk, g, cq), jnp.float32),
+                    jnp.zeros((b, nk, g, cq, dh), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, init,
+                (jnp.arange(nkc), jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)))
+            return acc / jnp.maximum(l[..., None], 1e-30)
+
+        out = jax.vmap(q_chunk, in_axes=(0, 1), out_axes=0)(jnp.arange(nq), q)
+        out = jnp.moveaxis(out, 0, 1)                  # (B, nq, k, g, Cq, dh)
+        out = out.transpose(0, 1, 4, 2, 3, 5)
+    out = out.reshape(b, s, nh * dh).astype(x.dtype)
+    if return_kv:
+        return out @ p["wo"], (k, v)
+    return out @ p["wo"]
+
+
+def attention_decode(p, cfg, x, cache, *, xkv_cache_only: bool = False):
+    """One-token decode. x (B, 1, d); cache dict with k/v (B, Sc, nk, dh),
+    ``len`` scalar int32 (tokens already in cache), ``offset`` (absolute
+    position of slot 0 — ring buffers advance it). Returns (out, new_cache).
+    """
+    b, _, d = x.shape
+    nh, nk, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    g = nh // nk
+    sc = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    pos = cache["offset"] + cache["len"]                # absolute position
+    pos_b = pos * jnp.ones((b, 1), jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, x, pos_b, pos_b, rope=not xkv_cache_only)
+    kscale = vscale = None
+    if xkv_cache_only:                                  # cross-attn: static memory
+        k, v, valid_len = cache["k"], cache["v"], cache["len"]
+    else:
+        if cfg.sliding_window is not None:
+            slot = cache["len"] % sc                   # ring buffer
+        else:
+            slot = cache["len"]
+
+        def dus(buf, upd):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, upd.astype(buf.dtype), slot, axis=1)
+
+        if quant:
+            qk, sk = quantize_kv(k_new)                # (b,1,nk,dh)/(b,1,nk)
+            qv, sv = quantize_kv(v_new)
+            k, v = dus(cache["k"], qk), dus(cache["v"], qv)
+            kscale, vscale = dus(cache["k_scale"], sk), dus(cache["v_scale"], sv)
+        else:
+            k, v = dus(cache["k"], k_new), dus(cache["v"], v_new)
+        valid_len = jnp.minimum(cache["len"] + 1, sc)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q1 = q.reshape(b, 1, nk, g, dh)                    # Cq = 1
+    # big caches: single pass, so a sequence-sharded cache reduces via SPMD
+    # (flash-decoding: per-shard partial max/sum + all-reduce combine)
+    ck = sc if sc >= 16384 else min(4096, sc)
+    nck = sc // ck
+
+    def chunks(a):
+        return jnp.moveaxis(a.reshape((b, nck, ck) + a.shape[2:]), 1, 0)
+
+    def kv_step(carry, inp):
+        if quant:
+            kj, kc_q, vc_q, ksc, vsc = inp
+            kc = dequantize_kv(kc_q, ksc)
+            vc = dequantize_kv(vc_q, vsc)
+        else:
+            kj, kc, vc = inp
+        idx = kj * ck + jnp.arange(ck)
+        mask = (idx < valid_len)[None, :]
+        m, l, wv = _sdp_chunk(q1, kc, vc, mask, scale)
+        return _merge(carry, (m, l, wv)), None
+
+    init = (jnp.full((b, nk, g, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, nk, g, 1), jnp.float32),
+            jnp.zeros((b, nk, g, 1, dh), jnp.float32))
+    if quant:
+        xs = (jnp.arange(nck), chunks(k), chunks(v), chunks(kscale),
+              chunks(vscale))
+    else:
+        xs = (jnp.arange(nck), chunks(k), chunks(v))
+    if nck == 1:
+        (m, l, acc), _ = kv_step(init, jax.tree.map(lambda a: a[0], xs))
+    else:
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, xs)
+    out = (acc / jnp.maximum(l[..., None], 1e-30))     # (B, nk, g, 1, dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, nh * dh).astype(x.dtype)
+    new_cache = dict(cache)
+    if not xkv_cache_only:
+        # ``len`` counts all tokens ever seen (ring slots wrap via len % sc);
+        # ``offset`` stays 0 — absolute positions are offset + len.
+        new_cache.update(k=k, v=v, len=cache["len"] + 1)
+        if quant:
+            new_cache.update(k_scale=kscale, v_scale=vscale)
+    return out @ p["wo"], new_cache
+
+
+def init_kv_cache(cfg, batch: int, seq: int, dtype):
+    """Cache sized ``seq`` (sliding-window archs: min(seq, W) ring).
+
+    With ``cfg.kv_quant`` the K/V payload is int8 with per-(token, head)
+    absmax scales (KIVI-style, per-token post-RoPE) — halves decode HBM
+    traffic and cache residency vs bf16.
+    """
+    size = seq if cfg.sliding_window is None else min(seq, cfg.sliding_window)
+    shape = (batch, size, cfg.n_kv, cfg.d_head)
+    cache = {"len": jnp.zeros((), jnp.int32), "offset": jnp.zeros((), jnp.int32)}
+    if cfg.kv_quant:
+        cache.update(k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+                     k_scale=jnp.zeros(shape[:3], jnp.bfloat16),
+                     v_scale=jnp.zeros(shape[:3], jnp.bfloat16))
+    else:
+        cache.update(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+    return cache
+
+
+def quantize_kv(x):
+    """(… , dh) -> int8 payload + per-(…) absmax scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]

@@ -1,0 +1,153 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, ``[audio]`` entries specify the transformer backbone
+only: ``input_specs()`` supplies precomputed frame embeddings (B, S_enc,
+d_model) in place of the mel-spectrogram conv stem. Encoder: bidirectional
+attention (sinusoidal positions folded into the stub embeddings). Decoder:
+causal self-attention + cross-attention to encoder memory, LayerNorm + GELU
+as in Whisper.
+
+Serve path: ``encode`` runs once; per-layer cross K/V are precomputed;
+``decode_step`` scans decoder layers with a self-attention KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, dtype_of, embed_tokens,
+                                 init_embed, init_mlp, init_norm, lm_logits,
+                                 stack_layers)
+
+
+def _init_enc_block(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    pa, sa = attn.init_attention(cfg, k1, dtype)
+    pm, sm = init_mlp(cfg, k2, dtype)
+    pn1, sn1 = init_norm(cfg, dtype)
+    pn2, sn2 = init_norm(cfg, dtype)
+    return ({"attn": pa, "mlp": pm, "ln1": pn1, "ln2": pn2},
+            {"attn": sa, "mlp": sm, "ln1": sn1, "ln2": sn2})
+
+
+def _init_dec_block(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = _init_enc_block(cfg, k1, dtype)
+    pc, sc = attn.init_attention(cfg, k2, dtype, cross=True)
+    pn, sn = init_norm(cfg, dtype)
+    p.update(cross=pc, ln_cross=pn)
+    s.update(cross=sc, ln_cross=sn)
+    return p, s
+
+
+def init_encdec(cfg, key):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, k1, k2 = jax.random.split(key, 3)
+    pe, se = init_embed(cfg, ke, dtype)
+    pn_e, sn_e = init_norm(cfg, dtype)
+    pn_d, sn_d = init_norm(cfg, dtype)
+    enc = [_init_enc_block(cfg, k, dtype) for k in jax.random.split(k1, cfg.enc_layers)]
+    dec = [_init_dec_block(cfg, k, dtype) for k in jax.random.split(k2, cfg.dec_layers)]
+    wrap = lambda s0: jax.tree.map(lambda a: ("layers",) + a, s0,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    params = {"embed": pe, "enc_norm": pn_e, "final_norm": pn_d,
+              "enc_blocks": stack_layers([p for p, _ in enc]),
+              "dec_blocks": stack_layers([p for p, _ in dec])}
+    specs = {"embed": se, "enc_norm": sn_e, "final_norm": sn_d,
+             "enc_blocks": wrap(enc[0][1]), "dec_blocks": wrap(dec[0][1])}
+    return params, specs
+
+
+def encode(params, cfg, frames):
+    """frames (B, S_enc, d_model) stub embeddings -> encoder memory."""
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, pl):
+        h = apply_norm(pl["ln1"], xc, cfg.norm)
+        h = attn.attention_train(pl["attn"], cfg, h, positions, causal=False)
+        xc = xc + h
+        h = apply_norm(pl["ln2"], xc, cfg.norm)
+        return xc + apply_mlp(pl["mlp"], h, cfg.act), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def forward(params, cfg, tokens, frames, *, mesh=None):
+    """Teacher-forced training forward -> logits (B, S_dec, V)."""
+    memory = encode(params, cfg, frames)
+    x = embed_tokens(params["embed"], tokens, dtype_of(cfg.compute_dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, pl):
+        h = apply_norm(pl["ln1"], xc, cfg.norm)
+        h = attn.attention_train(pl["attn"], cfg, h, positions)
+        xc = xc + h
+        h = apply_norm(pl["ln_cross"], xc, cfg.norm)
+        h = attn.attention_train(pl["cross"], cfg, h, positions, xkv=memory,
+                                 causal=False)
+        xc = xc + h
+        h = apply_norm(pl["ln2"], xc, cfg.norm)
+        return xc + apply_mlp(pl["mlp"], h, cfg.act), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return lm_logits(params["embed"], x)
+
+
+def init_decode_caches(cfg, batch: int, seq: int, enc_len: int):
+    cdt = dtype_of(cfg.compute_dtype)
+    l = cfg.dec_layers
+    kv = {"k": jnp.zeros((l, batch, seq, cfg.n_kv, cfg.d_head), cdt),
+          "v": jnp.zeros((l, batch, seq, cfg.n_kv, cfg.d_head), cdt)}
+    cross = {"k": jnp.zeros((l, batch, enc_len, cfg.n_kv, cfg.d_head), cdt),
+             "v": jnp.zeros((l, batch, enc_len, cfg.n_kv, cfg.d_head), cdt)}
+    return {"kv": kv, "cross": cross, "len": jnp.zeros((), jnp.int32),
+            "offset": jnp.zeros((), jnp.int32),
+            "enc_len": jnp.asarray(enc_len, jnp.int32)}
+
+
+def precompute_cross_kv(params, cfg, memory):
+    """Per-decoder-layer K/V of the encoder memory (computed once)."""
+    def one(pl):
+        b, s, _ = memory.shape
+        k = (memory @ pl["cross"]["wk"]).reshape(b, s, cfg.n_kv, cfg.d_head)
+        v = (memory @ pl["cross"]["wv"]).reshape(b, s, cfg.n_kv, cfg.d_head)
+        return {"k": k, "v": v}
+    return jax.vmap(one)(params["dec_blocks"])
+
+
+def decode_step(params, cfg, tokens, caches, *, mesh=None):
+    """One decoder token against self KV cache + precomputed cross K/V."""
+    x = embed_tokens(params["embed"], tokens, dtype_of(cfg.compute_dtype))
+
+    def body(xc, inp):
+        pl, kv, cross = inp
+        cache = {"k": kv["k"], "v": kv["v"], "len": caches["len"],
+                 "offset": caches["offset"]}
+        h = apply_norm(pl["ln1"], xc, cfg.norm)
+        h, nc = attn.attention_decode(pl["attn"], cfg, h, cache)
+        xc = xc + h
+        ccache = {"k": cross["k"], "v": cross["v"], "len": caches["enc_len"],
+                  "offset": jnp.zeros((), jnp.int32)}
+        h = apply_norm(pl["ln_cross"], xc, cfg.norm)
+        h, _ = attn.attention_decode(pl["cross"], cfg, h, ccache,
+                                     xkv_cache_only=True)
+        xc = xc + h
+        h = apply_norm(pl["ln2"], xc, cfg.norm)
+        return xc + apply_mlp(pl["mlp"], h, cfg.act), {"k": nc["k"], "v": nc["v"]}
+
+    x, new_kv = jax.lax.scan(body, x, (params["dec_blocks"], caches["kv"],
+                                       caches["cross"]))
+    new = dict(caches)
+    new.update(kv=new_kv, len=caches["len"] + 1)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return lm_logits(params["embed"], x), new

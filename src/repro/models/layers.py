@@ -1,0 +1,140 @@
+"""Shared model primitives: norms, MLPs, embeddings, RoPE, init helpers.
+
+Parameters are plain dict pytrees; every init function returns
+``(params, specs)`` where ``specs`` is a matching pytree of logical-axis
+tuples consumed by ``dist/sharding.py`` (MaxText-style logical sharding).
+Logical axes used: ``embed`` (d_model), ``heads`` (fused head*dh), ``kv``,
+``mlp`` (d_ff), ``vocab``, ``expert``, ``layers`` (scan axis), ``none``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None, axes=None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    w = jax.random.normal(key, shape, jnp.float32) * scale
+    return w.astype(dtype)
+
+
+def stack_layers(inits: list):
+    """Stack per-layer param pytrees along a leading ``layers`` axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    s = {"scale": ("embed",)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+        s["bias"] = ("embed",)
+    return p, s
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf * inv * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rms_norm_vec(x, scale, eps: float = 1e-6):
+    """RMS-norm over the last axis with a learned scale (qk-norm etc.)."""
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":  # gated
+        p = {"w_gate": dense_init(k1, (d, f), dtype),
+             "w_up": dense_init(k2, (d, f), dtype),
+             "w_down": dense_init(k3, (f, d), dtype)}
+        s = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+             "w_down": ("mlp", "embed")}
+    else:
+        p = {"w_up": dense_init(k1, (d, f), dtype),
+             "w_down": dense_init(k2, (f, d), dtype)}
+        s = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    return p, s
+
+
+def apply_mlp(p, x, act: str):
+    if "w_gate" in p:
+        g = jax.nn.silu(x @ p["w_gate"])
+        h = g * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": dense_init(k1, (cfg.vocab, cfg.d_model), dtype, scale=0.02)}
+    s = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab), dtype)
+        s["lm_head"] = ("embed", "vocab")
+    return p, s
+
+
+def embed_tokens(p, tokens, compute_dtype):
+    return jnp.take(p["embedding"], tokens, axis=0).astype(compute_dtype)
+
+
+def lm_logits(p, x):
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embedding"].T
+    return (x @ w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, Dh), positions (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                               # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Two sharding modes (cfg.moe_sharding):
+
+* ``tp`` — every expert's d_ff is sharded over the ``model`` axis (Mixtral's
+  8 experts don't divide a 16-wide model axis). Dispatch is *local* to each
+  data shard: tokens are sorted by expert id, gathered into (E, C, d) blocks
+  with capacity C = ceil(T·k/E · capacity_factor) and dropped beyond C
+  (GShard-style token dropping), run through an E-batched gated FFN, and
+  combined with router weights. The down-projection produces partial sums
+  over the f-shards → one psum over ``model`` per layer (same collective
+  pattern as dense TP).
+
+* ``ep`` — experts are fully sharded over ``model`` (phi3.5-moe: 16 experts
+  / 16-way axis = 1 expert per rank). Tokens travel to their expert's rank
+  via ``all_to_all`` over ``model`` and return the same way: two A2As per
+  layer instead of a psum; collective bytes per token drop from O(d) (ring
+  all-reduce) to O(d · k / mp) sent point-to-point — the classic EP trade.
+  EP assumes n_experts % model_axis_size == 0 and is most efficient at one
+  expert per rank (the phi3.5 cell); with several local experts the local
+  FFN masks per expert (documented compute overhead).
+
+Both run inside ``shard_map`` (manual collectives), composing with the
+pjit-propagated sharding of the surrounding dense layers, where activations
+are replicated across ``model`` and sharded across the batch axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(cfg, key, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": dense_init(ks[0], (d, e), jnp.float32),
+         "w_gate": dense_init(ks[1], (e, d, f), dtype),
+         "w_up": dense_init(ks[2], (e, d, f), dtype),
+         "w_down": dense_init(ks[3], (e, f, d), dtype)}
+    if cfg.moe_sharding == "ep":
+        s = {"router": ("none", "none"),
+             "w_gate": ("expert", "none", "none"),
+             "w_up": ("expert", "none", "none"),
+             "w_down": ("expert", "none", "none")}
+    else:
+        s = {"router": ("none", "none"),
+             "w_gate": ("none", "none", "mlp"),
+             "w_up": ("none", "none", "mlp"),
+             "w_down": ("none", "mlp", "none")}
+    return p, s
+
+
+def _dispatch(eids, weights, tokens, n_buckets: int, capacity: int):
+    """Sort-based capacity dispatch (static shapes, GShard-style dropping).
+
+    Returns per (bucket, slot): token row (-1 pad), router weight, copy id.
+    """
+    tk = eids.shape[0]
+    order = jnp.argsort(eids)                               # stable
+    es = eids[order]
+    counts = jax.nn.one_hot(es, n_buckets, dtype=jnp.int32).sum(0)
+    start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(tk, dtype=jnp.int32) - start[es]
+    keep = pos < capacity
+    slot = jnp.where(keep, es * capacity + pos, n_buckets * capacity)
+
+    def scatter(vals, fill, dt):
+        out = jnp.full((n_buckets * capacity + 1,), fill, dt)
+        return out.at[slot].set(vals.astype(dt))[:-1]
+
+    return (scatter(tokens[order], -1, jnp.int32),
+            scatter(weights[order], 0.0, jnp.float32),
+            scatter(order, -1, jnp.int32))
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down, act: str):
+    """(E, C, d) × (E, d, f) -> (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, w_up)
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_ffn_local(p, cfg, x, *, model_axis: str | None):
+    """MoE FFN over this shard's local tokens. x (Tl, d) -> (Tl, d)."""
+    tl, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                  # (Tl, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    copies_e = top_e.reshape(-1).astype(jnp.int32)          # (Tl·k,)
+    copies_w = top_w.reshape(-1)
+    copies_t = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
+
+    if cfg.moe_sharding == "ep" and model_axis is not None:
+        mp = jax.lax.axis_size(model_axis)
+        e_local = e // mp
+        send_cf = max(cfg.capacity_factor, 2.0)             # A2A send buffer
+        cap_send = int(max(8, round(tl * k / mp * send_cf)))
+        dest = copies_e // e_local
+        slot_token, slot_weight, slot_copy = _dispatch(
+            dest, copies_w, copies_t, mp, cap_send)
+        local_e = jnp.where(slot_copy >= 0,
+                            copies_e[jnp.maximum(slot_copy, 0)] % e_local, -1)
+        xe = jnp.where(slot_token[:, None] >= 0,
+                       x[jnp.maximum(slot_token, 0)], 0.0).reshape(mp, cap_send, d)
+        meta = local_e.astype(jnp.float32).reshape(mp, cap_send, 1)
+        xr = jax.lax.all_to_all(xe, model_axis, split_axis=0, concat_axis=0,
+                                tiled=True).reshape(mp * cap_send, d)
+        mr = jax.lax.all_to_all(meta, model_axis, split_axis=0, concat_axis=0,
+                                tiled=True).reshape(-1).astype(jnp.int32)
+        yr = jnp.zeros_like(xr)
+        for le_i in range(e_local):
+            h = _expert_ffn(xr[None], p["w_gate"][le_i][None],
+                            p["w_up"][le_i][None], p["w_down"][le_i][None],
+                            cfg.act)[0]
+            yr = yr + h * (mr == le_i)[:, None].astype(xr.dtype)
+        yr = yr.reshape(mp, cap_send, d)
+        yb = jax.lax.all_to_all(yr, model_axis, split_axis=0, concat_axis=0,
+                                tiled=True).reshape(mp * cap_send, d)
+        out = jnp.zeros((tl, d), x.dtype)
+        return out.at[jnp.maximum(slot_token, 0)].add(
+            jnp.where(slot_token[:, None] >= 0,
+                      yb * slot_weight[:, None], 0.0).astype(x.dtype))
+
+    # ---- tp (or single-device) path: local dispatch ----
+    cap = int(max(8, -(-round(tl * k / e * cfg.capacity_factor) // 8) * 8))
+    slot_token, slot_weight, _ = _dispatch(copies_e, copies_w, copies_t, e, cap)
+    xe = jnp.where(slot_token[:, None] >= 0,
+                   x[jnp.maximum(slot_token, 0)], 0.0).reshape(e, cap, d)
+    ye = _expert_ffn(xe, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+    if model_axis is not None and cfg.moe_sharding == "tp":
+        ye = jax.lax.psum(ye, model_axis)                   # combine f-shards
+    ye = ye.reshape(e * cap, d) * slot_weight[:, None].astype(x.dtype)
+    out = jnp.zeros((tl, d), x.dtype)
+    return out.at[jnp.maximum(slot_token, 0)].add(
+        jnp.where(slot_token[:, None] >= 0, ye, 0.0).astype(x.dtype))

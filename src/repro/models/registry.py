@@ -1,0 +1,138 @@
+"""Architecture registry: ``--arch <id>`` -> config + model functions +
+per-shape input specs (ShapeDtypeStruct stand-ins, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, transformer
+from repro.models.config import ArchConfig
+
+ARCHS: dict[str, str] = {
+    "smollm-360m": "smollm_360m",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-4b": "qwen3_4b",
+    "qwen1.5-32b": "qwen15_32b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "zamba2-2.7b": "zamba2_27b",
+    "whisper-base": "whisper_base",
+    "phi-3-vision-4.2b": "phi3_vision",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+SHAPES: dict[str, dict[str, int]] = {
+    "train_4k":    {"seq": 4096,    "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768,   "batch": 32,  "kind": "prefill"},
+    "decode_32k":  {"seq": 32768,   "batch": 128, "kind": "decode"},
+    "long_500k":   {"seq": 524288,  "batch": 1,   "kind": "decode"},
+}
+
+
+def get_config(arch: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def cell_supported(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """Is (arch × shape) a runnable cell? (False, reason) if skipped."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention (full-attn arch)"
+    return True, ""
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.family == "encdec"
+
+
+def init_params(cfg: ArchConfig, key):
+    if is_encdec(cfg):
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, mesh=None):
+    if is_encdec(cfg):
+        return encdec.forward(params, cfg, batch["tokens"], batch["frames"],
+                              mesh=mesh)
+    return transformer.forward(params, cfg, batch["tokens"],
+                               img=batch.get("img"), mesh=mesh)
+
+
+def decode_step(params, cfg: ArchConfig, batch: dict, caches, *, mesh=None):
+    if is_encdec(cfg):
+        return encdec.decode_step(params, cfg, batch["tokens"], caches, mesh=mesh)
+    return transformer.decode_step(params, cfg, batch["tokens"], caches, mesh=mesh)
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq: int):
+    if is_encdec(cfg):
+        return encdec.init_decode_caches(cfg, batch, seq, enc_len=seq)
+    return transformer.init_caches(cfg, batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    b, s, kind = sh["batch"], sh["seq"], sh["kind"]
+    if kind in ("train", "prefill"):
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if kind == "train":
+            specs["labels"] = _sds((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            specs["img"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if is_encdec(cfg):
+            specs["frames"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one token + caches of length s
+    specs = {"tokens": _sds((b, 1), jnp.int32)}
+    caches = jax.eval_shape(lambda: init_caches(cfg, b, s))
+    specs["caches"] = caches
+    return specs
+
+
+def reduced_config(cfg: ArchConfig) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    updates = dict(
+        n_layers=max(2, min(4, cfg.n_layers)),
+        d_model=128, n_heads=4, n_kv=max(1, min(4, cfg.n_kv)),
+        d_head=32, d_ff=256, vocab=512,
+        param_dtype="float32", compute_dtype="float32",
+        attn_chunk=64, ssm_chunk=32, rwkv_chunk=16,
+        sliding_window=None if cfg.sliding_window is None else 64,
+        n_patches=8, ssm_headdim=32, ssm_expand=2, ssm_state=16,
+        rwkv_headdim=32, remat="none",
+    )
+    if cfg.family == "moe":
+        updates["n_experts"] = 4
+        updates["moe_sharding"] = cfg.moe_sharding
+    if cfg.family == "hybrid":
+        updates["n_layers"] = 4
+        updates["attn_every"] = 2
+        updates["n_kv"] = 4
+    if cfg.family == "encdec":
+        updates["enc_layers"] = 2
+        updates["dec_layers"] = 2
+        updates["n_layers"] = 2
+    if cfg.family == "ssm":
+        updates["n_heads"] = 4
+        updates["n_kv"] = 4
+    return dataclasses.replace(cfg, **updates)

@@ -1,0 +1,163 @@
+"""RWKV6 ("Finch") block: data-dependent per-channel decay linear attention.
+
+Time-mix recurrence per head (K = V = rwkv_headdim):
+
+    S_t = diag(w_t) · S_{t-1} + kᵀ_t v_t
+    y_t = r_t · (S_{t-1} + diag(u) kᵀ_t v_t)
+
+with w_t = exp(-exp(w0 + lora(x_t))) ∈ (0,1) per channel — the
+data-dependent decay that distinguishes RWKV6 from RWKV5/RetNet.
+
+Training/prefill runs the recurrence as a **chunk-rematerialized scan**:
+an outer scan over chunks of ``cfg.rwkv_chunk`` steps is wrapped in
+``jax.checkpoint``, so backward memory is O(S/chunk · state) instead of
+O(S · state); each inner step is a batched rank-1 state update (VPU/MXU
+einsums). A fully chunk-parallel GLA-style formulation is the obvious next
+kernel (see EXPERIMENTS.md §Perf notes) but is numerically delicate for
+per-channel decay; correctness wins here.
+
+Channel-mix is the standard RWKV squared-ReLU FFN with token shift.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def n_heads_of(cfg) -> int:
+    return cfg.d_model // cfg.rwkv_headdim
+
+
+def init_rwkv_block(cfg, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 10)
+    p = {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), dtype),               # r,k,v,w,g shift mix
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "wo": dense_init(ks[4], (d, d), dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),           # decay bias
+        "w_lora_a": dense_init(ks[5], (d, lora), dtype),
+        "w_lora_b": dense_init(ks[6], (lora, d), dtype, scale=0.01),
+        "u": jnp.zeros((d,), jnp.float32),                 # bonus
+        "ln_scale": jnp.ones((d,), dtype),                 # per-head groupnorm
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, d), dtype),
+        "ck": dense_init(ks[7], (d, f), dtype),
+        "cv": dense_init(ks[8], (f, d), dtype),
+        "cr": dense_init(ks[9], (d, d), dtype),
+    }
+    s = {"mu": ("none", "embed"), "wr": ("embed", "heads"), "wk": ("embed", "heads"),
+         "wv": ("embed", "heads"), "wg": ("embed", "heads"), "wo": ("heads", "embed"),
+         "w0": ("embed",), "w_lora_a": ("embed", "none"), "w_lora_b": ("none", "embed"),
+         "u": ("embed",), "ln_scale": ("embed",),
+         "mu_c": ("none", "embed"), "ck": ("embed", "mlp"), "cv": ("mlp", "embed"),
+         "cr": ("embed", "heads")}
+    return p, s
+
+
+def _token_shift(x, prev):
+    """prev: (B, 1, d) last token of previous segment (zeros at start)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _head_groupnorm(y, scale, n_heads, eps=1e-5):
+    b, s, d = y.shape
+    yh = y.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = ((yh - mu) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(b, s, d) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, state, chunk: int):
+    """Chunk-rematerialized WKV recurrence.
+
+    r,k,v,w: (B, S, H, K) f32 (w = decay in (0,1)); u (H, K);
+    state (B, H, K, K). Returns (y (B,S,H,K), final state).
+    """
+    b, s, h, kd = r.shape
+    cs = min(chunk, s)
+    q = s // cs
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp                              # (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, st + u[None, :, :, None] * kv)
+        st = wt[..., None] * st + kv
+        return st, y
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_fn(st, xs):
+        return jax.lax.scan(step, st, xs)
+
+    def to_chunks(x):                                      # (B,S,H,K)->(Q,Cs,B,H,K)
+        return jnp.moveaxis(x, 1, 0).reshape(q, cs, b, h, kd)
+
+    xs = tuple(map(to_chunks, (r, k, v, w)))
+
+    def outer(st, xc):
+        st, y = chunk_fn(st, xc)
+        return st, y
+
+    state, ys = jax.lax.scan(outer, state, xs)             # ys (Q,Cs,B,H,K)
+    y = jnp.moveaxis(ys.reshape(s, b, h, kd), 0, 1)
+    return y, state
+
+
+def rwkv_block_forward(p, cfg, x, state=None):
+    """x (B, S, d) -> (B, S, d). ``state`` carries (shift_t, shift_c, wkv)
+    across segments; None for training from scratch."""
+    b, s, d = x.shape
+    h = n_heads_of(cfg)
+    kd = cfg.rwkv_headdim
+    if state is None:
+        state = init_rwkv_state(cfg, b, x.dtype)
+
+    # ---- time mix ----
+    x_in = x
+    prev = state["shift_t"]
+    xs_ = _token_shift(x, prev)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i][None, None] * (xs_ - x) for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, s, h, kd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, s, h, kd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, s, h, kd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    wlog = p["w0"][None, None] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(wlog, -8.0, 1.0))).reshape(b, s, h, kd)
+    u = p["u"].astype(jnp.float32).reshape(h, kd)
+    y, wkv = _wkv_scan(r, k, v, w, u, state["wkv"], cfg.rwkv_chunk)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = _head_groupnorm(y, p["ln_scale"], h) * g
+    out_t = y @ p["wo"]
+    x = x + out_t
+
+    # ---- channel mix ----
+    prev_c = state["shift_c"]
+    xsc = _token_shift(x, prev_c)
+    mu_c = p["mu_c"].astype(x.dtype)
+    xk_c = x + mu_c[0][None, None] * (xsc - x)
+    xr_c = x + mu_c[1][None, None] * (xsc - x)
+    kc = jnp.square(jax.nn.relu(xk_c @ p["ck"]))
+    out_c = jax.nn.sigmoid(xr_c @ p["cr"]) * (kc @ p["cv"])
+    new_state = {"shift_t": x_in[:, -1:],   # last token of time-mix input
+                 "shift_c": x[:, -1:],      # last token of channel-mix input
+                 "wkv": wkv}
+    return x + out_c, new_state
+
+
+def init_rwkv_state(cfg, batch: int, dtype):
+    h = n_heads_of(cfg)
+    kd = cfg.rwkv_headdim
+    return {"shift_t": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "shift_c": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, h, kd, kd), jnp.float32)}

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) block — chunked, matmul-dominant formulation for the MXU.
+
+The SSD algorithm (Dao & Gu, 2024) splits the sequence into chunks of
+``cfg.ssm_chunk``: within a chunk the recurrence is computed as a masked
+(decay-weighted) attention-like matmul; across chunks a short scan carries
+the (H, N, P) state. All heavy ops are einsums over (chunk × chunk) or
+(state × headdim) — MXU-shaped, no per-token scan in training/prefill.
+
+Decode is the O(1) recurrent step on the (B, H, N, P) state.
+Simplifications vs. the reference CUDA implementation (documented in
+DESIGN.md): single B/C group (G=1), no conv state left-pad subtleties beyond
+a causal depthwise conv of width ``ssm_conv``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def d_inner_of(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads_of(cfg) -> int:
+    return d_inner_of(cfg) // cfg.ssm_headdim
+
+
+def init_mamba2(cfg, key, dtype):
+    d = cfg.d_model
+    din = d_inner_of(cfg)
+    h = n_heads_of(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    # in_proj packs [z, x, B, C, dt]
+    proj_out = 2 * din + 2 * n + h
+    p = {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, din + 2 * n), dtype, scale=0.5),
+        "A_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[2], (din, d), dtype),
+    }
+    s = {"in_proj": ("embed", "inner"), "conv_w": ("none", "inner"),
+         "A_log": ("none",), "D": ("none",), "dt_bias": ("none",),
+         "norm_scale": ("inner",), "out_proj": ("inner", "embed")}
+    return p, s
+
+
+def _split_proj(cfg, zxbcdt):
+    din = d_inner_of(cfg)
+    n = cfg.ssm_state
+    h = n_heads_of(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:2 * din + 2 * n + h]
+    return z, xbc, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _gated_rmsnorm(x, z, scale, eps=1e-5):
+    x = x * jax.nn.silu(z)
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _segsum(dA):
+    """Stable 'segment sum' matrix: out[..., i, j] = Σ_{j<t<=i} dA[..., t],
+    -inf above the diagonal. dA (..., Cs)."""
+    cs = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]           # (..., i, j)
+    i = jnp.arange(cs)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(p, cfg, x, *, return_state: bool = False):
+    """Training/prefill. x (B, S, d) -> (B, S, d) (+ final decode state)."""
+    b, s, d = x.shape
+    din = d_inner_of(cfg)
+    h = n_heads_of(cfg)
+    n = cfg.ssm_state
+    ph = cfg.ssm_headdim
+    cs = min(cfg.ssm_chunk, s)
+    assert s % cs == 0
+    q = s // cs
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, p["conv_w"])
+    xs = xbc[..., :din]
+    bmat = xbc[..., din:din + n]                           # (B, S, N)
+    cmat = xbc[..., din + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])                               # (H,)
+    da = dt * a[None, None, :]                             # (B,S,H) ≤ 0
+
+    xh = xs.reshape(b, q, cs, h, ph).astype(jnp.float32)
+    dtc = dt.reshape(b, q, cs, h)
+    dac = da.reshape(b, q, cs, h)
+    bc = bmat.reshape(b, q, cs, n).astype(jnp.float32)
+    cc = cmat.reshape(b, q, cs, n).astype(jnp.float32)
+    xdt = xh * dtc[..., None]                              # input × Δt
+
+    # intra-chunk: y[i] += C_i · ( Σ_{j<=i} exp(Σ_{j<t<=i} dA) B_j x_j dt_j )
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))     # (B,Q,H,Cs,Cs)
+    scores = jnp.einsum("bqin,bqjn->bqij", cc, bc)         # (B,Q,Cs,Cs)
+    y_intra = jnp.einsum("bqhij,bqij,bqjhp->bqihp",
+                         lmat, scores, xdt)
+
+    # chunk summary states: S_q = Σ_j exp(Σ_{j<t<=end} dA) B_j ⊗ (x_j dt_j)
+    cum = jnp.cumsum(dac, axis=2)                          # (B,Q,Cs,H)
+    total = cum[:, :, -1:, :]                              # (B,Q,1,H)
+    decay_to_end = jnp.exp(total - cum)                    # (B,Q,Cs,H)
+    s_chunk = jnp.einsum("bqjh,bqjn,bqjhp->bqhnp", decay_to_end, bc, xdt)
+
+    # inter-chunk recurrence over Q chunks
+    chunk_decay = jnp.exp(total[:, :, 0, :])               # (B,Q,H)
+
+    def step(state, inp):
+        dec, s_q = inp                                     # (B,H), (B,H,N,P)
+        out_state = state                                  # state BEFORE chunk
+        new = state * dec[..., None, None] + s_q
+        return new, out_state
+
+    init = jnp.zeros((b, h, n, ph), jnp.float32)
+    final_state, states_before = jax.lax.scan(
+        step, init, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    states_before = jnp.moveaxis(states_before, 0, 1)      # (B,Q,H,N,P)
+
+    # inter-chunk contribution: y[i] += C_i · state_before · exp(cum_i)
+    y_inter = jnp.einsum("bqin,bqih,bqhnp->bqihp", cc, jnp.exp(cum), states_before)
+
+    y = (y_intra + y_inter).reshape(b, s, h, ph)
+    y = y + xh.reshape(b, s, h, ph) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_state:
+        state = {"ssm": final_state,
+                 "conv": xbc_raw[:, s - (cfg.ssm_conv - 1):, :]}
+        return out, state
+    return out
+
+
+def mamba2_decode(p, cfg, x, state):
+    """Single-token step. x (B, 1, d); state dict {ssm (B,H,N,P), conv
+    (B, K-1, din+2N)} -> (out (B,1,d), new_state)."""
+    b = x.shape[0]
+    din = d_inner_of(cfg)
+    h = n_heads_of(cfg)
+    n = cfg.ssm_state
+    ph = cfg.ssm_headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)   # (B, K, C)
+    xbc_t = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]))[:, None]
+    new_conv = conv_in[:, 1:]
+    xs = xbc_t[..., :din]
+    bmat = xbc_t[..., din:din + n].astype(jnp.float32)     # (B,1,N)
+    cmat = xbc_t[..., din + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * a[None])                            # (B,H)
+    xh = xs.reshape(b, h, ph).astype(jnp.float32)
+    upd = jnp.einsum("bn,bhp->bhnp", bmat[:, 0], xh * dt[..., None])
+    new_ssm = state["ssm"] * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], new_ssm)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return y @ p["out_proj"], {"ssm": new_ssm, "conv": new_conv}
+
+
+def init_mamba2_state(cfg, batch: int, dtype):
+    return {"ssm": jnp.zeros((batch, n_heads_of(cfg), cfg.ssm_state,
+                              cfg.ssm_headdim), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                               d_inner_of(cfg) + 2 * cfg.ssm_state), dtype)}

@@ -1,0 +1,52 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+``generate`` — python-loop driver (tests/examples, small models).
+``build_serve_step`` — the jitted one-token step used by launch/serve.py and
+the decode-shape dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.transformer import forward_with_caches
+
+
+def build_serve_step(cfg, *, mesh=None):
+    def serve_step(params, tokens, caches):
+        logits, caches = registry.decode_step(params, cfg, {"tokens": tokens},
+                                              caches, mesh=mesh)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+    return serve_step
+
+
+def generate(params, cfg, prompt_tokens, *, max_new: int = 32,
+             cache_size: int | None = None, img=None, temperature: float = 0.0,
+             key=None, mesh=None):
+    """prompt_tokens (B, S) -> generated (B, max_new) int32 (greedy by
+    default). Uses prefill-with-caches, then the jitted decode step."""
+    b, s = prompt_tokens.shape
+    cache_size = cache_size or (s + max_new)
+    if registry.is_encdec(cfg):
+        raise NotImplementedError("use whisper example for enc-dec serving")
+    logits, caches = forward_with_caches(params, cfg, prompt_tokens, cache_size,
+                                         img=img, mesh=mesh)
+    step = jax.jit(build_serve_step(cfg, mesh=mesh))
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [np.asarray(tok)]
+    for i in range(max_new - 1):
+        if temperature > 0.0 and key is not None:
+            logits2, caches = registry.decode_step(params, cfg, {"tokens": tok},
+                                                   caches, mesh=mesh)
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits2[:, -1] / temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok, caches = step(params, tok, caches)
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)

@@ -1,0 +1,75 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler monitor.
+
+The loop is deliberately boring: deterministic data (batch = f(seed, step)),
+checkpoint every N steps via the atomic CheckpointManager, resume from the
+latest checkpoint on (re)start, and re-raise only after writing an emergency
+checkpoint — a preempted/crashed worker restarts byte-identically.
+
+``StragglerMonitor`` keeps an EMA of step wall-time and flags steps slower
+than ``threshold ×`` the EMA; on a real fleet this signal feeds the
+controller that re-shards around slow hosts (here it logs — single host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    threshold: float = 2.0
+    ema: float | None = None
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.threshold * self.ema
+        self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
+        self.flagged += int(slow)
+        return slow
+
+
+def train_loop(train_step, params, opt_state, pipeline, *, steps: int,
+               ckpt_dir: str, ckpt_every: int = 50, log_every: int = 10,
+               to_device=None, log=print):
+    """Runs ``steps`` optimizer steps with checkpoint/resume. Returns
+    (params, opt_state, history)."""
+    mgr = CheckpointManager(ckpt_dir)
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        (params, opt_state), _ = mgr.restore(latest, (params, opt_state))
+        start = latest
+        log(f"[resume] restored checkpoint @ step {latest}")
+
+    monitor = StragglerMonitor()
+    history = []
+    step = start
+    try:
+        for step in range(start, steps):
+            batch = pipeline.batch(step)
+            if to_device is not None:
+                batch = to_device(batch)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            slow = monitor.observe(dt)
+            if step % log_every == 0 or slow:
+                loss = float(metrics["loss"])
+                history.append((step, loss, dt))
+                log(f"step {step:5d} loss {loss:.4f} {dt*1e3:7.1f} ms"
+                    + (" [straggler]" if slow else ""))
+            if (step + 1) % ckpt_every == 0:
+                mgr.save(step + 1, (params, opt_state))
+    except KeyboardInterrupt:
+        mgr.save(step, (params, opt_state))
+        log(f"[interrupt] emergency checkpoint @ step {step}")
+        raise
+    mgr.save(steps, (params, opt_state))
+    return params, opt_state, history

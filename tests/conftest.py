@@ -1,0 +1,28 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core import LakeSpec, generate_lake, profile_lake
+
+
+@pytest.fixture(scope="session")
+def small_lake():
+    # row budget large enough that observed cardinalities track vocabulary
+    # sizes (K needs discriminative cardinalities — see DESIGN.md §5.4)
+    return generate_lake(LakeSpec(n_domains=10, n_tables=24, row_budget=2048,
+                                  rows_log_mean=6.8, coverage_range=(0.5, 1.0),
+                                  gran_ratio=(4, 8), seed=7))
+
+
+@pytest.fixture(scope="session")
+def small_profiles(small_lake):
+    return profile_lake(small_lake.batch)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,126 @@
+"""Distributed paths on a small host-device mesh (subprocess: jax device
+count must be set before first init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_rank_sharded_matches_local():
+    out = _run("""
+        import numpy as np, jax
+        from repro.core import (DiscoveryIndex, GBDTConfig, LakeSpec,
+                                generate_lake, profile_lake, rank,
+                                rank_sharded, train_quality_model,
+                                select_queries)
+        lake = generate_lake(LakeSpec(n_domains=8, n_tables=16,
+                                      row_budget=256, rows_log_mean=5.0,
+                                      seed=11))
+        prof = profile_lake(lake.batch)
+        model = train_quality_model([lake], GBDTConfig(n_trees=10, depth=3),
+                                    n_query=32)
+        idx = DiscoveryIndex(profiles=prof, model=model, table_ids=lake.table)
+        qids = select_queries(lake, 6)
+        s1, i1 = rank(idx, qids, k=5, exclude_same_table=False)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        s2, i2 = rank_sharded(idx, qids, mesh, k=5, shard_axes=("data",))
+        # same top-k scores (ids can permute on ties)
+        np.testing.assert_allclose(np.sort(s1, 1), np.sort(s2, 1),
+                                   rtol=1e-4, atol=1e-5)
+        overlap = np.mean([len(set(a) & set(b)) / 5.0
+                           for a, b in zip(i1, i2)])
+        assert overlap > 0.9, (overlap, i1[:2], i2[:2])
+        print("OK rank_sharded")
+    """)
+    assert "OK rank_sharded" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.models import registry
+        from repro.dist import sharding as shd
+        from repro.train.optimizer import AdamWConfig, init_opt_state
+        from repro.train.trainer import build_train_step
+        from repro.data.pipeline import TokenPipeline
+
+        cfg = registry.reduced_config(registry.get_config("smollm-360m"))
+        params, specs = registry.init_params(cfg, jax.random.PRNGKey(0))
+        pipe = TokenPipeline(vocab=cfg.vocab, seq=64, global_batch=8)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+
+        s0 = jax.jit(build_train_step(cfg, AdamWConfig(lr=1e-3)))
+        p0, _, m0 = s0(params, init_opt_state(params), batch)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        pshard = shd.param_shardings(specs, mesh)
+        pp = jax.tree.map(jax.device_put, params, pshard)
+        msn = shd.zero1_shardings(specs, params, mesh)
+        mspecs = jax.tree.map(lambda ns: ns.spec, msn)
+        bshard = NamedSharding(mesh, P(("data",)))
+        bb = {k: jax.device_put(v, bshard) for k, v in batch.items()}
+        s1 = jax.jit(build_train_step(cfg, AdamWConfig(lr=1e-3), mesh=mesh,
+                                      moment_specs=mspecs))
+        p1, _, m1 = s1(pp, init_opt_state(pp), bb)
+        assert np.isclose(float(m0["loss"]), float(m1["loss"]), rtol=1e-3)
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), p0, p1)
+        assert max(jax.tree.leaves(d)) < 5e-3, max(jax.tree.leaves(d))
+        print("OK sharded train")
+    """)
+    assert "OK sharded train" in out
+
+
+def test_moe_shard_map_matches_local():
+    out = _run("""
+        import dataclasses
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from repro.models import registry
+        cfg = registry.reduced_config(registry.get_config("phi3.5-moe-42b-a6.6b"))
+        # generous capacity so no tokens drop (drops differ between the
+        # local and EP dispatch granularities and are not comparable)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        assert cfg.moe_sharding == "ep"
+        params, specs = registry.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab)
+        lg0 = registry.forward(params, cfg, {"tokens": toks})
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        from repro.dist import sharding as shd
+        pshard = shd.param_shardings(specs, mesh)
+        pp = jax.tree.map(jax.device_put, params, pshard)
+        lg1 = registry.forward(pp, cfg, {"tokens": toks}, mesh=mesh)
+        err = float(jnp.max(jnp.abs(lg0 - lg1)))
+        scale = float(jnp.max(jnp.abs(lg0)))
+        assert err / scale < 2e-2, (err, scale)
+        print("OK moe ep")
+    """)
+    assert "OK moe ep" in out
+
+
+def test_dryrun_cell_small():
+    """The real dry-run driver (512 placeholder devices) on a fast cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-base",
+         "--shape", "decode_32k", "--mesh", "single", "--tag", "_test",
+         "--out-dir", "/tmp/repro_dryrun_test"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert " ok " in r.stdout, r.stdout

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features as FT
+from repro.core.gbdt import GBDTParams
+from repro.kernels import ops, ref
+from repro.kernels.minhash import make_permutations, minhash_pallas
+from repro.kernels.gbdt_infer import gbdt_infer_pallas
+from repro.kernels.profile_distance import (fused_score_pallas,
+                                            profile_distance_pallas)
+
+RNG = np.random.default_rng(42)
+
+
+def _gbdt(t, d, f, seed=0):
+    r = np.random.default_rng(seed)
+    return GBDTParams(feats=r.integers(0, f, (t, d)).astype(np.int32),
+                      thrs=r.normal(size=(t, d)).astype(np.float32),
+                      leaves=r.normal(size=(t, 2 ** d)).astype(np.float32),
+                      base=float(r.normal()))
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 4096])
+@pytest.mark.parametrize("t,d", [(1, 1), (50, 5), (13, 6)])
+def test_gbdt_infer_sweep(n, t, d):
+    f = FT.F_DIST
+    x = RNG.normal(size=(n, f)).astype(np.float32)
+    p = _gbdt(t, d, f)
+    out = gbdt_infer_pallas(jnp.asarray(x), *map(jnp.asarray, p.astuple()[:3]),
+                            base=p.base, block_n=256, interpret=True)
+    want = ref.gbdt_infer_ref(jnp.asarray(x), *map(jnp.asarray, p.astuple()[:3]),
+                              p.base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("q,n", [(1, 1), (3, 50), (8, 256), (11, 513)])
+def test_profile_distance_sweep(q, n):
+    zq = RNG.normal(size=(q, FT.F_NUM)).astype(np.float32)
+    zc = RNG.normal(size=(n, FT.F_NUM)).astype(np.float32)
+    wq = RNG.integers(0, 30, (q, FT.F_WORDS)).astype(np.uint32)
+    wc = RNG.integers(0, 30, (n, FT.F_WORDS)).astype(np.uint32)
+    wq[0, :3] = FT.HASH_SENTINEL
+    out = profile_distance_pallas(*map(jnp.asarray, (zq, wq, zc, wc)),
+                                  block_q=4, block_n=64, interpret=True)
+    want = ref.profile_distance_ref(*map(jnp.asarray, (zq, wq, zc, wc)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("q,n,t,d", [(2, 64, 10, 4), (5, 300, 50, 5)])
+def test_fused_score_sweep(q, n, t, d):
+    zq = RNG.normal(size=(q, FT.F_NUM)).astype(np.float32)
+    zc = RNG.normal(size=(n, FT.F_NUM)).astype(np.float32)
+    wq = RNG.integers(0, 9, (q, FT.F_WORDS)).astype(np.uint32)
+    wc = RNG.integers(0, 9, (n, FT.F_WORDS)).astype(np.uint32)
+    p = _gbdt(t, d, FT.F_DIST)
+    out = fused_score_pallas(*map(jnp.asarray, (zq, wq, zc, wc)),
+                             *map(jnp.asarray, p.astuple()[:3]), base=p.base,
+                             block_q=4, block_n=128, interpret=True)
+    want = ref.fused_score_ref(*map(jnp.asarray, (zq, wq, zc, wc)),
+                               *map(jnp.asarray, p.astuple()[:3]), p.base)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("c,r,p", [(1, 10, 16), (7, 700, 64), (16, 1024, 128)])
+def test_minhash_sweep(c, r, p):
+    vals = RNG.integers(0, 5000, (c, r)).astype(np.uint32)
+    vals[0, r // 2:] = FT.HASH_SENTINEL
+    a, b = make_permutations(p, seed=3)
+    out = minhash_pallas(jnp.asarray(vals), a, b, block_c=4, block_r=128,
+                         interpret=True)
+    want = ref.minhash_ref(jnp.asarray(vals), a, b)
+    assert (np.asarray(out) == np.asarray(want)).all()
+
+
+def test_minhash_jaccard_estimator():
+    """Signatures estimate set Jaccard within MinHash sampling error."""
+    n = 4000
+    a = np.arange(n, dtype=np.uint32)
+    b = np.arange(n // 2, n + n // 2, dtype=np.uint32)   # true J = 1/3
+    sig = ops.minhash(np.stack([a, b]), n_perm=256)
+    est = float(ref.minhash_jaccard_ref(sig[0], sig[1]))
+    assert abs(est - 1 / 3) < 0.08
+
+
+@pytest.mark.parametrize("shape", [(5,), (64,), (1000,), (7, 13)])
+@pytest.mark.parametrize("s", [0.0, 0.25, 0.5])
+def test_quality_cdf_sweep(shape, s):
+    j = RNG.uniform(0, 0.5, shape).astype(np.float32)
+    k = RNG.uniform(0, 1, shape).astype(np.float32)
+    out = ops.quality_cdf(j, k, strictness=s)
+    want = ref.quality_cdf_ref(jnp.asarray(j), jnp.asarray(k), s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)

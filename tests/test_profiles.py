@@ -1,0 +1,91 @@
+"""Profile computation: oracles + invariances (Table II features)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import features as FT
+from repro.core.ingest import pack_columns
+from repro.core.profiles import compute_profiles_batch, profile_lake
+
+
+def _profile_of(values, char_len=None, word_cnt=None):
+    h64 = np.asarray(values, np.uint64)
+    cl = np.asarray(char_len if char_len is not None else np.ones_like(h64), np.float32)
+    wc = np.asarray(word_cnt if word_cnt is not None else np.ones_like(h64), np.float32)
+    batch, _ = pack_columns(["c"], [h64], [cl], [wc], row_budget=max(len(h64), 4))
+    num, words = compute_profiles_batch(
+        jnp.asarray(batch.values32), jnp.asarray(batch.char_len),
+        jnp.asarray(batch.word_cnt), jnp.asarray(batch.n_rows))
+    return np.asarray(num)[0], np.asarray(words)[0]
+
+
+@given(st.lists(st.integers(1, 50), min_size=2, max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_cardinality_uniqueness_entropy(vals):
+    num, _ = _profile_of(vals)
+    uniq, counts = np.unique(vals, return_counts=True)
+    # count features are stored log1p-transformed (DESIGN.md §5.7)
+    assert np.isclose(num[FT.CARDINALITY], np.log1p(len(uniq)), atol=1e-5)
+    assert np.isclose(num[FT.UNIQUENESS], len(uniq) / len(vals), atol=1e-5)
+    p = counts / counts.sum()
+    assert np.isclose(num[FT.ENTROPY], -(p * np.log(p)).sum(), atol=1e-4)
+    assert np.isclose(num[FT.MIN_FREQ], np.log1p(counts.min()), atol=1e-5)
+    assert np.isclose(num[FT.MAX_FREQ], np.log1p(counts.max()), atol=1e-5)
+    assert np.isclose(num[FT.MAX_PERC_FREQ], counts.max() / len(vals), atol=1e-5)
+
+
+@given(st.lists(st.integers(1, 30), min_size=2, max_size=100), st.randoms())
+@settings(max_examples=40, deadline=None)
+def test_row_permutation_invariance(vals, rnd):
+    p1, w1 = _profile_of(vals)
+    shuffled = list(vals)
+    rnd.shuffle(shuffled)
+    p2, w2 = _profile_of(shuffled)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-5)
+    assert set(w1.tolist()) == set(w2.tolist())
+
+
+def test_string_stats():
+    vals = [1, 2, 3, 4]
+    cl = [3, 5, 7, 9]
+    wc = [1, 2, 2, 3]
+    num, _ = _profile_of(vals, cl, wc)
+    assert num[FT.LONGEST_STR] == 9 and num[FT.SHORTEST_STR] == 3
+    assert np.isclose(num[FT.AVG_STR], 6.0)
+    assert num[FT.MIN_WORDS] == 1 and num[FT.MAX_WORDS] == 3
+    assert np.isclose(num[FT.AVG_WORDS], 2.0)
+
+
+def test_frequent_words_top10():
+    # value 7 appears 5x, 9 appears 3x -> both must be among top-10 hashes
+    vals = [7] * 5 + [9] * 3 + list(range(100, 108))
+    _, words = _profile_of(vals)
+    from repro.core.ingest import fold32
+    h7 = fold32(np.asarray([7], np.uint64))[0]
+    h9 = fold32(np.asarray([9], np.uint64))[0]
+    top = set(words[:FT.N_FREQ_WORDS].tolist())
+    assert int(h7) in top and int(h9) in top
+
+
+def test_empty_and_padded_columns():
+    batch, _ = pack_columns(["a", "b"],
+                            [np.asarray([1, 2, 3], np.uint64),
+                             np.asarray([], np.uint64)],
+                            [np.asarray([1, 1, 1], np.float32), np.zeros(0, np.float32)],
+                            [np.asarray([1, 1, 1], np.float32), np.zeros(0, np.float32)],
+                            row_budget=8)
+    num, words = compute_profiles_batch(
+        jnp.asarray(batch.values32), jnp.asarray(batch.char_len),
+        jnp.asarray(batch.word_cnt), jnp.asarray(batch.n_rows))
+    num = np.asarray(num)
+    assert np.isfinite(num).all()
+    assert num[1].sum() == 0.0                      # empty column -> zeros
+    assert np.isclose(num[0][FT.CARDINALITY], np.log1p(3), atol=1e-5)
+
+
+def test_lake_profiles_zscore(small_lake, small_profiles):
+    z = small_profiles.zscored
+    assert np.isfinite(z).all()
+    assert np.abs(z.mean(axis=0)).max() < 1e-3
+    sd = z.std(axis=0)
+    assert ((np.abs(sd - 1) < 1e-2) | (sd < 1e-6)).all()

@@ -1,0 +1,84 @@
+"""Property tests for the paper's join-quality metric (Section III/IV)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quality
+
+
+@given(st.floats(0, 0.5), st.floats(0, 0.5), st.floats(0.01, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_continuous_monotone_in_j(j1, j2, k):
+    q1 = float(quality.continuous_quality(jnp.float32(j1), jnp.float32(k)))
+    q2 = float(quality.continuous_quality(jnp.float32(j2), jnp.float32(k)))
+    if j1 < j2:
+        assert q1 <= q2 + 1e-6
+    assert 0.0 <= q1 <= 1.0
+
+
+@given(st.floats(0, 0.5), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_continuous_monotone_in_k(j, k1, k2):
+    q1 = float(quality.continuous_quality(jnp.float32(j), jnp.float32(k1)))
+    q2 = float(quality.continuous_quality(jnp.float32(j), jnp.float32(k2)))
+    if k1 < k2:
+        assert q1 <= q2 + 1e-6
+
+
+@given(st.floats(0, 0.5), st.floats(0, 1))
+@settings(max_examples=100, deadline=None)
+def test_strictness_penalizes(j, k):
+    relaxed = float(quality.continuous_quality(jnp.float32(j), jnp.float32(k), 0.0))
+    strict = float(quality.continuous_quality(jnp.float32(j), jnp.float32(k), 0.5))
+    assert strict <= relaxed + 1e-6
+
+
+def test_paper_example_3():
+    """Scenario 1 (J=.25, K=1) must rank above scenario 2 (J=.25, K=.33);
+    discrete buckets: High (3) vs Medium (2) for L=4."""
+    j = jnp.float32(0.25)
+    q1 = quality.discrete_quality(j, jnp.float32(1.0), 4)
+    q2 = quality.discrete_quality(j, jnp.float32(0.33), 4)
+    assert int(q1) == 3 and int(q2) == 2
+    c1 = float(quality.continuous_quality(j, jnp.float32(1.0)))
+    c2 = float(quality.continuous_quality(j, jnp.float32(0.33)))
+    assert c1 > c2
+
+
+@given(st.integers(1, 10_000), st.integers(1, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_k_bounds(ca, cb):
+    k = float(quality.cardinality_proportion(jnp.int32(ca), jnp.int32(cb)))
+    assert 0 < k <= 1.0
+    assert k == pytest.approx(min(ca, cb) / max(ca, cb), rel=1e-5)
+
+
+@given(st.integers(0, 500), st.integers(1, 1000), st.integers(1, 1000))
+@settings(max_examples=100, deadline=None)
+def test_multiset_jaccard_bounds(inter, na, nb):
+    inter = min(inter, na, nb)
+    j = float(quality.multiset_jaccard(jnp.int32(inter), jnp.int32(na), jnp.int32(nb)))
+    assert 0.0 <= j <= 0.5 + 1e-6
+
+
+def test_discrete_quality_monotone_grid():
+    js = jnp.linspace(0, 0.5, 21)
+    ks = jnp.linspace(0, 1, 21)
+    q = quality.discrete_quality(js[:, None], ks[None, :], 4)
+    q = np.asarray(q)
+    assert (np.diff(q, axis=0) >= 0).all()      # increasing in J
+    assert (np.diff(q, axis=1) >= 0).all()      # increasing in K
+    assert q.min() == 0 and q.max() == 4
+
+
+def test_wasserstein_fit_recovers_params():
+    rng = np.random.default_rng(0)
+    mu, sg = 0.4, 0.25
+    from scipy.stats import truncnorm
+    a, b = (0 - mu) / sg, (1 - mu) / sg
+    samples = truncnorm.rvs(a, b, loc=mu, scale=sg, size=4000, random_state=rng)
+    fit = quality.fit_truncated_gaussian(
+        samples, mus=np.linspace(0.2, 0.6, 9), sigmas=np.linspace(0.1, 0.4, 7))
+    assert abs(fit["mu"] - mu) <= 0.1
+    assert abs(fit["sigma"] - sg) <= 0.1

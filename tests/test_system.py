@@ -1,0 +1,53 @@
+"""End-to-end behaviour tests for the paper's system: ingest -> profile ->
+train quality model -> discover joins, on the paper's own Fig. 1 toy data
+plus a synthetic lake."""
+import numpy as np
+
+from repro.core import (DiscoveryIndex, GBDTConfig, LakeSpec,
+                        ingest_string_columns, generate_lake, profile_lake,
+                        select_queries, train_quality_model)
+from repro.core.discovery import rank
+
+
+def test_fig1_toy_end_to_end(small_lake):
+    d1 = {"D1.Country": ["Mexico", "Spain", "U.S.", "France"],
+          "D1.Happiness": ["6.595", "6.354", "6.892", "6.592"],
+          "D1.Schengen": ["N", "Y", "N", "Y"]}
+    d2 = {"D2.Country": ["Spain", "Spain", "Germany", "Italy"],
+          "D2.Code": ["ESP", "ESP", "GER", "ITA"],
+          "D2.Location": ["Barcelona", "Madrid", "Munich", "Rome"],
+          "D2.Discount": ["Y", "N", "N", "Y"],
+          "D2.Satis": ["7.7", "8.5", "8", "7.7"]}
+    d3 = {"D3.X": ["Spain", "U.S.", "Mexico", "Germany"],
+          "D3.Y": ["47M", "330M", "123M", "83M"],
+          "D3.Z": ["2020", "2020", "2020", "2020"]}
+    cols, tids = [], []
+    for tid, table in enumerate((d1, d2, d3)):
+        for name, values in table.items():
+            cols.append((name, values))
+            tids.append(tid)
+    batch, _ = ingest_string_columns(cols, table_ids=tids)
+    profiles = profile_lake(batch)
+    model = train_quality_model([small_lake], GBDTConfig(n_trees=30, depth=4),
+                                n_query=48)
+    index = DiscoveryIndex(profiles=profiles, model=model, names=batch.names,
+                           table_ids=np.asarray(tids))
+    q = batch.names.index("D1.Country")
+    scores, ids = rank(index, np.asarray([q]), k=4)
+    top = [batch.names[i] for i, s in zip(ids[0], scores[0]) if np.isfinite(s)]
+    # the two country columns must rank in the top 3 (paper Example 1)
+    assert "D3.X" in top[:3] and "D2.Country" in top[:3], top
+
+
+def test_full_pipeline_on_synthetic_lake(small_lake, small_profiles):
+    model = train_quality_model([small_lake], GBDTConfig(n_trees=30, depth=4),
+                                n_query=64)
+    assert model.train_r2 > 0.5
+    idx = DiscoveryIndex(profiles=small_profiles, model=model,
+                         table_ids=small_lake.table)
+    qids = select_queries(small_lake, 10, min_semantic=3)
+    scores, ids = rank(idx, qids, k=3)
+    valid = np.isfinite(scores)
+    sem = small_lake.is_semantic(np.repeat(qids, 3),
+                                 ids.reshape(-1)).reshape(len(qids), 3)
+    assert (sem & valid).sum() / valid.sum() > 0.55

@@ -1,0 +1,115 @@
+"""Training substrate: optimizer math, loss descent, checkpoint/restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.pipeline import TokenPipeline
+from repro.models import registry
+from repro.train.loop import StragglerMonitor, train_loop
+from repro.train.optimizer import (AdamWConfig, adamw_update, global_norm,
+                                   init_opt_state, lr_schedule)
+from repro.train.trainer import build_train_step, cross_entropy
+
+
+def test_adamw_matches_reference():
+    """One AdamW step on a scalar matches the closed-form update."""
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      grad_clip=1e9, warmup_steps=0, total_steps=10**9)
+    p = {"w": jnp.asarray(2.0)}
+    g = {"w": jnp.asarray(0.5)}
+    st = init_opt_state(p)
+    p2, st2, _ = adamw_update(cfg, p, g, st)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mh, vh = m / 0.1, v / 0.01
+    want = 2.0 - cfg.lr * mh / (np.sqrt(vh) + cfg.eps)
+    assert np.isclose(float(p2["w"]), want, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clip_and_schedule():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, warmup_steps=10, total_steps=100)
+    # linear warmup starts at lr/warmup (not 0 — step 0 must make progress)
+    assert float(lr_schedule(cfg, jnp.asarray(0))) == pytest.approx(0.1)
+    assert float(lr_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_schedule(cfg, jnp.asarray(100))) == pytest.approx(cfg.min_lr_frac, rel=1e-2)
+    g = {"a": jnp.full((10,), 10.0)}
+    assert float(global_norm(g)) == pytest.approx(np.sqrt(1000), rel=1e-5)
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.asarray([[1, 2, -1, -1]])
+    loss = cross_entropy(logits, labels)
+    assert float(loss) == pytest.approx(np.log(8), rel=1e-5)
+
+
+def test_loss_decreases_and_resumes(tmp_path):
+    cfg = registry.reduced_config(registry.get_config("smollm-360m"))
+    params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(build_train_step(cfg, AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                     total_steps=40)))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq=64, global_batch=4)
+    ckpt = str(tmp_path / "ck")
+    logs = []
+    params1, opt1, hist = train_loop(step, params, opt, pipe, steps=30,
+                                     ckpt_dir=ckpt, ckpt_every=10,
+                                     log_every=1, log=logs.append)
+    losses = [h[1] for h in hist]
+    assert losses[-1] < losses[0] - 0.2, losses
+    # restart resumes from the latest checkpoint and continues
+    params2, opt2, hist2 = train_loop(step, params, opt, pipe, steps=32,
+                                      ckpt_dir=ckpt, ckpt_every=10,
+                                      log_every=1, log=logs.append)
+    assert any("[resume]" in l for l in logs)
+    assert int(opt2["step"]) == 32
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 must equal a single big-batch step (same mean gradient)."""
+    cfg = registry.reduced_config(registry.get_config("smollm-360m"))
+    params, _ = registry.init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq=32, global_batch=8)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    s1 = jax.jit(build_train_step(cfg, AdamWConfig(lr=1e-3), accum=1))
+    s2 = jax.jit(build_train_step(cfg, AdamWConfig(lr=1e-3), accum=2))
+    p1, _, m1 = s1(params, init_opt_state(params), batch)
+    p2, _, m2 = s2(params, init_opt_state(params), batch)
+    assert np.isclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(alpha=0.5, threshold=2.0)
+    assert not m.observe(1.0)
+    assert not m.observe(1.1)
+    assert m.observe(5.0)
+    assert m.flagged == 1
+
+
+def test_checkpoint_atomic_keepn(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": np.arange(5), "b": {"c": np.ones((2, 2))}}
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 3
+    files = [f for f in os.listdir(tmp_path) if f.startswith("ckpt_")]
+    assert len(files) == 2                    # keep-N gc
+    restored, step = mgr.restore(3, tree)
+    assert step == 3
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": np.arange(3)})
+    with pytest.raises(AssertionError):
+        mgr.restore(1, {"zzz": np.arange(3)})
