@@ -1,0 +1,120 @@
+"""Service benchmark: QPS and latency of the online engine at growing lake
+sizes, LSH-pruned vs full scan, via the real catalog (disk round-trip).
+
+Emits ``BENCH_service.json``:
+  {"lakes": [{"n_columns": ..., "modes": {"lsh": {...}, "full": {...}},
+              "speedup_lsh_over_full": ...}, ...]}
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import Timer, bench_lake, bench_model
+
+OUT_JSON = "BENCH_service.json"
+TABLE_SIZES = (20, 45, 90)
+N_QUERIES = 24
+BATCH = 8
+
+
+def _bench_engine(engine, qids, requests):
+    from repro.service import serve_discovery
+    # warm-up: compile every padded shape the runs below will hit
+    list(serve_discovery(engine, requests, max_batch=BATCH))
+    engine.query(requests[0])
+
+    with Timer() as t_batch:
+        list(serve_discovery(engine, requests, max_batch=BATCH))
+    qps = len(requests) / max(t_batch.s, 1e-9)
+
+    # per-query latency percentiles (cache is disabled by the caller)
+    lats = []
+    for req in requests:
+        with Timer() as t:
+            engine.query(req)
+        lats.append(t.s * 1e3)
+    return {
+        "qps": qps,
+        "batch_ms_per_query": t_batch.s / len(requests) * 1e3,
+        "p50_ms": float(np.percentile(lats, 50)),
+        "p99_ms": float(np.percentile(lats, 99)),
+    }
+
+
+def run():
+    from repro.core import select_queries
+    from repro.service import (ColumnCatalog, DiscoveryEngine,
+                               DiscoveryRequest, EngineConfig, LSHConfig,
+                               add_lake, measure_recall)
+
+    model = bench_model()
+    rows = []
+    record = {"lakes": []}
+
+    for n_tables in TABLE_SIZES:
+        lake = bench_lake(seed=1, n_tables=n_tables)
+        root = tempfile.mkdtemp(prefix=f"freyja_bench_{n_tables}_")
+        try:
+            catalog = ColumnCatalog(root, n_perm=128)
+            with Timer() as t_ingest:
+                add_lake(catalog, lake)
+            snapshot = ColumnCatalog(root).snapshot()  # disk round-trip
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+        c = snapshot.n_columns
+
+        qids = select_queries(lake, N_QUERIES)
+        requests = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
+                    for q in qids]
+
+        entry = {"n_tables": n_tables, "n_columns": c,
+                 "ingest_s": t_ingest.s, "modes": {}}
+        for mode in ("lsh", "full"):
+            engine = DiscoveryEngine(
+                snapshot, model,
+                EngineConfig(k=10, mode=mode, lsh=LSHConfig(n_bands=64),
+                             candidate_frac=0.2, cache_entries=0))
+            stats = _bench_engine(engine, qids, requests)
+            if mode == "lsh":
+                rec = measure_recall(engine, qids, k=10)
+                stats["recall_at_10"] = rec["recall"]
+                stats["scored_fraction"] = rec["scored_fraction"]
+            entry["modes"][mode] = stats
+            rows.append((f"service/{mode}/C{c}",
+                         stats["batch_ms_per_query"] * 1e3,
+                         f"{stats['qps']:.1f} QPS p50={stats['p50_ms']:.1f}ms "
+                         f"p99={stats['p99_ms']:.1f}ms"))
+
+        # recall-vs-pruning curve of the raw LSH layer (no profile proxy)
+        if n_tables == TABLE_SIZES[-1]:
+            from repro.core import DiscoveryIndex, rank
+            from repro.service.lsh import measure_tradeoff
+            idx = DiscoveryIndex(profiles=snapshot.profiles, model=model,
+                                 table_ids=snapshot.table_ids)
+            _, top_ids = rank(idx, qids, k=10)
+            entry["lsh_tradeoff"] = measure_tradeoff(
+                snapshot.signatures, top_ids, qids)
+
+        lsh, full = entry["modes"]["lsh"], entry["modes"]["full"]
+        entry["speedup_lsh_over_full"] = (full["batch_ms_per_query"] /
+                                          max(lsh["batch_ms_per_query"], 1e-9))
+        rows.append((f"service/speedup/C{c}", 0.0,
+                     f"{entry['speedup_lsh_over_full']:.2f}x "
+                     f"recall={lsh['recall_at_10']:.3f} "
+                     f"scored={100*lsh['scored_fraction']:.0f}%"))
+        record["lakes"].append(entry)
+
+    with open(OUT_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    rows.append(("service/json", 0.0, os.path.abspath(OUT_JSON)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -12,7 +12,7 @@ import traceback
 
 MODULES = ["fig2_metric_pk", "fig3_k_quartiles", "fig46_fit",
            "fig9_effectiveness", "table4_efficiency", "table5_memory",
-           "fig10_scalability", "roofline"]
+           "fig10_scalability", "roofline", "bench_service"]
 
 
 def main() -> None:

@@ -22,7 +22,9 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; the tree_util
+    # spelling works across the versions this repo supports
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
             for path, _ in flat]
     return keys, [leaf for _, leaf in flat], treedef

@@ -61,17 +61,36 @@ def _rank_local(z, w, tids, query_ids, gbdt_tuple, k: int,
     return scores, ids
 
 
+def _pad_topk(scores: np.ndarray, ids: np.ndarray, k: int):
+    """Pad (Q, k_eff) top-k results out to k columns (-inf scores, -1 ids)."""
+    k_eff = scores.shape[1]
+    if k_eff >= k:
+        return scores, ids
+    pad = ((0, 0), (0, k - k_eff))
+    return (np.pad(scores, pad, constant_values=-np.inf),
+            np.pad(ids, pad, constant_values=-1))
+
+
 def rank(index: DiscoveryIndex, query_ids: np.ndarray, k: int = 10,
          exclude_same_table: bool = True):
-    """Single-device ranking. Returns (scores (Q, k), column ids (Q, k))."""
+    """Single-device ranking. Returns (scores (Q, k), column ids (Q, k)).
+
+    ``k`` may exceed the lake size; the tail is padded with -inf / -1.
+    """
+    n = index.n_columns
+    q = len(query_ids)
+    if n == 0:
+        return (np.full((q, k), -np.inf, np.float32),
+                np.full((q, k), -1, np.int32))
+    k_eff = min(k, n)
     z = jnp.asarray(index.profiles.zscored, jnp.float32)
     w = jnp.asarray(index.profiles.words)
     t = jnp.asarray(index.table_ids if index.table_ids is not None
                     else np.zeros((index.n_columns,), np.int32))
     gb = tuple(map(jnp.asarray, index.model.gbdt.astuple()))
-    scores, ids = _rank_local(z, w, t, jnp.asarray(query_ids, jnp.int32), gb, k,
-                              exclude_same_table)
-    return np.asarray(scores), np.asarray(ids)
+    scores, ids = _rank_local(z, w, t, jnp.asarray(query_ids, jnp.int32), gb,
+                              k_eff, exclude_same_table)
+    return _pad_topk(np.asarray(scores), np.asarray(ids), k)
 
 
 # ---------------------------------------------------------------------------
@@ -84,12 +103,14 @@ def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
 
 
 def build_rank_sharded(mesh: Mesh, k: int, gbdt_tuple, *, shard_axes=("data",),
-                       block: int = 4096):
+                       block: int = 4096, with_tables: bool = False):
     """Builds the jitted sharded ranking fn over ``mesh``.
 
     Column-axis tensors are sharded over ``shard_axes``; queries and model
     parameters are replicated. Returns fn(z, w, cids, zq, wq, qids) ->
-    (scores, ids) with global column ids.
+    (scores, ids) with global column ids. With ``with_tables`` the fn takes
+    two extra args (tids sharded, tq replicated) and masks columns whose
+    table matches the query's (tq=-1 disables the mask for that query).
 
     Scoring streams the local corpus in blocks of ``block`` columns (the
     jnp mirror of the fused Pallas kernel): the (Q, N, F) distance tensor
@@ -100,8 +121,9 @@ def build_rank_sharded(mesh: Mesh, k: int, gbdt_tuple, *, shard_axes=("data",),
 
     axes = tuple(shard_axes)
 
-    def local_rank(z, w, cids, zq, wq, qids):
+    def local_rank(z, w, cids, zq, wq, qids, *rest):
         nloc = z.shape[0]
+        kl = min(k, nloc)              # shard may hold fewer than k columns
         nb = max(nloc // block, 1)
 
         def score_blk(args):
@@ -118,7 +140,11 @@ def build_rank_sharded(mesh: Mesh, k: int, gbdt_tuple, *, shard_axes=("data",),
             s = score_blk((z, w))
         s = jnp.where(cids[None] >= 0, s, -jnp.inf)        # padding columns
         s = jnp.where(cids[None] == qids[:, None], -jnp.inf, s)  # self
-        ls, li = jax.lax.top_k(s, k)                       # (Q, k) local
+        if with_tables:
+            tids, tq = rest
+            same = (tq[:, None] >= 0) & (tids[None] == tq[:, None])
+            s = jnp.where(same, -jnp.inf, s)
+        ls, li = jax.lax.top_k(s, kl)                      # (Q, kl) local
         lids = cids[li]
         # gather the small candidate sets from every shard and re-rank
         all_s = ls
@@ -126,38 +152,69 @@ def build_rank_sharded(mesh: Mesh, k: int, gbdt_tuple, *, shard_axes=("data",),
         for ax in axes:
             all_s = jax.lax.all_gather(all_s, ax, axis=1, tiled=True)
             all_i = jax.lax.all_gather(all_i, ax, axis=1, tiled=True)
-        gs, gi = jax.lax.top_k(all_s, k)
+        gs, gi = jax.lax.top_k(all_s, min(k, all_s.shape[1]))
         return gs, jnp.take_along_axis(all_i, gi, axis=1)
 
     in_specs = (P(axes), P(axes), P(axes), P(), P(), P())
+    if with_tables:
+        in_specs = in_specs + (P(axes), P())
     out_specs = (P(), P())
     fn = shard_map(local_rank, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
     return jax.jit(fn)
 
 
+def place_sharded_corpus(mesh: Mesh, shard_axes, z: np.ndarray, w: np.ndarray,
+                         table_ids: np.ndarray | None = None) -> dict:
+    """Pad the column axis to a multiple of the shard count and device_put
+    the corpus tensors for ``build_rank_sharded``.
+
+    Returns ``{"z", "w", "cids", "rep"[, "tids"]}`` — ``cids`` are global
+    column ids (-1 on padding), ``tids`` pad with -2 (matches no real table
+    and no disabled-query sentinel), ``rep`` is the replicated sharding for
+    the query-side tensors.
+    """
+    n = z.shape[0]
+    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+    n_pad = -(-n // n_shards) * n_shards
+    shard = NamedSharding(mesh, P(tuple(shard_axes)))
+    out = {
+        "z": jax.device_put(_pad_to(z.astype(np.float32), n_pad, 0.0), shard),
+        "w": jax.device_put(_pad_to(w, n_pad, FT.HASH_SENTINEL), shard),
+        "cids": jax.device_put(
+            _pad_to(np.arange(n, dtype=np.int32), n_pad, -1), shard),
+        "rep": NamedSharding(mesh, P()),
+    }
+    if table_ids is not None:
+        out["tids"] = jax.device_put(
+            _pad_to(np.asarray(table_ids, np.int32), n_pad, -2), shard)
+    return out
+
+
 def rank_sharded(index: DiscoveryIndex, query_ids: np.ndarray, mesh: Mesh,
                  k: int = 10, shard_axes=("data",)):
-    """Multi-device ranking over ``mesh`` (profiles sharded over columns)."""
-    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
-    n = index.n_columns
-    n_pad = -(-n // n_shards) * n_shards
+    """Multi-device ranking over ``mesh`` (profiles sharded over columns).
 
-    z = _pad_to(index.profiles.zscored.astype(np.float32), n_pad, 0.0)
-    w = _pad_to(index.profiles.words, n_pad, FT.HASH_SENTINEL)
-    cids = _pad_to(np.arange(n, dtype=np.int32), n_pad, -1)
+    Like :func:`rank`, ``k`` may exceed the lake (or shard) size; results are
+    padded out to k with -inf / -1.
+    """
+    n = index.n_columns
+    if n == 0:
+        q = len(query_ids)
+        return (np.full((q, k), -np.inf, np.float32),
+                np.full((q, k), -1, np.int32))
+
+    corpus = place_sharded_corpus(mesh, shard_axes,
+                                  index.profiles.zscored,
+                                  index.profiles.words)
     zq = index.profiles.zscored[query_ids].astype(np.float32)
     wq = index.profiles.words[query_ids]
 
     gb = tuple(map(jnp.asarray, index.model.gbdt.astuple()))
     fn = build_rank_sharded(mesh, k, gb, shard_axes=shard_axes)
 
-    shard_spec = NamedSharding(mesh, P(shard_axes))
-    rep = NamedSharding(mesh, P())
-    z = jax.device_put(z, shard_spec)
-    w = jax.device_put(w, shard_spec)
-    cids = jax.device_put(cids, shard_spec)
-    qarr = jax.device_put(np.asarray(query_ids, np.int32), rep)
-    scores, ids = fn(z, w, jnp.asarray(cids), jax.device_put(zq, rep),
-                     jax.device_put(wq, rep), qarr)
-    return np.asarray(scores), np.asarray(ids)
+    rep = corpus["rep"]
+    scores, ids = fn(corpus["z"], corpus["w"], corpus["cids"],
+                     jax.device_put(zq, rep), jax.device_put(wq, rep),
+                     jax.device_put(np.asarray(query_ids, np.int32), rep))
+    return _pad_topk(np.asarray(scores), np.asarray(ids), k)

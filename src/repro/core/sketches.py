@@ -73,7 +73,10 @@ class PackedSketches:
 
 def pack_sketches(sketches: list[ColumnSketch], k_max: int | None = None) -> PackedSketches:
     kcap = max((s.cardinality for s in sketches), default=1)
-    k = int(k_max or kcap)
+    # k must stay >= 1 even for empty lists / all-empty sketches / k_max=0:
+    # zero-width value arrays crash the searchsorted probe downstream.
+    k = int(kcap if k_max is None else k_max)
+    k = max(k, 1)
     c = len(sketches)
     values = np.full((c, k), FT.HASH_SENTINEL, dtype=np.uint32)
     counts = np.zeros((c, k), dtype=np.float32)

@@ -1,0 +1,1 @@
+"""Distributed utilities: logical-axis sharding rules + gradient compression."""

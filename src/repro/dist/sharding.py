@@ -1,0 +1,118 @@
+"""MaxText-style logical-axis sharding rules.
+
+Every ``init_*`` in ``repro.models`` returns a spec pytree whose leaves are
+tuples of *logical* axis names (``"embed"``, ``"heads"``, ``"mlp"``, ...;
+see ``models/layers.py``). This module owns the single mapping from logical
+axes to physical mesh axes, switched by a process-global *mode*:
+
+* ``tp``   — tensor parallel: head/mlp/vocab/expert axes over ``model``;
+* ``fsdp`` — tp + the ``embed`` axis sharded over the batch axes
+  (parameter-sharded data parallelism);
+* ``dp``   — pure data parallel: parameters fully replicated.
+
+``batch_axes`` names the mesh axes that carry the batch (``data``, plus
+``pod`` on multi-pod meshes); optimizer moments get an extra ZeRO-1 shard
+over those axes via ``zero1_shardings``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MODE = "tp"
+_MODES = ("tp", "fsdp", "dp")
+
+# logical axes that ride the model axis under tensor parallelism
+_MODEL_AXES = ("heads", "kv", "mlp", "vocab", "expert", "conv", "state")
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    if mode not in _MODES:
+        raise ValueError(f"unknown sharding mode {mode!r}; want one of {_MODES}")
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the global batch (pod-major on multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _is_spec(v) -> bool:
+    return isinstance(v, tuple)
+
+
+def _physical(logical: str, mesh: Mesh):
+    """Mesh axis (or axes tuple) for one logical axis under the current mode."""
+    if _MODE == "dp":
+        return None
+    if logical in _MODEL_AXES and "model" in mesh.axis_names:
+        return "model"
+    if logical == "embed" and _MODE == "fsdp":
+        ba = batch_axes(mesh)
+        return ba if ba else None
+    return None
+
+
+def spec_of(spec: tuple, mesh: Mesh) -> P:
+    """Logical spec tuple -> PartitionSpec under the current mode."""
+    return P(*[_physical(s, mesh) for s in spec])
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    axes = phys if isinstance(phys, tuple) else (phys,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit_spec(spec: tuple, shape, mesh: Mesh) -> P:
+    """spec_of with a divisibility check: a dimension that does not divide
+    evenly over its mesh axes falls back to replication (small/reduced
+    configs on big meshes)."""
+    axes = []
+    for logical, dim in zip(spec, shape):
+        phys = _physical(logical, mesh)
+        n = _axis_size(mesh, phys)
+        axes.append(phys if n > 1 and dim % n == 0 and dim >= n else None)
+    return P(*axes)
+
+
+def param_shardings(specs, mesh: Mesh, params=None):
+    """NamedSharding pytree for parameters.
+
+    ``params`` (arrays or ShapeDtypeStructs) enables the divisibility
+    fallback; without it the raw mode rules apply.
+    """
+    if params is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, spec_of(s, mesh)), specs,
+            is_leaf=_is_spec)
+    return jax.tree.map(
+        lambda s, p: NamedSharding(mesh, _fit_spec(s, p.shape, mesh)),
+        specs, params, is_leaf=_is_spec)
+
+
+def zero1_shardings(specs, params, mesh: Mesh):
+    """Optimizer-moment shardings: the param sharding plus a ZeRO-1 shard of
+    the largest still-replicated dimension over the batch axes."""
+    ba = batch_axes(mesh)
+    nba = _axis_size(mesh, ba)
+
+    def one(spec, p):
+        axes = list(_fit_spec(spec, p.shape, mesh))
+        if nba > 1:
+            order = sorted(range(len(axes)), key=lambda i: -p.shape[i])
+            for i in order:
+                if axes[i] is None and p.shape[i] % nba == 0 and p.shape[i] >= nba:
+                    axes[i] = ba
+                    break
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(one, specs, params, is_leaf=_is_spec)

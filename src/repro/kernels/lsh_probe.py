@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: batched LSH bucket probe.
+
+Given banded-MinHash bucket keys for a batch of queries (Q, B) and for the
+whole catalog (C, B), the probe marks column c a candidate for query q iff
+the two share a bucket in at least one band:
+
+    hit[q, c] = any_b (qkeys[q, b] == ckeys[c, b])
+
+This is the candidate-generation stage of the two-stage discovery service:
+an O(Q·C·B) stream of uint32 equality compares (VPU work, no MXU, no
+floats) instead of the O(Q·C·F_DIST·T) fused GBDT scan — the kernel's
+output mask picks the <<C columns the expensive scorer actually sees.
+
+Tiling mirrors ``minhash.py``: the grid walks (Q, C) tiles, each program
+loads a (Qb, B) and a (Cb, B) key block into VMEM and emits the (Qb, Cb)
+int32 hit block. VMEM working set with the defaults (8 × 512 × 64 × 4 B
+intermediate) is ~1 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Padding keys: queries and corpus pad with *different* sentinels so padded
+# rows never match anything (including each other).
+PAD_QUERY = np.uint32(0xFFFFFFFF)
+PAD_CORPUS = np.uint32(0xFFFFFFFE)
+
+
+def _kernel(qk_ref, ck_ref, out_ref):
+    q = qk_ref[...]                                     # (Qb, B) u32
+    c = ck_ref[...]                                     # (Cb, B) u32
+    eq = q[:, None, :] == c[None, :, :]                 # (Qb, Cb, B)
+    out_ref[...] = jnp.any(eq, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_c", "interpret"))
+def lsh_probe_pallas(qkeys, ckeys, *, block_q: int = 8, block_c: int = 512,
+                     interpret: bool = True):
+    """qkeys (Q, B) u32, ckeys (C, B) u32 -> (Q, C) int32 hit mask."""
+    q, b = qkeys.shape
+    c = ckeys.shape[0]
+    qp = -(-q // block_q) * block_q
+    cp = -(-c // block_c) * block_c
+    qk = jnp.pad(qkeys, ((0, qp - q), (0, 0)), constant_values=PAD_QUERY)
+    ck = jnp.pad(ckeys, ((0, cp - c), (0, 0)), constant_values=PAD_CORPUS)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(qp // block_q, cp // block_c),
+        in_specs=[
+            pl.BlockSpec((block_q, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.int32),
+        interpret=interpret,
+    )(qk, ck)
+    return out[:q, :c]

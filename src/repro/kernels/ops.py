@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.gbdt import GBDTParams
 from repro.kernels.gbdt_infer import gbdt_infer_pallas
+from repro.kernels.lsh_probe import lsh_probe_pallas
 from repro.kernels.minhash import make_permutations, minhash_pallas
 from repro.kernels.profile_distance import (fused_score_pallas,
                                             profile_distance_pallas)
@@ -52,6 +53,12 @@ def minhash(values, *, n_perm: int = 128, seed: int = 0,
     a, b = make_permutations(n_perm, seed)
     return minhash_pallas(jnp.asarray(values), a, b, block_c=block_c,
                           block_r=block_r, interpret=_interpret())
+
+
+def lsh_probe(qkeys, ckeys, *, block_q: int = 8, block_c: int = 512):
+    return lsh_probe_pallas(jnp.asarray(qkeys), jnp.asarray(ckeys),
+                            block_q=block_q, block_c=block_c,
+                            interpret=_interpret())
 
 
 def quality_cdf(j, k, *, strictness: float = 0.25, block: int = 4096):

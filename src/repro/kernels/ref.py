@@ -62,6 +62,13 @@ def minhash_ref(values, a, b):
     return jnp.min(h, axis=1)
 
 
+def lsh_probe_ref(qkeys, ckeys):
+    """Banded-LSH bucket probe. qkeys (Q, B) u32, ckeys (C, B) u32 ->
+    (Q, C) int32: 1 iff the pair shares a bucket key in any band."""
+    eq = qkeys[:, None, :] == ckeys[None, :, :]
+    return jnp.any(eq, axis=-1).astype(jnp.int32)
+
+
 def minhash_jaccard_ref(sig_a, sig_b):
     """Estimated *set* Jaccard from signatures (the MinHash baseline)."""
     return jnp.mean((sig_a == sig_b).astype(jnp.float32), axis=-1)

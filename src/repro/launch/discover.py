@@ -2,6 +2,13 @@
 model, and answer discovery-by-attribute queries.
 
   PYTHONPATH=src python -m repro.launch.discover --tables 40 --queries 10
+
+Service mode (the online subsystem): persist the lake into an on-disk
+catalog, restart an engine from it, and serve the queries through the
+two-stage LSH + GBDT pipeline, reporting recall against the brute scan:
+
+  PYTHONPATH=src python -m repro.launch.discover --tables 40 --queries 10 \
+      --catalog /tmp/freyja_catalog --serve
 """
 from __future__ import annotations
 
@@ -16,6 +23,54 @@ from repro.core import (DiscoveryIndex, GBDTConfig, LakeSpec, generate_lake,
 from repro.core.predictor import JoinQualityModel
 
 
+def serve_mode(args, lake, model):
+    """Persist → restart → serve through the online engine."""
+    from repro.service import (ColumnCatalog, DiscoveryEngine,
+                               DiscoveryRequest, EngineConfig, LSHConfig,
+                               add_lake, measure_recall, serve_discovery)
+
+    t0 = time.perf_counter()
+    catalog = ColumnCatalog(args.catalog)
+    if not catalog.tables():
+        add_lake(catalog, lake)
+        print(f"catalog: ingested {len(catalog.tables())} tables in "
+              f"{time.perf_counter()-t0:.1f}s -> {args.catalog}")
+    else:
+        # query ids below index into the generated lake; a stale catalog
+        # built from different --tables/--seed would silently misalign.
+        # Column names encode (table, domain, granularity, seed ordering),
+        # so comparing them is a content check, not just a count check.
+        if catalog.snapshot().names != lake.batch.names:
+            raise SystemExit(
+                f"catalog at {args.catalog} does not match the generated "
+                f"lake — it was built with different --tables/--domains/"
+                f"--seed; point --catalog at a fresh directory (or delete "
+                f"this one)")
+        print(f"catalog: reusing {len(catalog.tables())} tables from "
+              f"{args.catalog}")
+
+    # restart path: a fresh process would do exactly this
+    engine = DiscoveryEngine.from_catalog(
+        ColumnCatalog(args.catalog), model,
+        EngineConfig(k=args.k, mode=args.mode,
+                     lsh=LSHConfig(n_bands=args.lsh_bands)))
+    qids = select_queries(lake, args.queries)
+    reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
+            for q in qids]
+    t0 = time.perf_counter()
+    responses = list(serve_discovery(engine, reqs, max_batch=args.batch))
+    dt = time.perf_counter() - t0
+    print(f"served {len(responses)} queries in {dt:.3f}s "
+          f"({len(responses)/max(dt,1e-9):.1f} QPS, mode={args.mode})")
+    if args.mode == "lsh":
+        rec = measure_recall(engine, qids, k=args.k)
+        print(f"recall@{args.k} vs full scan: {rec['recall']:.3f} "
+              f"scoring {100*rec['scored_fraction']:.1f}% of columns")
+    for r in responses[:3]:
+        names = [m.column for m in r.matches[:5]]
+        print(f"  {r.name} ({r.n_candidates} scored) -> {names}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables", type=int, default=40)
@@ -25,6 +80,13 @@ def main():
     ap.add_argument("--model", default=None, help="path to a trained model .npz")
     ap.add_argument("--save-model", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--catalog", default=None,
+                    help="catalog directory (enables service mode)")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve queries through the online engine")
+    ap.add_argument("--mode", default="lsh", choices=["lsh", "full"])
+    ap.add_argument("--lsh-bands", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
     args = ap.parse_args()
 
     t0 = time.perf_counter()
@@ -50,18 +112,26 @@ def main():
         if args.save_model:
             model.save(args.save_model)
 
+    if args.serve or args.catalog:
+        if not args.catalog:
+            ap.error("--serve needs --catalog DIR")
+        serve_mode(args, lake, model)
+        return
+
     index = DiscoveryIndex(profiles=prof, model=model, names=lake.batch.names,
                            table_ids=lake.table)
     qids = select_queries(lake, args.queries)
     t0 = time.perf_counter()
     scores, ids = rank(index, qids, k=args.k)
     dt = time.perf_counter() - t0
-    sem = lake.is_semantic(np.repeat(qids, args.k), ids.reshape(-1))
+    valid = (ids >= 0).reshape(-1)          # k > lake size pads with -1
+    sem = lake.is_semantic(np.repeat(qids, args.k),
+                           np.maximum(ids.reshape(-1), 0)) & valid
     print(f"query: {len(qids)} queries in {dt:.3f}s "
           f"({dt/max(len(qids),1)*1e3:.1f} ms/query), "
-          f"P@{args.k} = {sem.mean():.3f}")
+          f"P@{args.k} = {sem.sum()/max(valid.sum(), 1):.3f}")
     for qi, (s_row, i_row) in list(zip(qids, zip(scores, ids)))[:3]:
-        names = [lake.batch.names[j] for j in i_row[:5]]
+        names = [lake.batch.names[j] for j in i_row[:5] if j >= 0]
         print(f"  q={lake.batch.names[qi]} -> {names}")
 
 

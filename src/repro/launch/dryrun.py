@@ -91,7 +91,7 @@ def cache_shardings(cfg: ArchConfig, caches_sds, b: int, mesh: Mesh):
                 axes[1] = ba
         return P(*axes)
 
-    flat, treedef = jax.tree.flatten_with_path(caches_sds)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_sds)
     specs = [spec_for(path, leaf) for path, leaf in flat]
     return jax.tree.unflatten(treedef, [NamedSharding(mesh, s) for s in specs])
 
@@ -218,6 +218,8 @@ def analyze(lowered, aux, mesh: Mesh, *, zero1: bool = True) -> dict:
     compiled = lowered.compile()
     compile_s = time.time() - t0
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):       # older jax returns [dict]
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     byt = float(cost.get("bytes accessed", 0.0))
     try:

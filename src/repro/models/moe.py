@@ -97,7 +97,8 @@ def moe_ffn_local(p, cfg, x, *, model_axis: str | None):
     copies_t = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)
 
     if cfg.moe_sharding == "ep" and model_axis is not None:
-        mp = jax.lax.axis_size(model_axis)
+        # jax.lax.axis_size only exists on newer jax; psum(1) is equivalent
+        mp = jax.lax.psum(1, model_axis)
         e_local = e // mp
         send_cf = max(cfg.capacity_factor, 2.0)             # A2A send buffer
         cap_send = int(max(8, round(tl * k / mp * send_cf)))

@@ -1,0 +1,26 @@
+"""Online join-discovery service on top of the FREYJA core.
+
+Layers (bottom-up):
+
+* ``catalog``  — persistent on-disk column catalog: profile / signature /
+  metadata segments with incremental add/drop and compaction;
+* ``lsh``      — banded-MinHash candidate generation over the catalog's
+  signatures (device-side batched bucket probe);
+* ``engine``   — ``DiscoveryEngine``: batches concurrent queries through the
+  two-stage pipeline (LSH candidates -> GBDT re-rank) with an LRU result
+  cache, plus full-scan and mesh-sharded fallbacks;
+* ``api``      — request/response dataclasses and the ``serve_discovery``
+  entry point.
+"""
+from repro.service.api import (ColumnMatch, DiscoveryRequest,
+                               DiscoveryResponse, serve_discovery)
+from repro.service.catalog import CatalogSnapshot, ColumnCatalog, add_lake
+from repro.service.engine import DiscoveryEngine, EngineConfig, measure_recall
+from repro.service.lsh import LSHConfig, LSHIndex, band_keys
+
+__all__ = [
+    "ColumnMatch", "DiscoveryRequest", "DiscoveryResponse", "serve_discovery",
+    "CatalogSnapshot", "ColumnCatalog", "add_lake",
+    "DiscoveryEngine", "EngineConfig", "measure_recall",
+    "LSHConfig", "LSHIndex", "band_keys",
+]

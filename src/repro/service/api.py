@@ -1,0 +1,66 @@
+"""Request/response surface of the discovery service.
+
+``serve_discovery`` is the entry point a server loop (or the CLI driver in
+``launch/discover.py``) feeds: it drains an iterable of requests in
+micro-batches so concurrent queries share one device dispatch, and yields
+responses in request order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Sequence
+
+
+@dataclasses.dataclass
+class DiscoveryRequest:
+    """One discovery-by-attribute query.
+
+    Exactly one of:
+    * ``column_id`` — a column already resident in the catalog snapshot
+      (position in the snapshot ordering);
+    * ``values``    — a raw string column to profile on the fly.
+    """
+
+    name: str = "query"
+    column_id: int | None = None
+    values: Sequence[str] | None = None
+    k: int | None = None            # trim below the engine's k if smaller
+
+    def __post_init__(self):
+        if (self.column_id is None) == (self.values is None):
+            raise ValueError("pass exactly one of column_id= or values=")
+
+
+@dataclasses.dataclass
+class ColumnMatch:
+    column_id: int
+    column: str
+    table: str
+    score: float
+
+
+@dataclasses.dataclass
+class DiscoveryResponse:
+    name: str
+    matches: list[ColumnMatch]
+    n_candidates: int               # columns actually scored for this query
+    cached: bool = False
+    latency_ms: float = 0.0
+
+
+def serve_discovery(engine, requests: Iterable[DiscoveryRequest],
+                    max_batch: int = 64) -> Iterator[DiscoveryResponse]:
+    """Drain ``requests`` through ``engine`` in micro-batches."""
+    pending: list[DiscoveryRequest] = []
+
+    def flush():
+        out = engine.query_batch(pending)
+        pending.clear()
+        return out
+
+    for req in requests:
+        pending.append(req)
+        if len(pending) >= max_batch:
+            yield from flush()
+    if pending:
+        yield from flush()

@@ -1,0 +1,360 @@
+"""DiscoveryEngine: batched two-stage query serving over a catalog snapshot.
+
+Pipeline per micro-batch of concurrent queries:
+
+1. **Candidate generation** — the LSH bucket probe marks the columns that
+   share a MinHash band with each query (``kernels/lsh_probe``), and a
+   stable top-k over the hit mask gathers them into a fixed candidate
+   budget (a static fraction of the lake, so the stage is jit-cached).
+2. **Re-rank** — only the gathered candidates go through the expensive
+   distance-features + GBDT scorer; the final top-k comes out of that
+   small (Q, budget) score block.
+
+Modes: ``lsh`` (two-stage, the default), ``full`` (single-device brute
+scan — the exact baseline), ``sharded`` (full scan via ``rank_sharded``
+over a mesh, for lakes larger than one device).
+
+An LRU cache keyed by the query-profile hash short-circuits repeated
+queries (identical uploaded columns are common in production traffic);
+entries are invalidated wholesale when the catalog version moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as FT
+from repro.core.discovery import build_rank_sharded
+from repro.core.ingest import ingest_string_columns
+from repro.core.predictor import (JoinQualityModel, distance_features_ref,
+                                  gbdt_predict_ref)
+from repro.kernels.lsh_probe import lsh_probe_pallas
+from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
+from repro.service.catalog import (CatalogSnapshot, ColumnCatalog,
+                                   profile_and_sign)
+from repro.service.lsh import LSHConfig, LSHIndex
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    k: int = 10
+    mode: str = "lsh"                  # "lsh" | "full" | "sharded"
+    lsh: LSHConfig = dataclasses.field(default_factory=LSHConfig)
+    candidate_frac: float = 0.2        # LSH budget as a fraction of the lake
+    max_candidates: int = 4096         # absolute cap on that budget
+    batch_pad: int = 8                 # pad micro-batches to this multiple
+    cache_entries: int = 1024
+    exclude_same_table: bool = True
+    shard_axes: tuple = ("data",)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("k", "max_cand", "interpret"))
+def _lsh_rank(zq, wq, qkeys, tq, qid, z, w, ckeys, tids, gbdt_tuple,
+              k: int, max_cand: int, interpret: bool):
+    """Two-stage ranking. Query tensors are (Q, ...); tq=-1 disables the
+    same-table mask for a row, qid=-1 marks an external (non-resident)
+    query. Returns (scores (Q,k), ids (Q,k), n_scored (Q,)).
+
+    Candidate generation is hybrid (the blocking construction of Flores et
+    al.): every LSH bucket hit is a candidate, and the remaining budget is
+    filled with the nearest columns in profile space (squared-L2 proxy via
+    one matmul — no trees, no word features). LSH covers the high-overlap
+    joins; the profile proxy covers what the GBDT ranks by profile shape.
+    """
+    mask = lsh_probe_pallas(qkeys, ckeys, interpret=interpret)   # (Q, C)
+    # -||zq - z||² up to a per-query constant: 2·zq@zᵀ - ||z||²
+    proxy = 2.0 * zq @ z.T - jnp.sum(z * z, axis=1)[None]        # (Q, C)
+    proxy = proxy / (1.0 + jnp.abs(proxy))                       # squash to (-1, 1)
+    big = jnp.float32(4.0)
+    prio = mask.astype(jnp.float32) * big + proxy
+    # keep excluded columns out of the budget entirely
+    prio = jnp.where(tids[None] == tq[:, None], -jnp.inf, prio)
+    n = z.shape[0]
+    prio = jnp.where(jnp.arange(n)[None] == qid[:, None], -jnp.inf, prio)
+    pval, cand = jax.lax.top_k(prio, max_cand)                   # (Q, M)
+    valid = jnp.isfinite(pval)
+    d = distance_features_ref(zq[:, None], wq[:, None], z[cand], w[cand])
+    s = gbdt_predict_ref(gbdt_tuple, d)                          # (Q, M)
+    s = jnp.where(valid, s, -jnp.inf)
+    sc, pos = jax.lax.top_k(s, min(k, max_cand))
+    ids = jnp.take_along_axis(cand, pos, axis=1)
+    ids = jnp.where(jnp.isfinite(sc), ids, -1)
+    return sc, ids, valid.sum(axis=1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _full_rank(zq, wq, tq, qid, z, w, tids, gbdt_tuple, k: int):
+    """Single-device brute scan (the exact baseline the LSH path prunes)."""
+    n = z.shape[0]
+    d = distance_features_ref(zq[:, None], wq[:, None], z[None], w[None])
+    s = gbdt_predict_ref(gbdt_tuple, d)                          # (Q, N)
+    s = jnp.where(tids[None] == tq[:, None], -jnp.inf, s)
+    s = jnp.where(jnp.arange(n)[None] == qid[:, None], -jnp.inf, s)
+    sc, ids = jax.lax.top_k(s, min(k, n))
+    ids = jnp.where(jnp.isfinite(sc), ids, -1)
+    return sc, ids, jnp.full((zq.shape[0],), n, jnp.int32)
+
+
+class DiscoveryEngine:
+    """Serves discovery queries from a catalog snapshot."""
+
+    def __init__(self, snapshot: CatalogSnapshot, model: JoinQualityModel,
+                 config: EngineConfig | None = None, mesh=None):
+        config = config if config is not None else EngineConfig()
+        self.config = config
+        self.model = model
+        self.mesh = mesh
+        self._gbdt = tuple(map(jnp.asarray, model.gbdt.astuple()))
+        self._cache: OrderedDict[bytes, list[ColumnMatch]] = OrderedDict()
+        self.stats = {"queries": 0, "cache_hits": 0, "scored_columns": 0,
+                      "scan_columns": 0, "batches": 0}
+        self._sharded_fn = None
+        self.refresh(snapshot)
+        if config.mode == "sharded":
+            if mesh is None:
+                raise ValueError("sharded mode needs a mesh")
+            self._sharded_fn = build_rank_sharded(
+                mesh, config.k, self._gbdt, shard_axes=config.shard_axes,
+                with_tables=True)
+
+    @classmethod
+    def from_catalog(cls, catalog: ColumnCatalog, model: JoinQualityModel,
+                     config: EngineConfig | None = None, mesh=None):
+        return cls(catalog.snapshot(), model, config=config, mesh=mesh)
+
+    # -- snapshot management ------------------------------------------------
+
+    def refresh(self, snapshot: CatalogSnapshot) -> None:
+        """Swap in a new catalog snapshot (after add/drop/compact)."""
+        self.snapshot = snapshot
+        prof = snapshot.profiles
+        self._z_np = prof.zscored.astype(np.float32)
+        self._w_np = prof.words
+        self._z = jnp.asarray(self._z_np)
+        self._w = jnp.asarray(self._w_np)
+        self._tids = jnp.asarray(snapshot.table_ids)
+        self.lsh = LSHIndex.build(snapshot.signatures, self.config.lsh)
+        self._ckeys = jnp.asarray(self.lsh.keys)
+        self._cache.clear()
+
+    @property
+    def n_columns(self) -> int:
+        return self.snapshot.n_columns
+
+    @property
+    def candidate_budget(self) -> int:
+        c = self.n_columns
+        want = max(self.config.k, int(c * self.config.candidate_frac))
+        return max(1, min(want, self.config.max_candidates, c))
+
+    # -- query path ---------------------------------------------------------
+
+    def query(self, request: DiscoveryRequest) -> DiscoveryResponse:
+        return self.query_batch([request])[0]
+
+    def query_batch(self, requests: list[DiscoveryRequest]
+                    ) -> list[DiscoveryResponse]:
+        t0 = time.perf_counter()
+        if self.n_columns == 0:
+            return [DiscoveryResponse(name=r.name, matches=[], n_candidates=0)
+                    for r in requests]
+        zq, wq, sigq, tq, qid = self._resolve(requests)
+        keys = [self._cache_key(zq[i], wq[i], sigq[i], requests[i]) for i in
+                range(len(requests))]
+
+        responses: list[DiscoveryResponse | None] = [None] * len(requests)
+        todo = []
+        for i, key in enumerate(keys):
+            hit = self._cache_get(key)
+            if hit is not None:
+                responses[i] = DiscoveryResponse(
+                    name=requests[i].name, matches=self._trim(hit, requests[i]),
+                    n_candidates=0, cached=True)
+                self.stats["cache_hits"] += 1
+            else:
+                todo.append(i)
+
+        if todo:
+            scores, ids, ncand = self._rank_rows(
+                zq[todo], wq[todo], sigq[todo], tq[todo], qid[todo])
+            for row, i in enumerate(todo):
+                matches = self._matches(scores[row], ids[row])
+                self._cache_put(keys[i], matches)
+                responses[i] = DiscoveryResponse(
+                    name=requests[i].name,
+                    matches=self._trim(matches, requests[i]),
+                    n_candidates=int(ncand[row]))
+                self.stats["scored_columns"] += int(ncand[row])
+                self.stats["scan_columns"] += self.n_columns
+
+        self.stats["queries"] += len(requests)
+        self.stats["batches"] += 1
+        dt_ms = (time.perf_counter() - t0) * 1e3 / max(len(requests), 1)
+        for r in responses:
+            r.latency_ms = dt_ms
+        return responses
+
+    # -- internals ----------------------------------------------------------
+
+    def _rank_rows(self, zq, wq, sigq, tq, qid):
+        """Dispatch one padded micro-batch to the mode's jitted stage."""
+        q = zq.shape[0]
+        pad = -(-q // self.config.batch_pad) * self.config.batch_pad
+        if pad != q:
+            rep = lambda a: np.concatenate(
+                [a, np.repeat(a[-1:], pad - q, axis=0)])
+            zq, wq, sigq, tq, qid = map(rep, (zq, wq, sigq, tq, qid))
+
+        mode = self.config.mode
+        if mode == "lsh":
+            qkeys = self.lsh.query_keys(sigq)
+            sc, ids, ncand = _lsh_rank(
+                jnp.asarray(zq), jnp.asarray(wq), jnp.asarray(qkeys),
+                jnp.asarray(tq), jnp.asarray(qid), self._z, self._w,
+                self._ckeys, self._tids, self._gbdt,
+                self.config.k, self.candidate_budget, _interpret())
+        elif mode == "full":
+            sc, ids, ncand = _full_rank(
+                jnp.asarray(zq), jnp.asarray(wq), jnp.asarray(tq),
+                jnp.asarray(qid), self._z, self._w, self._tids, self._gbdt,
+                self.config.k)
+        elif mode == "sharded":
+            sc, ids = self._sharded_rank(zq, wq, tq, qid)
+            ncand = np.full((zq.shape[0],), self.n_columns, np.int32)
+        else:
+            raise ValueError(f"unknown mode {self.config.mode!r}")
+        return np.asarray(sc)[:q], np.asarray(ids)[:q], np.asarray(ncand)[:q]
+
+    def _sharded_rank(self, zq, wq, tq, qid):
+        from repro.core.discovery import place_sharded_corpus
+        corpus = place_sharded_corpus(self.mesh, self.config.shard_axes,
+                                      self._z_np, self._w_np,
+                                      table_ids=self.snapshot.table_ids)
+        rep = corpus["rep"]
+        sc, ids = self._sharded_fn(
+            corpus["z"], corpus["w"], corpus["cids"],
+            jax.device_put(zq.astype(np.float32), rep),
+            jax.device_put(wq, rep),
+            jax.device_put(qid.astype(np.int32), rep),
+            corpus["tids"],
+            jax.device_put(tq.astype(np.int32), rep))
+        return np.asarray(sc), np.asarray(ids)
+
+    def _resolve(self, requests):
+        """Requests -> stacked (zq, wq, sigq, tq, qid) numpy rows."""
+        n = len(requests)
+        zq = np.zeros((n, FT.F_NUM), np.float32)
+        wq = np.zeros((n, FT.F_WORDS), np.uint32)
+        sigq = np.zeros((n, self.snapshot.signatures.shape[1]), np.uint32)
+        tq = np.full((n,), -1, np.int32)
+        qid = np.full((n,), -1, np.int32)
+
+        external = [i for i, r in enumerate(requests) if r.values is not None]
+        for i, req in enumerate(requests):
+            if req.column_id is not None:
+                cid = int(req.column_id)
+                if not 0 <= cid < self.n_columns:
+                    raise IndexError(f"column_id {cid} outside catalog "
+                                     f"(0..{self.n_columns - 1})")
+                zq[i] = self._z_np[cid]
+                wq[i] = self._w_np[cid]
+                sigq[i] = self.snapshot.signatures[cid]
+                qid[i] = cid
+                if self.config.exclude_same_table:
+                    tq[i] = int(self.snapshot.table_ids[cid])
+        if external:
+            ze, we, se = self._profile_external(
+                [requests[i] for i in external])
+            for row, i in enumerate(external):
+                zq[i], wq[i], sigq[i] = ze[row], we[row], se[row]
+        return zq, wq, sigq, tq, qid
+
+    def _profile_external(self, requests):
+        """Profile + sign uploaded raw columns with the snapshot's stats."""
+        batch, _ = ingest_string_columns(
+            [(r.name, r.values) for r in requests])
+        num, words, sigs = profile_and_sign(batch, sigq_width(self.snapshot),
+                                            self.snapshot.minhash_seed)
+        prof = self.snapshot.profiles
+        return (num - prof.mean) / prof.std, words, sigs
+
+    def _matches(self, scores, ids) -> list[ColumnMatch]:
+        out = []
+        for s, i in zip(scores, ids):
+            if not np.isfinite(s) or i < 0:
+                continue
+            tid = int(self.snapshot.table_ids[i])
+            out.append(ColumnMatch(
+                column_id=int(i), column=self.snapshot.names[i],
+                table=self.snapshot.table_names.get(tid, str(tid)),
+                score=float(s)))
+        return out
+
+    def _trim(self, matches, request):
+        k = request.k if request.k is not None else self.config.k
+        return list(matches[:k])
+
+    def _cache_key(self, z_row, w_row, sig_row, request) -> bytes:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(z_row.tobytes())
+        h.update(w_row.tobytes())
+        h.update(sig_row.tobytes())     # LSH results depend on the signature
+        h.update(f"{self.config.mode}|{self.config.k}|"
+                 f"{self.config.exclude_same_table}|"
+                 f"{self.snapshot.version}|{request.column_id}".encode())
+        return h.digest()
+
+    def _cache_get(self, key):
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key, matches) -> None:
+        self._cache[key] = matches
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.config.cache_entries:
+            self._cache.popitem(last=False)
+
+
+def sigq_width(snapshot: CatalogSnapshot) -> int:
+    return int(snapshot.signatures.shape[1])
+
+
+def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
+                   k: int | None = None) -> dict:
+    """Recall@k of the engine's (LSH-pruned) top-k against the brute-force
+    scan on the same snapshot, plus the fraction of the lake scored."""
+    k = k or engine.config.k
+    if k > engine.config.k:
+        raise ValueError(f"k={k} exceeds the engine's configured "
+                         f"k={engine.config.k}; the pruned side can only "
+                         f"return config.k results")
+    reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q), k=k)
+            for q in query_ids]
+    zq, wq, sigq, tq, qid = engine._resolve(reqs)
+    lsh_s, lsh_ids, ncand = engine._rank_rows(zq, wq, sigq, tq, qid)
+    full_s, full_ids, _ = map(np.asarray, _full_rank(
+        jnp.asarray(zq), jnp.asarray(wq), jnp.asarray(tq), jnp.asarray(qid),
+        engine._z, engine._w, engine._tids, engine._gbdt, k))
+    hits, total = 0, 0
+    for row in range(len(reqs)):
+        want = set(full_ids[row][:k][np.isfinite(full_s[row][:k])].tolist())
+        got = set(lsh_ids[row][:k][np.isfinite(lsh_s[row][:k])].tolist())
+        hits += len(want & got)
+        total += len(want)
+    return {"recall": hits / max(total, 1),
+            "scored_fraction": float(ncand.mean()) / max(engine.n_columns, 1),
+            "candidate_budget": engine.candidate_budget,
+            "k": k, "n_queries": len(reqs)}

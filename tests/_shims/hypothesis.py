@@ -1,0 +1,79 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` library.
+
+The container this repo runs in does not ship ``hypothesis`` and installing
+packages is not allowed, so ``conftest.py`` puts this directory on
+``sys.path`` only when the real library is missing. The shim implements the
+small API surface the test-suite uses (``given``, ``settings``,
+``strategies.integers/floats/lists/randoms``) by sampling a fixed number of
+pseudo-random examples from a per-test deterministic seed — property tests
+still execute and still catch regressions, just without shrinking or
+adaptive example generation.
+"""
+from __future__ import annotations
+
+import os
+import random
+import zlib
+
+import numpy as np
+
+# Property tests ask for up to 200 examples; the shim caps the count so the
+# whole suite stays fast on CPU (override with HYPOTHESIS_SHIM_MAX_EXAMPLES).
+_EXAMPLE_CAP = int(os.environ.get("HYPOTHESIS_SHIM_MAX_EXAMPLES", "20"))
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return SearchStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return SearchStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example_from(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def randoms():
+        return SearchStrategy(
+            lambda rng: random.Random(int(rng.integers(0, 2 ** 32))))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: SearchStrategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_shim_max_examples", 20), _EXAMPLE_CAP)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                example = [s.example_from(rng) for s in strats]
+                fn(*args, *example, **kwargs)
+        # no functools.wraps: __wrapped__ would make pytest introspect the
+        # original signature and treat strategy arguments as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__dict__.update(fn.__dict__)
+        return wrapper
+    return deco

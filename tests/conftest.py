@@ -3,6 +3,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:  # the container has no hypothesis; fall back to the deterministic shim
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_shims"))
+
 import numpy as np
 import pytest
 

@@ -86,6 +86,77 @@ def test_prediction_correlates_with_exact(trained):
         assert r > 0.6, r
 
 
+def test_rank_exclude_same_table_masking(trained):
+    """With exclusion on, no result shares the query's table; with it off,
+    same-table columns (near-duplicates) dominate the top ranks."""
+    lake, prof, model = trained
+    idx = DiscoveryIndex(profiles=prof, model=model, table_ids=lake.table)
+    qids = select_queries(lake, 8, min_semantic=3)
+    scores_ex, ids_ex = rank(idx, qids, k=5, exclude_same_table=True)
+    for qi, q in enumerate(qids):
+        valid = np.isfinite(scores_ex[qi])
+        assert (lake.table[ids_ex[qi][valid]] != lake.table[q]).all()
+    # and the self column never appears either way
+    _, ids_in = rank(idx, qids, k=5, exclude_same_table=False)
+    for qi, q in enumerate(qids):
+        assert q not in ids_in[qi]
+
+
+def test_rank_k_exceeds_lake_size(trained):
+    lake, prof, model = trained
+    idx = DiscoveryIndex(profiles=prof, model=model, table_ids=lake.table)
+    n = idx.n_columns
+    k = n + 7
+    qids = np.asarray([0, 1], np.int32)
+    scores, ids = rank(idx, qids, k=k, exclude_same_table=False)
+    assert scores.shape == (2, k) and ids.shape == (2, k)
+    assert not np.isfinite(scores[:, n:]).any()
+    assert (ids[:, n:] == -1).all()
+    valid = np.isfinite(scores[0])
+    assert np.unique(ids[0][valid]).size == valid.sum()  # no duplicate columns
+
+
+def test_rank_matches_sharded_on_local_mesh(trained):
+    """rank and rank_sharded agree on whatever host mesh exists (run the
+    suite with XLA_FLAGS=--xla_force_host_platform_device_count=8 to make
+    this a genuine multi-device check; test_distributed.py always does)."""
+    import jax
+    from repro.core.discovery import rank_sharded as _rs
+    lake, prof, model = trained
+    idx = DiscoveryIndex(profiles=prof, model=model, table_ids=lake.table)
+    qids = select_queries(lake, 6, min_semantic=3)
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    s1, i1 = rank(idx, qids, k=5, exclude_same_table=False)
+    s2, i2 = _rs(idx, qids, mesh, k=5, shard_axes=("data",))
+    np.testing.assert_allclose(np.sort(s1, 1), np.sort(s2, 1),
+                               rtol=1e-4, atol=1e-5)
+    overlap = np.mean([len(set(a) & set(b)) / 5.0 for a, b in zip(i1, i2)])
+    assert overlap > 0.9, overlap
+
+
+def test_rank_sharded_k_exceeds_shard_size(trained):
+    """k larger than the per-shard column count must not crash the local
+    top-k (regression for the kl clamp)."""
+    import jax
+    lake, prof, model = trained
+    # tiny sub-index: fewer columns than k after sharding
+    import dataclasses as dc
+    sub = np.arange(6)
+    prof_small = dc.replace(prof, numeric=prof.numeric[sub],
+                            words=prof.words[sub], n_rows=prof.n_rows[sub])
+    idx = DiscoveryIndex(profiles=prof_small, model=model,
+                         table_ids=lake.table[sub])
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    from repro.core.discovery import rank_sharded as _rs
+    scores, ids = _rs(idx, np.asarray([0, 1]), mesh, k=10)
+    assert scores.shape == (2, 10)
+    s_ref, _ = rank(idx, np.asarray([0, 1]), k=10, exclude_same_table=False)
+    # same-table exclusion differs; compare only the score multiset of the
+    # shared convention (sharded path never excludes same-table)
+    np.testing.assert_allclose(np.sort(scores, 1), np.sort(s_ref, 1),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_fused_kernel_path_matches_ref(trained):
     lake, prof, model = trained
     qids = np.arange(6)

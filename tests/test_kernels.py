@@ -76,6 +76,20 @@ def test_minhash_sweep(c, r, p):
     assert (np.asarray(out) == np.asarray(want)).all()
 
 
+@pytest.mark.parametrize("q,c,b", [(1, 1, 4), (3, 100, 16), (8, 512, 64),
+                                   (11, 777, 32)])
+def test_lsh_probe_sweep(q, c, b):
+    from repro.kernels.lsh_probe import lsh_probe_pallas
+    qk = RNG.integers(0, 50, (q, b)).astype(np.uint32)   # small key space
+    ck = RNG.integers(0, 50, (c, b)).astype(np.uint32)   # -> plenty of hits
+    ck[-1, 0] = qk[0, 0]                                 # guaranteed hit
+    out = lsh_probe_pallas(jnp.asarray(qk), jnp.asarray(ck),
+                           block_q=4, block_c=128, interpret=True)
+    want = ref.lsh_probe_ref(jnp.asarray(qk), jnp.asarray(ck))
+    assert (np.asarray(out) == np.asarray(want)).all()
+    assert np.asarray(out).any()                         # sweep isn't vacuous
+
+
 def test_minhash_jaccard_estimator():
     """Signatures estimate set Jaccard within MinHash sampling error."""
     n = 4000

@@ -1,0 +1,277 @@
+"""Online discovery service: catalog persistence, incremental maintenance,
+LSH pruning quality, engine batching/caching — the acceptance end-to-end."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import GBDTConfig, LakeSpec, generate_lake, select_queries, \
+    train_quality_model
+from repro.service import (ColumnCatalog, DiscoveryEngine, DiscoveryRequest,
+                           EngineConfig, LSHConfig, add_lake, band_keys,
+                           measure_recall, serve_discovery)
+
+
+@pytest.fixture(scope="module")
+def lake_and_model():
+    lake = generate_lake(LakeSpec(n_domains=10, n_tables=24, row_budget=2048,
+                                  rows_log_mean=6.8, coverage_range=(0.5, 1.0),
+                                  gran_ratio=(4, 8), seed=7))
+    model = train_quality_model([lake], GBDTConfig(n_trees=30, depth=4),
+                                n_query=64)
+    return lake, model
+
+
+@pytest.fixture(scope="module")
+def catalog_dir(lake_and_model, tmp_path_factory):
+    lake, _ = lake_and_model
+    root = str(tmp_path_factory.mktemp("catalog"))
+    catalog = ColumnCatalog(root, n_perm=128)
+    add_lake(catalog, lake)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# catalog
+# ---------------------------------------------------------------------------
+
+def test_catalog_persists_and_restarts(lake_and_model, catalog_dir):
+    lake, _ = lake_and_model
+    reopened = ColumnCatalog(catalog_dir)            # fresh process analogue
+    snap = reopened.snapshot()
+    assert snap.n_columns == lake.n_columns
+    assert len(snap.names) == lake.n_columns
+    assert snap.signatures.shape == (lake.n_columns, 128)
+    assert len(reopened.tables()) == len(np.unique(lake.batch.table_ids))
+    # profiles survived the disk round-trip bit-exact
+    from repro.core import profile_lake
+    prof = profile_lake(lake.batch)
+    # catalog ingests per-table; column order is table-major and the lake
+    # generator already emits table-major order, so rows align
+    np.testing.assert_allclose(snap.profiles.numeric, prof.numeric,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_catalog_incremental_add_drop_compact(tmp_path):
+    cat = ColumnCatalog(str(tmp_path), n_perm=64)
+    cat.add_table("a", [("x", [f"v{i}" for i in range(50)]),
+                        ("y", [f"w{i % 7}" for i in range(50)])])
+    cat.add_table("b", [("z", [f"v{i}" for i in range(30)])])
+    assert cat.snapshot().n_columns == 3
+
+    with pytest.raises(ValueError):
+        cat.add_table("a", [("dup", ["1"])])         # duplicate name
+
+    cat.drop_table("a")
+    snap = cat.snapshot()
+    assert snap.n_columns == 1 and snap.names == ["z"]
+
+    n_seg_before = len(cat.manifest["segments"])
+    cat.compact()
+    assert len(cat.manifest["segments"]) == 1
+    snap2 = cat.snapshot()
+    assert snap2.n_columns == 1 and snap2.names == ["z"]
+    np.testing.assert_array_equal(snap.signatures, snap2.signatures)
+    # old segment dirs are gone
+    segs = [d for d in os.listdir(str(tmp_path)) if d.startswith("seg-")]
+    assert len(segs) == 1 and n_seg_before > 1
+
+    with pytest.raises(KeyError):
+        cat.drop_table("nope")
+
+
+def test_catalog_empty_snapshot(tmp_path):
+    cat = ColumnCatalog(str(tmp_path))
+    snap = cat.snapshot()
+    assert snap.n_columns == 0
+    # engine over an empty catalog answers gracefully
+    eng = DiscoveryEngine(snap, _tiny_model())
+    r = eng.query(DiscoveryRequest(values=["a", "b"]))
+    assert r.matches == []
+
+
+def _tiny_model():
+    from repro.core.gbdt import GBDTParams
+    from repro.core.predictor import JoinQualityModel
+    p = GBDTParams(feats=np.zeros((1, 1), np.int32),
+                   thrs=np.zeros((1, 1), np.float32),
+                   leaves=np.zeros((1, 2), np.float32), base=0.0)
+    return JoinQualityModel(gbdt=p)
+
+
+# ---------------------------------------------------------------------------
+# LSH layer
+# ---------------------------------------------------------------------------
+
+def test_band_keys_shape_and_determinism(lake_and_model, catalog_dir):
+    snap = ColumnCatalog(catalog_dir).snapshot()
+    k1 = band_keys(snap.signatures, 64)
+    k2 = band_keys(snap.signatures, 64)
+    assert k1.shape == (snap.n_columns, 64)
+    np.testing.assert_array_equal(k1, k2)
+    # identical signatures -> identical keys; different rows differ somewhere
+    assert (band_keys(snap.signatures[:1], 64) == k1[:1]).all()
+    assert (k1[0] != k1[1]).any()
+
+
+def test_band_keys_rejects_too_many_bands():
+    sigs = np.zeros((2, 16), np.uint32)
+    with pytest.raises(ValueError):
+        band_keys(sigs, 32)
+
+
+def test_lsh_tradeoff_is_monotone(lake_and_model, catalog_dir):
+    """More bands (fewer rows per band) -> candidate sets only grow."""
+    from repro.core import DiscoveryIndex, rank
+    from repro.service.lsh import measure_tradeoff
+    lake, model = lake_and_model
+    snap = ColumnCatalog(catalog_dir).snapshot()
+    idx = DiscoveryIndex(profiles=snap.profiles, model=model,
+                         table_ids=snap.table_ids)
+    qids = np.arange(0, min(12, snap.n_columns))
+    _, top_ids = rank(idx, qids, k=10)
+    curve = measure_tradeoff(snap.signatures, top_ids, qids,
+                             band_choices=(16, 32, 64))
+    fracs = [p["candidate_fraction"] for p in curve]
+    assert fracs == sorted(fracs), curve
+    recalls = [p["recall"] for p in curve]
+    assert recalls[-1] >= recalls[0], curve
+
+
+# ---------------------------------------------------------------------------
+# engine: acceptance end-to-end
+# ---------------------------------------------------------------------------
+
+def test_end_to_end_service(lake_and_model, catalog_dir):
+    """ISSUE acceptance: persist → restart → incremental add → serve a batch
+    with recall@10 ≥ 0.9 vs brute force while scoring < 25% of the lake."""
+    lake, model = lake_and_model
+
+    # restart the engine from disk
+    engine = DiscoveryEngine.from_catalog(
+        ColumnCatalog(catalog_dir), model,
+        EngineConfig(k=10, mode="lsh", lsh=LSHConfig(n_bands=64),
+                     candidate_frac=0.2))
+    n0 = engine.n_columns
+    assert n0 == lake.n_columns
+
+    # incremental add: a new table appears without reprofiling the lake
+    catalog = ColumnCatalog(catalog_dir)
+    if "incremental" not in catalog.tables():
+        catalog.add_table("incremental",
+                          [("inc_a", [f"v{i}" for i in range(400)]),
+                           ("inc_b", [f"u{i % 13}" for i in range(200)])])
+    engine.refresh(catalog.snapshot())
+    assert engine.n_columns == n0 + 2
+
+    # serve a batch; recall + pruning vs the brute-force scan
+    qids = select_queries(lake, 16)
+    reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
+            for q in qids]
+    responses = list(serve_discovery(engine, reqs, max_batch=8))
+    assert len(responses) == len(reqs)
+    for r in responses:
+        assert r.n_candidates < 0.25 * engine.n_columns
+        assert all(np.isfinite(m.score) for m in r.matches)
+
+    rec = measure_recall(engine, qids, k=10)
+    assert rec["recall"] >= 0.9, rec
+    assert rec["scored_fraction"] < 0.25, rec
+
+
+def test_engine_lru_cache(lake_and_model, catalog_dir):
+    lake, model = lake_and_model
+    engine = DiscoveryEngine.from_catalog(ColumnCatalog(catalog_dir), model,
+                                          EngineConfig(k=5))
+    req = DiscoveryRequest(name="q", column_id=3)
+    r1 = engine.query(req)
+    r2 = engine.query(DiscoveryRequest(name="q2", column_id=3))
+    assert not r1.cached and r2.cached
+    assert [m.column_id for m in r1.matches] == \
+           [m.column_id for m in r2.matches]
+    # refresh invalidates
+    engine.refresh(engine.snapshot)
+    assert engine.query(req).cached is False
+
+
+def test_engine_cache_eviction(lake_and_model, catalog_dir):
+    lake, model = lake_and_model
+    engine = DiscoveryEngine.from_catalog(
+        ColumnCatalog(catalog_dir), model,
+        EngineConfig(k=3, cache_entries=4))
+    for cid in range(8):
+        engine.query(DiscoveryRequest(column_id=cid))
+    assert len(engine._cache) == 4
+    assert engine.query(DiscoveryRequest(column_id=0)).cached is False
+    assert engine.query(DiscoveryRequest(column_id=7)).cached is True
+
+
+def test_engine_external_query_matches_resident(lake_and_model, catalog_dir):
+    """Uploading a column's values finds the same neighborhood as querying
+    the resident column id."""
+    lake, model = lake_and_model
+    engine = DiscoveryEngine.from_catalog(ColumnCatalog(catalog_dir), model,
+                                          EngineConfig(k=5))
+    # rebuild raw-ish strings for a resident column is impossible (the lake
+    # is hash-level), so check the external path on string columns instead:
+    vals_a = [f"city_{i % 60}" for i in range(600)]
+    vals_b = [f"city_{i % 60}" for i in range(300)]
+    catalog = ColumnCatalog(catalog_dir)
+    if "strtab" not in catalog.tables():
+        catalog.add_table("strtab", [("cities", vals_a)])
+    engine.refresh(catalog.snapshot())
+    r = engine.query(DiscoveryRequest(name="upload", values=vals_b))
+    assert any(m.column == "cities" for m in r.matches), r.matches
+
+
+def test_engine_full_mode_matches_core_rank(lake_and_model, catalog_dir):
+    lake, model = lake_and_model
+    from repro.core import DiscoveryIndex, rank
+    snap = ColumnCatalog(catalog_dir).snapshot()
+    engine = DiscoveryEngine(snap, model,
+                             EngineConfig(k=5, mode="full"))
+    idx = DiscoveryIndex(profiles=snap.profiles, model=model,
+                         table_ids=snap.table_ids)
+    qids = select_queries(lake, 6)
+    scores, ids = rank(idx, qids, k=5)
+    responses = engine.query_batch(
+        [DiscoveryRequest(column_id=int(q)) for q in qids])
+    for row, resp in enumerate(responses):
+        got = [m.column_id for m in resp.matches]
+        want = [int(i) for i, s in zip(ids[row], scores[row])
+                if np.isfinite(s)]
+        assert got == want
+
+
+@pytest.mark.parametrize("exclude", [False, True])
+def test_engine_sharded_mode(lake_and_model, catalog_dir, exclude):
+    import jax
+    lake, model = lake_and_model
+    snap = ColumnCatalog(catalog_dir).snapshot()
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    eng_sh = DiscoveryEngine(snap, model,
+                             EngineConfig(k=5, mode="sharded",
+                                          exclude_same_table=exclude),
+                             mesh=mesh)
+    eng_full = DiscoveryEngine(snap, model,
+                               EngineConfig(k=5, mode="full",
+                                            exclude_same_table=exclude))
+    qids = select_queries(lake, 4)
+    reqs = [DiscoveryRequest(column_id=int(q)) for q in qids]
+    r_sh = eng_sh.query_batch(reqs)
+    r_full = eng_full.query_batch(list(reqs))
+    for q, a, b in zip(qids, r_sh, r_full):
+        sa = np.asarray([m.score for m in a.matches])
+        sb = np.asarray([m.score for m in b.matches])
+        np.testing.assert_allclose(sa, sb, rtol=1e-4, atol=1e-5)
+        if exclude:
+            qt = int(snap.table_ids[int(q)])
+            assert all(int(snap.table_ids[m.column_id]) != qt
+                       for m in a.matches)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        DiscoveryRequest()                      # neither
+    with pytest.raises(ValueError):
+        DiscoveryRequest(column_id=1, values=["a"])   # both

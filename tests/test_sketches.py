@@ -50,3 +50,44 @@ def test_self_join_is_maximal():
     s = sketch_from_hashes(np.arange(100, dtype=np.uint64))
     m = pair_metrics_np(s, s)
     assert m["j_multi"] == 0.5 and m["k"] == 1.0 and m["jaccard"] == 1.0
+
+
+def _metrics_self(packed):
+    args = [jnp.asarray(a) for a in (packed.values, packed.counts,
+                                     packed.card, packed.n_rows)]
+    return batch_exact_metrics(*args, *args)
+
+
+def test_pack_sketches_empty_list():
+    p = pack_sketches([])
+    assert p.values.shape == (0, 1) and p.card.shape == (0,)
+    m = _metrics_self(p)
+    assert all(v.shape == (0, 0) for v in m.values())
+
+
+def test_pack_sketches_all_empty_sketches():
+    """Sketches with zero distinct values must not produce zero-width packing
+    (regression: k collapsed to 0 and the searchsorted probe crashed)."""
+    empty = sketch_from_hashes(np.zeros((0,), np.uint64))
+    p = pack_sketches([empty, empty])
+    assert p.values.shape[1] >= 1
+    assert (p.card == 0).all()
+    m = _metrics_self(p)
+    assert float(m["j_multi"][0, 1]) == 0.0
+    assert float(m["jaccard"][0, 1]) == 0.0
+
+
+def test_pack_sketches_k_max_zero():
+    """k_max=0 used to be silently replaced by the cardinality cap."""
+    s = sketch_from_hashes(np.arange(5, dtype=np.uint64))
+    p = pack_sketches([s], k_max=0)
+    assert p.values.shape == (1, 1)
+    assert p.card[0] == 1          # truncated to the packing width
+    m = _metrics_self(p)
+    assert np.isfinite(np.asarray(m["j_multi"])).all()
+
+
+def test_pack_sketches_k_max_truncates():
+    s = sketch_from_hashes(np.arange(10, dtype=np.uint64))
+    p = pack_sketches([s], k_max=4)
+    assert p.values.shape == (1, 4) and p.card[0] == 4
