@@ -4,6 +4,14 @@ sizes, LSH-pruned vs full scan, via the real catalog (disk round-trip).
 Emits ``BENCH_service.json``:
   {"lakes": [{"n_columns": ..., "modes": {"lsh": {...}, "full": {...}},
               "speedup_lsh_over_full": ...}, ...]}
+
+Per-mode stats record the planner's chosen plan (``plan``) and the
+shard-aware ``scored_fraction`` (global columns scored / lake size, psum-ed
+over devices when the plan shards), so the JSON stays honest whether the
+engine ran locally or over a mesh.
+
+``--smoke`` runs one small lake in seconds and **fails (exit 1) on a
+recall@10 regression below the gate** — the CI hook after the tier-1 suite.
 """
 from __future__ import annotations
 
@@ -18,8 +26,11 @@ from benchmarks.common import Timer, bench_lake, bench_model
 
 OUT_JSON = "BENCH_service.json"
 TABLE_SIZES = (20, 45, 90)
+SMOKE_TABLE_SIZES = (90,)
 N_QUERIES = 24
+SMOKE_N_QUERIES = 12
 BATCH = 8
+RECALL_GATE = 0.9
 
 
 def _bench_engine(engine, qids, requests):
@@ -38,25 +49,30 @@ def _bench_engine(engine, qids, requests):
         with Timer() as t:
             engine.query(req)
         lats.append(t.s * 1e3)
+    plan = engine.stats().get("last_plan", {})
     return {
         "qps": qps,
         "batch_ms_per_query": t_batch.s / len(requests) * 1e3,
         "p50_ms": float(np.percentile(lats, 50)),
         "p99_ms": float(np.percentile(lats, 99)),
+        "plan": plan.get("kind"),
+        "plan_budget": plan.get("budget"),
     }
 
 
-def run():
+def run(smoke: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
                                add_lake, measure_recall)
 
+    table_sizes = SMOKE_TABLE_SIZES if smoke else TABLE_SIZES
+    n_queries = SMOKE_N_QUERIES if smoke else N_QUERIES
     model = bench_model()
     rows = []
-    record = {"lakes": []}
+    record = {"lakes": [], "smoke": smoke}
 
-    for n_tables in TABLE_SIZES:
+    for n_tables in table_sizes:
         lake = bench_lake(seed=1, n_tables=n_tables)
         root = tempfile.mkdtemp(prefix=f"freyja_bench_{n_tables}_")
         try:
@@ -68,7 +84,7 @@ def run():
             shutil.rmtree(root, ignore_errors=True)
         c = snapshot.n_columns
 
-        qids = select_queries(lake, N_QUERIES)
+        qids = select_queries(lake, n_queries)
         requests = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
                     for q in qids]
 
@@ -88,10 +104,10 @@ def run():
             rows.append((f"service/{mode}/C{c}",
                          stats["batch_ms_per_query"] * 1e3,
                          f"{stats['qps']:.1f} QPS p50={stats['p50_ms']:.1f}ms "
-                         f"p99={stats['p99_ms']:.1f}ms"))
+                         f"p99={stats['p99_ms']:.1f}ms plan={stats['plan']}"))
 
         # recall-vs-pruning curve of the raw LSH layer (no profile proxy)
-        if n_tables == TABLE_SIZES[-1]:
+        if not smoke and n_tables == table_sizes[-1]:
             from repro.core import DiscoveryIndex, rank
             from repro.service.lsh import measure_tradeoff
             idx = DiscoveryIndex(profiles=snapshot.profiles, model=model,
@@ -112,9 +128,24 @@ def run():
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
     rows.append(("service/json", 0.0, os.path.abspath(OUT_JSON)))
+
+    worst = min(e["modes"]["lsh"]["recall_at_10"] for e in record["lakes"])
+    rows.append(("service/recall_gate", 0.0,
+                 f"worst recall@10 {worst:.3f} vs gate {RECALL_GATE}"))
+    # the gate is enforced in smoke mode (CI); the full sweep also covers
+    # deliberately hard small lakes where the pruned plan sits below it
+    if smoke and worst < RECALL_GATE:
+        raise SystemExit(
+            f"RECALL REGRESSION: recall@10 {worst:.3f} < "
+            f"gate {RECALL_GATE} (see {os.path.abspath(OUT_JSON)})")
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small lake, fast; exit 1 below the recall gate")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
         print(",".join(map(str, r)))

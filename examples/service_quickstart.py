@@ -57,6 +57,13 @@ def main():
         for m in resp.matches:
             print(f"  {m.table}.{m.column}  q={m.score:.3f}")
 
+    stats = engine.stats()
+    plan = stats.get("last_plan", {})
+    print(f"served via plan {plan.get('kind')} "
+          f"(budget {plan.get('budget')}); "
+          f"cache {stats['cache']['hits']} hits / "
+          f"{stats['cache']['misses']} misses")
+
 
 if __name__ == "__main__":
     main()

@@ -1,28 +1,27 @@
-"""Discovery-by-attribute (paper Definition 1) — local and multi-pod paths.
+"""Discovery-by-attribute (paper Definition 1) — thin adapters over
+``repro.exec``.
 
-The lake index holds profiles only (the paper's point: a few KB per column).
-Query path: distance features → GBDT inference → top-k ranking.
+The lake index holds profiles only (the paper's point: a few KB per
+column). Both entry points route through the unified candidate→score→merge
+executor (``repro.exec``): :func:`rank` runs the local full-scan plan,
+:func:`rank_sharded` the mesh-sharded one — profiles sharded over the
+mesh's batch-like axes, every device scores its shard, takes a local
+top-k, and a single small ``all_gather`` (k × devices candidate
+(score, id) pairs) merges rankings; collective bytes are
+O(Q · k · devices), independent of lake size.
 
-Distributed path (`rank_sharded`): profiles are sharded over the mesh's
-batch-like axes (``data``, and ``pod`` when multi-pod) with `shard_map`;
-every device scores its shard of the lake against the (replicated) query
-profiles, takes a **local** top-k, and a single small `all_gather`
-(k × devices candidate (score, id) pairs) merges rankings — collective
-bytes are O(Q · k · devices), independent of lake size.
+The legacy in-module pipelines (``_rank_local``, ``build_rank_sharded``)
+were deleted in the executor refactor; ``service.engine`` shares the same
+executor, so the scoring math exists exactly once.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import features as FT
-from repro.core.predictor import (JoinQualityModel, distance_features_ref,
-                                  gbdt_predict_ref)
+from repro.core.predictor import JoinQualityModel
 from repro.core.profiles import LakeProfiles
 
 
@@ -38,37 +37,28 @@ class DiscoveryIndex:
         return self.profiles.n_columns
 
 
-def _score_block(z_q, w_q, z_c, w_c, gbdt_tuple, exclude_table=None, tq=None, tc=None):
-    """Scores (Q, N) for query profiles vs a corpus block."""
-    d = distance_features_ref(z_q[:, None], w_q[:, None], z_c[None], w_c[None])
-    s = gbdt_predict_ref(gbdt_tuple, d)
-    if exclude_table is not None and tq is not None:
-        same = tq[:, None] == tc[None]
-        s = jnp.where(same, -jnp.inf, s)
-    return s
+def _executor(index: DiscoveryIndex, mesh=None):
+    from repro.exec import Executor
+    return Executor(index.profiles.zscored, index.profiles.words,
+                    index.model.gbdt.astuple(), table_ids=index.table_ids,
+                    mesh=mesh)
 
 
-@partial(jax.jit, static_argnames=("k", "exclude_same_table"))
-def _rank_local(z, w, tids, query_ids, gbdt_tuple, k: int,
-                exclude_same_table: bool = True):
-    zq, wq, tq = z[query_ids], w[query_ids], tids[query_ids]
-    s = _score_block(zq, wq, z, w, gbdt_tuple,
-                     exclude_table=exclude_same_table or None, tq=tq, tc=tids)
-    # never return the query itself
-    n = z.shape[0]
-    s = jnp.where(jnp.arange(n)[None] == query_ids[:, None], -jnp.inf, s)
-    scores, ids = jax.lax.top_k(s, k)
-    return scores, ids
+def _query_rows(index: DiscoveryIndex, query_ids: np.ndarray,
+                exclude_same_table: bool):
+    qid = np.asarray(query_ids, np.int32)
+    zq = index.profiles.zscored[qid].astype(np.float32)
+    wq = index.profiles.words[qid]
+    if exclude_same_table and index.table_ids is not None:
+        tq = np.asarray(index.table_ids, np.int32)[qid]
+    else:
+        tq = np.full((len(qid),), -1, np.int32)
+    return zq, wq, tq, qid
 
 
-def _pad_topk(scores: np.ndarray, ids: np.ndarray, k: int):
-    """Pad (Q, k_eff) top-k results out to k columns (-inf scores, -1 ids)."""
-    k_eff = scores.shape[1]
-    if k_eff >= k:
-        return scores, ids
-    pad = ((0, 0), (0, k - k_eff))
-    return (np.pad(scores, pad, constant_values=-np.inf),
-            np.pad(ids, pad, constant_values=-1))
+def _empty(q: int, k: int):
+    return (np.full((q, k), -np.inf, np.float32),
+            np.full((q, k), -1, np.int32))
 
 
 def rank(index: DiscoveryIndex, query_ids: np.ndarray, k: int = 10,
@@ -77,144 +67,31 @@ def rank(index: DiscoveryIndex, query_ids: np.ndarray, k: int = 10,
 
     ``k`` may exceed the lake size; the tail is padded with -inf / -1.
     """
-    n = index.n_columns
-    q = len(query_ids)
-    if n == 0:
-        return (np.full((q, k), -np.inf, np.float32),
-                np.full((q, k), -1, np.int32))
-    k_eff = min(k, n)
-    z = jnp.asarray(index.profiles.zscored, jnp.float32)
-    w = jnp.asarray(index.profiles.words)
-    t = jnp.asarray(index.table_ids if index.table_ids is not None
-                    else np.zeros((index.n_columns,), np.int32))
-    gb = tuple(map(jnp.asarray, index.model.gbdt.astuple()))
-    scores, ids = _rank_local(z, w, t, jnp.asarray(query_ids, jnp.int32), gb,
-                              k_eff, exclude_same_table)
-    return _pad_topk(np.asarray(scores), np.asarray(ids), k)
-
-
-# ---------------------------------------------------------------------------
-# sharded path
-# ---------------------------------------------------------------------------
-
-def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
-    pad = [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
-    return np.pad(x, pad, constant_values=fill)
-
-
-def build_rank_sharded(mesh: Mesh, k: int, gbdt_tuple, *, shard_axes=("data",),
-                       block: int = 4096, with_tables: bool = False):
-    """Builds the jitted sharded ranking fn over ``mesh``.
-
-    Column-axis tensors are sharded over ``shard_axes``; queries and model
-    parameters are replicated. Returns fn(z, w, cids, zq, wq, qids) ->
-    (scores, ids) with global column ids. With ``with_tables`` the fn takes
-    two extra args (tids sharded, tq replicated) and masks columns whose
-    table matches the query's (tq=-1 disables the mask for that query).
-
-    Scoring streams the local corpus in blocks of ``block`` columns (the
-    jnp mirror of the fused Pallas kernel): the (Q, N, F) distance tensor
-    never materializes, so HBM traffic is the profiles themselves + the
-    (Q, N) score row — bandwidth-bound at profile size.
-    """
-    from jax.experimental.shard_map import shard_map
-
-    axes = tuple(shard_axes)
-
-    def local_rank(z, w, cids, zq, wq, qids, *rest):
-        nloc = z.shape[0]
-        kl = min(k, nloc)              # shard may hold fewer than k columns
-        nb = max(nloc // block, 1)
-
-        def score_blk(args):
-            zb, wb = args
-            d = distance_features_ref(zq[:, None], wq[:, None], zb[None], wb[None])
-            return gbdt_predict_ref(gbdt_tuple, d)          # (Q, block)
-
-        if nloc % block == 0 and nloc > block:
-            zc = z.reshape(nb, block, z.shape[1])
-            wc = w.reshape(nb, block, w.shape[1])
-            s = jax.lax.map(score_blk, (zc, wc))            # (nb, Q, block)
-            s = jnp.moveaxis(s, 0, 1).reshape(zq.shape[0], nloc)
-        else:
-            s = score_blk((z, w))
-        s = jnp.where(cids[None] >= 0, s, -jnp.inf)        # padding columns
-        s = jnp.where(cids[None] == qids[:, None], -jnp.inf, s)  # self
-        if with_tables:
-            tids, tq = rest
-            same = (tq[:, None] >= 0) & (tids[None] == tq[:, None])
-            s = jnp.where(same, -jnp.inf, s)
-        ls, li = jax.lax.top_k(s, kl)                      # (Q, kl) local
-        lids = cids[li]
-        # gather the small candidate sets from every shard and re-rank
-        all_s = ls
-        all_i = lids
-        for ax in axes:
-            all_s = jax.lax.all_gather(all_s, ax, axis=1, tiled=True)
-            all_i = jax.lax.all_gather(all_i, ax, axis=1, tiled=True)
-        gs, gi = jax.lax.top_k(all_s, min(k, all_s.shape[1]))
-        return gs, jnp.take_along_axis(all_i, gi, axis=1)
-
-    in_specs = (P(axes), P(axes), P(axes), P(), P(), P())
-    if with_tables:
-        in_specs = in_specs + (P(axes), P())
-    out_specs = (P(), P())
-    fn = shard_map(local_rank, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
-    return jax.jit(fn)
-
-
-def place_sharded_corpus(mesh: Mesh, shard_axes, z: np.ndarray, w: np.ndarray,
-                         table_ids: np.ndarray | None = None) -> dict:
-    """Pad the column axis to a multiple of the shard count and device_put
-    the corpus tensors for ``build_rank_sharded``.
-
-    Returns ``{"z", "w", "cids", "rep"[, "tids"]}`` — ``cids`` are global
-    column ids (-1 on padding), ``tids`` pad with -2 (matches no real table
-    and no disabled-query sentinel), ``rep`` is the replicated sharding for
-    the query-side tensors.
-    """
-    n = z.shape[0]
-    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
-    n_pad = -(-n // n_shards) * n_shards
-    shard = NamedSharding(mesh, P(tuple(shard_axes)))
-    out = {
-        "z": jax.device_put(_pad_to(z.astype(np.float32), n_pad, 0.0), shard),
-        "w": jax.device_put(_pad_to(w, n_pad, FT.HASH_SENTINEL), shard),
-        "cids": jax.device_put(
-            _pad_to(np.arange(n, dtype=np.int32), n_pad, -1), shard),
-        "rep": NamedSharding(mesh, P()),
-    }
-    if table_ids is not None:
-        out["tids"] = jax.device_put(
-            _pad_to(np.asarray(table_ids, np.int32), n_pad, -2), shard)
-    return out
+    from repro.exec import Planner, PlannerConfig
+    if index.n_columns == 0:
+        return _empty(len(query_ids), k)
+    plan = Planner(PlannerConfig(k=k)).plan(
+        n_columns=index.n_columns, n_queries=len(query_ids), mode="full")
+    zq, wq, tq, qid = _query_rows(index, query_ids, exclude_same_table)
+    scores, ids, _ = _executor(index).execute(plan, zq, wq, tq, qid)
+    return scores, ids
 
 
 def rank_sharded(index: DiscoveryIndex, query_ids: np.ndarray, mesh: Mesh,
                  k: int = 10, shard_axes=("data",)):
     """Multi-device ranking over ``mesh`` (profiles sharded over columns).
 
-    Like :func:`rank`, ``k`` may exceed the lake (or shard) size; results are
-    padded out to k with -inf / -1.
+    Like :func:`rank`, ``k`` may exceed the lake (or shard) size; results
+    are padded out to k with -inf / -1. Same-table exclusion is off (the
+    historical convention of this entry point — pass table ids through the
+    service engine for masked sharded queries).
     """
-    n = index.n_columns
-    if n == 0:
-        q = len(query_ids)
-        return (np.full((q, k), -np.inf, np.float32),
-                np.full((q, k), -1, np.int32))
-
-    corpus = place_sharded_corpus(mesh, shard_axes,
-                                  index.profiles.zscored,
-                                  index.profiles.words)
-    zq = index.profiles.zscored[query_ids].astype(np.float32)
-    wq = index.profiles.words[query_ids]
-
-    gb = tuple(map(jnp.asarray, index.model.gbdt.astuple()))
-    fn = build_rank_sharded(mesh, k, gb, shard_axes=shard_axes)
-
-    rep = corpus["rep"]
-    scores, ids = fn(corpus["z"], corpus["w"], corpus["cids"],
-                     jax.device_put(zq, rep), jax.device_put(wq, rep),
-                     jax.device_put(np.asarray(query_ids, np.int32), rep))
-    return _pad_topk(np.asarray(scores), np.asarray(ids), k)
+    from repro.exec import Planner, PlannerConfig
+    if index.n_columns == 0:
+        return _empty(len(query_ids), k)
+    plan = Planner(PlannerConfig(k=k, shard_axes=tuple(shard_axes))).plan(
+        n_columns=index.n_columns, n_queries=len(query_ids), mode="sharded",
+        mesh=mesh)
+    zq, wq, tq, qid = _query_rows(index, query_ids, exclude_same_table=False)
+    scores, ids, _ = _executor(index, mesh=mesh).execute(plan, zq, wq, tq, qid)
+    return scores, ids

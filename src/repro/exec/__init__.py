@@ -1,0 +1,29 @@
+"""Unified query-execution layer for join discovery.
+
+Every discovery query — the offline ``core.discovery`` entry points and
+the online ``service.DiscoveryEngine`` alike — decomposes into the same
+three composable stages:
+
+* **candidate generation** (``stages.candidate_priorities``): full-scan
+  mask, LSH bucket probe (Pallas kernel), or hybrid profile-proximity;
+* **scoring** (``stages.score_columns`` / ``score_streamed``): GBDT over
+  distance features, locally or ``shard_map``-sharded over the mesh;
+* **top-k merge** (``stages.merge_topk`` / ``merge_topk_sharded``): local
+  ``top_k``, or per-device top-k + one small ``all_gather``.
+
+The :class:`Planner` resolves (mode, lake size, mesh availability,
+candidate budget) into a :class:`QueryPlan` using the analytic per-stage
+cost model in ``launch.costmodel`` (injectable), and the
+:class:`Executor` runs any plan against one corpus view.
+"""
+from repro.exec.executor import Executor, pad_topk
+from repro.exec.plan import MODES, Planner, PlannerConfig, QueryPlan
+from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
+from repro.exec.stages import CANDIDATE_KINDS
+
+__all__ = [
+    "Executor", "pad_topk",
+    "MODES", "Planner", "PlannerConfig", "QueryPlan",
+    "build_sharded_pipeline", "place_sharded_corpus",
+    "CANDIDATE_KINDS",
+]

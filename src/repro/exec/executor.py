@@ -1,0 +1,196 @@
+"""Executor: runs a QueryPlan's candidate→score→merge pipeline on a corpus.
+
+One ``Executor`` wraps one immutable corpus view (profiles, table ids,
+optional LSH band keys) plus the GBDT parameters, and executes any
+:class:`~repro.exec.plan.QueryPlan` against it:
+
+* local plans dispatch to module-level jitted pipelines (cached by jax
+  across executors, so a catalog refresh never recompiles);
+* sharded plans place the corpus over the mesh **once** (cached on the
+  executor — the seed implementation re-placed per query batch) and build
+  one ``shard_map`` pipeline per (stage kinds, k, budget) shape.
+
+Both ``core.discovery.rank``/``rank_sharded`` and the service's
+``DiscoveryEngine`` are thin adapters over this class — the single copy of
+the scoring pipeline in the repo.
+
+The returned contract is uniform: ``(scores (Q, k), global ids (Q, k),
+n_scored (Q,))`` as numpy, padded with -inf / -1 when fewer than k columns
+are rankable, with ``n_scored`` the *global* number of columns the GBDT
+actually scored per query (psum-ed over shards on a mesh).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.exec import stages
+from repro.exec.plan import QueryPlan
+from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_topk(scores: np.ndarray, ids: np.ndarray, k: int):
+    """Pad (Q, k_eff) top-k results out to k columns (-inf scores, -1 ids)."""
+    k_eff = scores.shape[1]
+    if k_eff >= k:
+        return scores[:, :k], ids[:, :k]
+    pad = ((0, 0), (0, k - k_eff))
+    return (np.pad(scores, pad, constant_values=-np.inf),
+            np.pad(ids, pad, constant_values=-1))
+
+
+# ---------------------------------------------------------------------------
+# local pipelines (jitted once per shape at module level)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "block"))
+def _local_all(zq, wq, tq, qid, z, w, cids, tids, gbdt_tuple,
+               k: int, block: int):
+    s = stages.score_streamed(zq, wq, z, w, gbdt_tuple, block=block)
+    s = jnp.where(stages.exclusion_mask(cids, tids, tq, qid), -jnp.inf, s)
+    sc, ids = stages.merge_topk(s, cids, k)
+    n = jnp.full((zq.shape[0],), z.shape[0], jnp.int32)
+    return sc, ids, n
+
+
+@partial(jax.jit, static_argnames=("kind", "k", "budget", "interpret"))
+def _local_pruned(zq, wq, qkeys, tq, qid, z, w, ckeys, cids, tids,
+                  gbdt_tuple, kind: str, k: int, budget: int,
+                  interpret: bool):
+    prio = stages.candidate_priorities(kind, zq, qkeys, z, ckeys, cids,
+                                       tids, tq, qid, interpret=interpret)
+    pos, valid = stages.gather_candidates(prio, budget)
+    s = stages.score_columns(zq, wq, z[pos], w[pos], gbdt_tuple)
+    s = jnp.where(valid, s, -jnp.inf)
+    sc, ids = stages.merge_topk(s, cids[pos], k)
+    return sc, ids, valid.sum(axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+class Executor:
+    """Executes query plans against one corpus view."""
+
+    def __init__(self, z: np.ndarray, w: np.ndarray, gbdt_tuple,
+                 *, table_ids: np.ndarray | None = None,
+                 band_keys: np.ndarray | None = None, mesh=None,
+                 score_block: int = 4096):
+        self.n_columns = int(z.shape[0])
+        self._z_np = np.asarray(z, np.float32)
+        self._w_np = np.asarray(w)
+        self._tids_np = (np.asarray(table_ids, np.int32)
+                         if table_ids is not None
+                         else np.zeros((self.n_columns,), np.int32))
+        self._ckeys_np = (np.asarray(band_keys, np.uint32)
+                          if band_keys is not None else None)
+        self._gbdt = tuple(map(jnp.asarray, gbdt_tuple))
+        self.mesh = mesh
+        self.score_block = int(score_block)
+        # device-resident copies for the local pipelines
+        self._z = jnp.asarray(self._z_np)
+        self._w = jnp.asarray(self._w_np)
+        self._cids = jnp.arange(self.n_columns, dtype=jnp.int32)
+        self._tids = jnp.asarray(self._tids_np)
+        self._ckeys = (jnp.asarray(self._ckeys_np)
+                       if self._ckeys_np is not None else None)
+        # sharded state, built lazily per shard_axes
+        self._placed: dict[tuple, dict] = {}
+        self._pipelines: dict[tuple, object] = {}
+
+    # -- sharded state ------------------------------------------------------
+
+    def _corpus(self, plan: QueryPlan) -> dict:
+        # one placement per shard_axes: band keys ride along whenever the
+        # executor has them, so an "all" plan and a pruned plan (e.g. the
+        # recall baseline next to the served plan) share the z/w/cids/tids
+        # device copies instead of double-placing the corpus
+        key = plan.shard_axes
+        if key not in self._placed:
+            self._placed[key] = place_sharded_corpus(
+                self.mesh, plan.shard_axes, self._z_np, self._w_np,
+                table_ids=self._tids_np, band_keys=self._ckeys_np)
+        return self._placed[key]
+
+    def _pipeline(self, plan: QueryPlan):
+        key = (plan.candidates, plan.k, plan.budget_per_shard,
+               plan.shard_axes)
+        if key not in self._pipelines:
+            self._pipelines[key] = build_sharded_pipeline(
+                self.mesh, self._gbdt, candidates=plan.candidates,
+                k=plan.k,
+                budget_per_shard=(plan.budget_per_shard
+                                  if plan.candidates != "all" else None),
+                shard_axes=plan.shard_axes, block=self.score_block,
+                interpret=_interpret())
+        return self._pipelines[key]
+
+    # -- entry point --------------------------------------------------------
+
+    def execute(self, plan: QueryPlan, zq, wq, tq, qid, qkeys=None):
+        """Run ``plan`` for a query batch.
+
+        ``zq`` (Q, F_NUM) float32, ``wq`` (Q, F_WORDS) uint32; ``tq`` (Q,)
+        table ids to exclude (-1 disables); ``qid`` (Q,) global column id
+        of resident queries (-1 for external); ``qkeys`` (Q, B) LSH band
+        keys, required by pruned plans. Returns numpy
+        ``(scores (Q, k), ids (Q, k), n_scored (Q,))``.
+        """
+        q = int(np.asarray(zq).shape[0])
+        if self.n_columns == 0 or q == 0:
+            return (np.full((q, plan.k), -np.inf, np.float32),
+                    np.full((q, plan.k), -1, np.int32),
+                    np.zeros((q,), np.int32))
+        if plan.candidates != "all":
+            if self._ckeys_np is None:
+                raise ValueError(f"plan {plan.kind!r} needs LSH band keys, "
+                                 f"but this executor has none")
+            if qkeys is None:
+                raise ValueError(f"plan {plan.kind!r} needs query band keys")
+        if plan.sharded:
+            if self.mesh is None:
+                raise ValueError(f"plan {plan.kind!r} needs a mesh")
+            sc, ids, n = self._execute_sharded(plan, zq, wq, tq, qid, qkeys)
+        else:
+            sc, ids, n = self._execute_local(plan, zq, wq, tq, qid, qkeys)
+        sc, ids = pad_topk(np.asarray(sc), np.asarray(ids), plan.k)
+        return sc, ids, np.asarray(n)
+
+    # -- internals ----------------------------------------------------------
+
+    def _execute_local(self, plan, zq, wq, tq, qid, qkeys):
+        zq, wq = jnp.asarray(zq, jnp.float32), jnp.asarray(wq)
+        tq = jnp.asarray(tq, jnp.int32)
+        qid = jnp.asarray(qid, jnp.int32)
+        if plan.candidates == "all":
+            return _local_all(zq, wq, tq, qid, self._z, self._w, self._cids,
+                              self._tids, self._gbdt, plan.k,
+                              self.score_block)
+        budget = min(plan.budget, self.n_columns)
+        return _local_pruned(zq, wq, jnp.asarray(qkeys), tq, qid, self._z,
+                             self._w, self._ckeys, self._cids, self._tids,
+                             self._gbdt, plan.candidates, plan.k,
+                             budget, _interpret())
+
+    def _execute_sharded(self, plan, zq, wq, tq, qid, qkeys):
+        corpus = self._corpus(plan)
+        rep = corpus["rep"]
+        put = lambda a, dt=None: jax.device_put(
+            np.asarray(a, dt) if dt else np.asarray(a), rep)
+        fn = self._pipeline(plan)
+        if plan.candidates == "all":
+            return fn(corpus["z"], corpus["w"], corpus["cids"],
+                      corpus["tids"], put(zq, np.float32), put(wq),
+                      put(tq, np.int32), put(qid, np.int32))
+        return fn(corpus["z"], corpus["w"], corpus["cids"], corpus["tids"],
+                  corpus["ckeys"], put(zq, np.float32), put(wq),
+                  put(qkeys, np.uint32), put(tq, np.int32),
+                  put(qid, np.int32))

@@ -1,0 +1,150 @@
+"""Query planner: lake size × mesh × budget × cost model -> QueryPlan.
+
+A :class:`QueryPlan` names one choice per pipeline stage:
+
+=============  =========================  ==============================
+stage          choices                    picked by
+=============  =========================  ==============================
+candidates     all | lsh | hybrid         mode, or cost model on "auto"
+score          local | sharded            mesh availability + lake size
+merge          top_k | topk+all_gather    follows the score placement
+=============  =========================  ==============================
+
+Plan selection ("auto" mode) compares the analytic per-stage costs
+(``launch.costmodel.discovery_stage_costs`` unless the caller injects a
+different hook): a pruned plan pays the bucket probe + profile proxy over
+*all* columns to score only ``budget`` of them, so it wins exactly when
+``budget`` is small relative to the lake — tiny lakes fall back to the
+brute scan, where the probe overhead would exceed the savings.
+
+The planner is deliberately stateless and cheap: the engine calls it per
+micro-batch (lake size moves with catalog refreshes), and the chosen plan
+is surfaced per query through ``DiscoveryEngine.stats()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.exec.stages import CANDIDATE_KINDS
+
+MODES = ("auto", "lsh", "full", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One fully-resolved execution plan for a query micro-batch."""
+
+    candidates: str                 # "all" | "lsh" | "hybrid"
+    sharded: bool                   # score per shard, merge via all_gather
+    budget: int                     # GLOBAL candidate budget (n for "all")
+    k: int
+    n_shards: int = 1
+    shard_axes: tuple = ("data",)
+    cost: dict = dataclasses.field(default_factory=dict, compare=False)
+
+    def __post_init__(self):
+        if self.candidates not in CANDIDATE_KINDS:
+            raise ValueError(f"unknown candidate stage {self.candidates!r}")
+
+    @property
+    def kind(self) -> str:
+        """Compact label for stats/benchmarks, e.g. ``sharded-hybrid``."""
+        return f"{'sharded' if self.sharded else 'local'}-{self.candidates}"
+
+    @property
+    def budget_per_shard(self) -> int:
+        """Per-device slice of the global budget (ceil split)."""
+        return max(1, -(-self.budget // max(self.n_shards, 1)))
+
+
+@dataclasses.dataclass
+class PlannerConfig:
+    k: int = 10
+    candidate_frac: float = 0.2     # pruned budget as a fraction of the lake
+    max_candidates: int = 4096      # absolute cap on that budget
+    n_bands: int = 64
+    shard_axes: tuple = ("data",)
+    # below this many columns per shard, sharding costs more than it saves
+    # (dispatch + all_gather against a trivial local scan) — "auto" only
+    min_columns_per_shard: int = 64
+
+
+class Planner:
+    """Resolves (mode, lake, mesh) into a :class:`QueryPlan`.
+
+    ``cost_fn(n_queries, n_columns, budget=..., candidates=..., n_bands=...,
+    n_shards=..., k=...)`` must return a dict with at least
+    ``total_flops``; the default is the analytic discovery model in
+    ``launch.costmodel``. Injecting a measured model here is the hook the
+    ROADMAP's tuning items plug into.
+    """
+
+    def __init__(self, config: PlannerConfig | None = None,
+                 cost_fn: Callable | None = None):
+        self.config = config or PlannerConfig()
+        if cost_fn is None:
+            from repro.launch.costmodel import discovery_stage_costs
+            cost_fn = discovery_stage_costs
+        self.cost_fn = cost_fn
+
+    # -- helpers ------------------------------------------------------------
+
+    def candidate_budget(self, n_columns: int) -> int:
+        cfg = self.config
+        want = max(cfg.k, int(n_columns * cfg.candidate_frac))
+        return max(1, min(want, cfg.max_candidates, n_columns))
+
+    def _n_shards(self, mesh) -> int:
+        if mesh is None:
+            return 1
+        n = 1
+        for ax in self.config.shard_axes:
+            n *= int(mesh.shape[ax])
+        return n
+
+    def _cost(self, candidates: str, n_queries: int, n_columns: int,
+              budget: int, n_shards: int) -> dict:
+        return self.cost_fn(n_queries, n_columns, budget=budget,
+                            candidates=candidates, k=self.config.k,
+                            n_bands=self.config.n_bands, n_shards=n_shards)
+
+    # -- entry point --------------------------------------------------------
+
+    def plan(self, *, n_columns: int, n_queries: int = 1, mode: str = "auto",
+             mesh=None) -> QueryPlan:
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; want one of {MODES}")
+        cfg = self.config
+        n_shards = self._n_shards(mesh)
+        budget = self.candidate_budget(n_columns)
+
+        if mode == "sharded":
+            if mesh is None:
+                raise ValueError("mode='sharded' needs a mesh")
+            cand, sharded = "all", True
+        elif mode == "full":
+            cand, sharded = "all", False
+        elif mode == "lsh":
+            # an explicit mesh is operator intent: shard whenever one exists
+            cand, sharded = "hybrid", n_shards > 1
+        else:  # auto: cost-based candidate stage, size-gated sharding
+            sharded = (n_shards > 1 and
+                       n_columns >= cfg.min_columns_per_shard * n_shards)
+            shards_eff = n_shards if sharded else 1
+            c_full = self._cost("all", n_queries, n_columns, n_columns,
+                                shards_eff)
+            c_pruned = self._cost("hybrid", n_queries, n_columns, budget,
+                                  shards_eff)
+            cand = ("hybrid" if c_pruned["total_flops"] < c_full["total_flops"]
+                    else "all")
+
+        if not sharded:
+            n_shards = 1
+        if cand == "all":
+            budget = n_columns
+        cost = self._cost(cand, n_queries, max(n_columns, 1),
+                          max(budget, 1), max(n_shards, 1))
+        return QueryPlan(candidates=cand, sharded=sharded, budget=budget,
+                         k=cfg.k, n_shards=n_shards,
+                         shard_axes=tuple(cfg.shard_axes), cost=cost)

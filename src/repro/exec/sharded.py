@@ -1,0 +1,125 @@
+"""Mesh-sharded pipeline builders: per-device stages + one small all_gather.
+
+Column-axis tensors (profiles, word features, global column ids, table
+ids, LSH band keys) are sharded over the mesh's batch-like axes with
+``shard_map``; query-side tensors and GBDT parameters are replicated.
+Every device runs the *same* stage functions as the local pipelines
+(``stages.py``) on its shard:
+
+* ``all``    — streamed full scan of the local columns (brute baseline);
+* ``lsh`` / ``hybrid`` — the ``lsh_probe`` Pallas kernel over the local
+  (C/devices, B) band-key shard, hybrid priority fill, and scoring of at
+  most ``ceil(budget / devices)`` local candidates — distributed LSH:
+  ``mode="lsh"`` on lakes bigger than one device;
+
+then contributes k rows to a single tiled ``all_gather`` and re-ranks the
+k·devices union — collective bytes O(Q·k·devices), independent of lake
+size (the ``rank_sharded`` merge pattern, now shared by every plan).
+
+``n_scored`` is the **global** count of candidate columns actually scored
+(per-device counts ``psum``-ed over the shard axes), so candidate-fraction
+and recall accounting stay honest under sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import features as FT
+from repro.exec import stages
+from repro.kernels.lsh_probe import PAD_CORPUS
+
+
+def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
+    pad = [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(x, pad, constant_values=fill)
+
+
+def place_sharded_corpus(mesh: Mesh, shard_axes, z: np.ndarray, w: np.ndarray,
+                         table_ids: np.ndarray | None = None,
+                         band_keys: np.ndarray | None = None) -> dict:
+    """Pad the column axis to a multiple of the shard count and device_put
+    the corpus tensors for a sharded pipeline.
+
+    Returns ``{"z", "w", "cids", "rep"[, "tids"][, "ckeys"]}`` — ``cids``
+    are global column ids (-1 on padding), ``tids`` pad with -2 (matches no
+    real table and no disabled-query sentinel), ``ckeys`` pad with the
+    probe kernel's corpus sentinel, ``rep`` is the replicated sharding for
+    the query-side tensors.
+    """
+    n = z.shape[0]
+    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+    n_pad = -(-n // n_shards) * n_shards
+    shard = NamedSharding(mesh, P(tuple(shard_axes)))
+    out = {
+        "z": jax.device_put(_pad_to(z.astype(np.float32), n_pad, 0.0), shard),
+        "w": jax.device_put(_pad_to(w, n_pad, FT.HASH_SENTINEL), shard),
+        "cids": jax.device_put(
+            _pad_to(np.arange(n, dtype=np.int32), n_pad, -1), shard),
+        "rep": NamedSharding(mesh, P()),
+    }
+    if table_ids is not None:
+        out["tids"] = jax.device_put(
+            _pad_to(np.asarray(table_ids, np.int32), n_pad, -2), shard)
+    if band_keys is not None:
+        out["ckeys"] = jax.device_put(
+            _pad_to(np.asarray(band_keys, np.uint32), n_pad, PAD_CORPUS),
+            shard)
+    return out
+
+
+def build_sharded_pipeline(mesh: Mesh, gbdt_tuple, *, candidates: str = "all",
+                           k: int, budget_per_shard: int | None = None,
+                           shard_axes=("data",), block: int = 4096,
+                           interpret: bool = True):
+    """Jitted sharded candidate→score→merge pipeline over ``mesh``.
+
+    ``candidates="all"``: fn(z, w, cids, tids, zq, wq, tq, qid);
+    otherwise:            fn(z, w, cids, tids, ckeys, zq, wq, qkeys, tq, qid).
+    Both return replicated (scores (Q, k'), global ids (Q, k'),
+    n_scored (Q,)) with k' = min(k, columns visible to the merge).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(shard_axes)
+
+    def _merge(s_local, cand_ids, n_local_per_q):
+        ls, lids = stages.merge_topk(s_local, cand_ids, k)
+        gs, gi = stages.merge_topk_sharded(ls, lids, k, axes)
+        n_scored = n_local_per_q
+        for ax in axes:
+            n_scored = jax.lax.psum(n_scored, ax)
+        return gs, gi, n_scored
+
+    if candidates == "all":
+        def local_fn(z, w, cids, tids, zq, wq, tq, qid):
+            s = stages.score_streamed(zq, wq, z, w, gbdt_tuple, block=block)
+            s = jnp.where(stages.exclusion_mask(cids, tids, tq, qid),
+                          -jnp.inf, s)
+            n_live = jnp.sum((cids >= 0).astype(jnp.int32))
+            n_per_q = jnp.full((zq.shape[0],), n_live, jnp.int32)
+            return _merge(s, cids, n_per_q)
+
+        in_specs = (P(axes), P(axes), P(axes), P(axes), P(), P(), P(), P())
+    else:
+        if budget_per_shard is None:
+            raise ValueError("pruned sharded pipeline needs budget_per_shard")
+
+        def local_fn(z, w, cids, tids, ckeys, zq, wq, qkeys, tq, qid):
+            prio = stages.candidate_priorities(
+                candidates, zq, qkeys, z, ckeys, cids, tids, tq, qid,
+                interpret=interpret)
+            m = min(budget_per_shard, z.shape[0])
+            pos, valid = stages.gather_candidates(prio, m)
+            s = stages.score_columns(zq, wq, z[pos], w[pos], gbdt_tuple)
+            s = jnp.where(valid, s, -jnp.inf)
+            return _merge(s, cids[pos], valid.sum(axis=1).astype(jnp.int32))
+
+        in_specs = (P(axes), P(axes), P(axes), P(axes), P(axes),
+                    P(), P(), P(), P(), P())
+
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(), P(), P()), check_rep=False)
+    return jax.jit(fn)

@@ -1,0 +1,155 @@
+"""Composable pipeline stages: candidate generation, scoring, top-k merge.
+
+Every discovery query — local or mesh-sharded, pruned or brute — is the
+same three-stage pipeline over a (local shard of the) corpus:
+
+1. **candidates** — which columns may the scorer see?  Kinds:
+   ``all`` (full-scan mask: every live column), ``lsh`` (banded-MinHash
+   bucket probe via the ``lsh_probe`` Pallas kernel), ``hybrid`` (LSH hits
+   ranked first, remaining budget filled by profile-space proximity — the
+   blocking construction of Flores et al.);
+2. **score** — distance features + GBDT over exactly the surviving
+   columns (gathered to a fixed budget so shapes stay jit-cacheable);
+3. **merge** — local top-k, and on a mesh per-device top-k + one small
+   ``all_gather`` (collective bytes O(Q·k·devices), lake-size free).
+
+The functions here are pure jnp/Pallas and run identically inside ``jit``
+and inside ``shard_map`` — ``executor.py`` composes them into the local
+pipelines, ``sharded.py`` into the per-device bodies.  Column ids are
+always *global* (``cids``), so exclusion masks (self, same-table, padding)
+work unchanged on a shard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predictor import distance_features_ref, gbdt_predict_ref
+from repro.kernels.lsh_probe import lsh_probe_pallas
+
+CANDIDATE_KINDS = ("all", "lsh", "hybrid")
+
+# LSH hits outrank every profile-proximity score: the proxy is squashed
+# into (-1, 1), so any offset > 2 keeps the two bands disjoint.
+_LSH_PRIORITY_BOOST = 4.0
+
+
+# ---------------------------------------------------------------------------
+# stage 1: candidate generation
+# ---------------------------------------------------------------------------
+
+def exclusion_mask(cids, tids, tq, qid):
+    """(Q, C) bool — True where a column must NOT be returned for a query.
+
+    Masks padding columns (cid < 0), the query itself (global id match;
+    qid=-1 marks an external query and matches nothing), and same-table
+    columns (tq=-1 disables the table mask for that row).
+    """
+    pad = (cids < 0)[None, :]
+    self_hit = cids[None, :] == qid[:, None]
+    same_table = (tq[:, None] >= 0) & (tids[None, :] == tq[:, None])
+    return pad | self_hit | same_table
+
+
+def candidate_priorities(kind: str, zq, qkeys, z, ckeys, cids, tids, tq, qid,
+                         *, interpret: bool = True):
+    """(Q, C) float32 priorities; -inf means "never a candidate".
+
+    ``kind``: ``lsh`` — bucket hits only (missing the budget is fine: the
+    un-hit remainder stays -inf); ``hybrid`` — hits first, then nearest
+    columns in z-scored profile space via one matmul (squared-L2 up to a
+    per-query constant — no trees, no word features at this stage).
+    """
+    excl = exclusion_mask(cids, tids, tq, qid)
+    if kind == "lsh":
+        hit = lsh_probe_pallas(qkeys, ckeys, interpret=interpret)
+        prio = jnp.where(hit > 0, 0.0, -jnp.inf)
+    elif kind == "hybrid":
+        hit = lsh_probe_pallas(qkeys, ckeys, interpret=interpret)
+        # -||zq - z||² up to a per-query constant: 2·zq@zᵀ - ||z||²
+        proxy = 2.0 * zq @ z.T - jnp.sum(z * z, axis=1)[None]
+        proxy = proxy / (1.0 + jnp.abs(proxy))            # squash to (-1, 1)
+        prio = hit.astype(jnp.float32) * _LSH_PRIORITY_BOOST + proxy
+    else:
+        raise ValueError(f"unknown candidate kind {kind!r}; "
+                         f"want one of {CANDIDATE_KINDS}")
+    return jnp.where(excl, -jnp.inf, prio)
+
+
+def gather_candidates(prio, budget: int):
+    """Top-``budget`` columns by priority -> (positions (Q, M), valid (Q, M)).
+
+    Positions index the local corpus axis; invalid rows (priority -inf)
+    mark budget slots the scorer must ignore.
+    """
+    pval, pos = jax.lax.top_k(prio, budget)
+    return pos, jnp.isfinite(pval)
+
+
+# ---------------------------------------------------------------------------
+# stage 2: scoring
+# ---------------------------------------------------------------------------
+
+def score_columns(zq, wq, zc, wc, gbdt_tuple):
+    """GBDT join-quality scores. zc/wc (C, F) -> (Q, C); an extra leading
+    axis on zc/wc ((Q, M, F) gathered candidates) scores per-query sets."""
+    if zc.ndim == 2:
+        zc, wc = zc[None], wc[None]
+    d = distance_features_ref(zq[:, None], wq[:, None], zc, wc)
+    return gbdt_predict_ref(gbdt_tuple, d)
+
+
+def score_streamed(zq, wq, z, w, gbdt_tuple, *, block: int = 4096):
+    """Full-corpus scoring, streamed in column blocks of ``block``.
+
+    The jnp mirror of the fused Pallas kernel: the (Q, N, F) distance
+    tensor never materializes, so HBM traffic is the profiles themselves
+    plus the (Q, N) score row — bandwidth-bound at profile size.
+    """
+    n = z.shape[0]
+    nb = max(n // block, 1)
+
+    def score_blk(args):
+        zb, wb = args
+        return score_columns(zq, wq, zb, wb, gbdt_tuple)
+
+    if n % block == 0 and n > block:
+        zc = z.reshape(nb, block, z.shape[1])
+        wc = w.reshape(nb, block, w.shape[1])
+        s = jax.lax.map(score_blk, (zc, wc))              # (nb, Q, block)
+        return jnp.moveaxis(s, 0, 1).reshape(zq.shape[0], n)
+    return score_blk((z, w))
+
+
+# ---------------------------------------------------------------------------
+# stage 3: top-k merge
+# ---------------------------------------------------------------------------
+
+def merge_topk(scores, cids, k: int):
+    """Local top-k -> (scores (Q, k'), global ids (Q, k')), k' = min(k, C).
+
+    ``cids`` is (C,) for a shared corpus axis or (Q, C) for per-query
+    gathered candidate sets. Non-finite slots come back with id -1 (the
+    caller-visible padding convention)."""
+    kl = min(k, scores.shape[1])
+    sc, pos = jax.lax.top_k(scores, kl)
+    if cids.ndim == 1:
+        cids = jnp.broadcast_to(cids[None], scores.shape)
+    ids = jnp.take_along_axis(cids, pos, axis=1)
+    return sc, jnp.where(jnp.isfinite(sc), ids, -1)
+
+
+def merge_topk_sharded(local_scores, local_ids, k: int, axes):
+    """Per-device top-k results -> replicated global top-k.
+
+    One tiled ``all_gather`` per mesh axis moves the (Q, k_local) candidate
+    pairs of every shard; a final top-k over the (Q, k_local · devices)
+    union re-ranks. Runs inside ``shard_map``.
+    """
+    all_s, all_i = local_scores, local_ids
+    for ax in axes:
+        all_s = jax.lax.all_gather(all_s, ax, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(all_i, ax, axis=1, tiled=True)
+    gs, gp = jax.lax.top_k(all_s, min(k, all_s.shape[1]))
+    gi = jnp.take_along_axis(all_i, gp, axis=1)
+    return gs, jnp.where(jnp.isfinite(gs), gi, -1)

@@ -6,10 +6,14 @@ the two share a bucket in at least one band:
 
     hit[q, c] = any_b (qkeys[q, b] == ckeys[c, b])
 
-This is the candidate-generation stage of the two-stage discovery service:
-an O(Q·C·B) stream of uint32 equality compares (VPU work, no MXU, no
-floats) instead of the O(Q·C·F_DIST·T) fused GBDT scan — the kernel's
-output mask picks the <<C columns the expensive scorer actually sees.
+This is the candidate-generation stage of the discovery pipeline
+(``repro.exec``): an O(Q·C·B) stream of uint32 equality compares (VPU
+work, no MXU, no floats) instead of the O(Q·C·F_DIST·T) fused GBDT scan —
+the kernel's output mask picks the <<C columns the expensive scorer
+actually sees. Under a sharded plan the kernel runs *inside* ``shard_map``
+on each device's (C/devices, B) key shard (``exec/sharded.py``), so
+candidate generation scales with the lake exactly like scoring; corpus
+padding rows use ``PAD_CORPUS`` and never collide with query keys.
 
 Tiling mirrors ``minhash.py``: the grid walks (Q, C) tiles, each program
 loads a (Qb, B) and a (Cb, B) key block into VMEM and emits the (Qb, Cb)

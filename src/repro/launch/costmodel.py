@@ -211,6 +211,73 @@ def cell_cost(cfg, kind: str, batch: int, seq: int, mesh_shape: dict,
                             "n_devices": n_dev})
 
 
+# ---------------------------------------------------------------------------
+# discovery pipeline (candidate -> score -> merge) per-stage costs
+# ---------------------------------------------------------------------------
+
+def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
+                          candidates: str = "hybrid", k: int = 10,
+                          n_bands: int = 64, n_trees: int = 30,
+                          tree_depth: int = 4, n_shards: int = 1) -> dict:
+    """Analytic per-device cost of one discovery micro-batch, per stage.
+
+    The planner's default cost hook (``repro.exec.Planner``): flops / HBM
+    bytes / collective bytes for the candidate→score→merge pipeline, with
+    the column axis split over ``n_shards`` devices. A pruned plan pays
+    the bucket probe (Q·C·B uint32 compares) and, for ``hybrid``, one
+    (Q, F_NUM)×(F_NUM, C) proxy matmul over *all* local columns to score
+    only ``budget/n_shards`` of them — so it beats the brute scan exactly
+    when the budget is small relative to the lake, which is the decision
+    "auto" mode makes. Replace via the ``cost_fn`` hook once measured
+    numbers exist (ROADMAP: native-TPU tuning).
+    """
+    from repro.core import features as FT
+
+    q = max(int(n_queries), 1)
+    shards = max(int(n_shards), 1)
+    cl = -(-max(int(n_columns), 1) // shards)          # local columns/device
+    # distance-feature work per scored pair: F_NUM |Δz| subs, the 10×10
+    # frequent-word overlap compare, first-word equality + GBDT traversal
+    feat_ops = FT.F_NUM + FT.N_FREQ_WORDS ** 2 + 2
+    pair_ops = feat_ops + n_trees * tree_depth
+    profile_bytes = (FT.F_NUM + FT.F_WORDS) * F4
+
+    stg = {}
+    if candidates == "all":
+        m = cl
+        stg["candidates"] = {"flops": 0.0, "hbm_bytes": 0.0}
+    else:
+        m = min(-(-max(int(budget), 1) // shards), cl)
+        probe = q * cl * n_bands                        # uint32 equality
+        proxy = 2.0 * q * cl * FT.F_NUM if candidates == "hybrid" else 0.0
+        stg["candidates"] = {
+            "flops": probe + proxy + q * cl,            # + budget selection
+            "hbm_bytes": (q + cl) * n_bands * 4 + q * cl * F4
+            + (q + cl) * FT.F_NUM * F4,
+        }
+    stg["score"] = {
+        "flops": float(q * m * pair_ops),
+        "hbm_bytes": float((q + m) * profile_bytes + q * m * F4),
+    }
+    kl = min(k, m)
+    stg["merge"] = {
+        "flops": float(q * m),
+        "hbm_bytes": float(q * m * F4),
+        # tiled all_gather of every shard's (score, id) top-k pairs
+        "collective_bytes": (float(q * kl * shards * (F4 + 4))
+                             if shards > 1 else 0.0),
+    }
+    return {
+        "stages": stg,
+        "total_flops": float(sum(s["flops"] for s in stg.values())),
+        "total_hbm_bytes": float(sum(s["hbm_bytes"] for s in stg.values())),
+        "total_collective_bytes": float(stg["merge"]["collective_bytes"]),
+        "n_queries": q,
+        "n_shards": shards,
+        "scored_per_device": int(m),
+    }
+
+
 def w_avg_decode(cfg, seq: int) -> float:
     if cfg.family == "ssm":
         return 0.0

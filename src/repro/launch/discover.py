@@ -5,10 +5,15 @@ model, and answer discovery-by-attribute queries.
 
 Service mode (the online subsystem): persist the lake into an on-disk
 catalog, restart an engine from it, and serve the queries through the
-two-stage LSH + GBDT pipeline, reporting recall against the brute scan:
+planned candidate→score→merge pipeline (``repro.exec``), reporting the
+chosen plan, serving stats, and recall against the exact scan:
 
   PYTHONPATH=src python -m repro.launch.discover --tables 40 --queries 10 \
       --catalog /tmp/freyja_catalog --serve
+
+Add ``--mesh`` (with XLA_FLAGS=--xla_force_host_platform_device_count=8)
+to shard the lake over local devices — ``--mode lsh`` then runs the
+distributed LSH plan: per-device bucket probe + one small all_gather.
 """
 from __future__ import annotations
 
@@ -28,6 +33,12 @@ def serve_mode(args, lake, model):
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
                                add_lake, measure_recall, serve_discovery)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh()
+        print(f"mesh: {dict(mesh.shape)} ({len(mesh.devices.flat)} devices)")
 
     t0 = time.perf_counter()
     catalog = ColumnCatalog(args.catalog)
@@ -53,7 +64,7 @@ def serve_mode(args, lake, model):
     engine = DiscoveryEngine.from_catalog(
         ColumnCatalog(args.catalog), model,
         EngineConfig(k=args.k, mode=args.mode,
-                     lsh=LSHConfig(n_bands=args.lsh_bands)))
+                     lsh=LSHConfig(n_bands=args.lsh_bands)), mesh=mesh)
     qids = select_queries(lake, args.queries)
     reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
             for q in qids]
@@ -62,10 +73,18 @@ def serve_mode(args, lake, model):
     dt = time.perf_counter() - t0
     print(f"served {len(responses)} queries in {dt:.3f}s "
           f"({len(responses)/max(dt,1e-9):.1f} QPS, mode={args.mode})")
-    if args.mode == "lsh":
+    stats = engine.stats()
+    plan = stats.get("last_plan", {})
+    print(f"plan: {plan.get('kind')} budget={plan.get('budget')} "
+          f"shards={plan.get('n_shards')} "
+          f"(~{plan.get('cost', {}).get('total_flops', 0)/1e6:.2f} MFLOP/batch); "
+          f"cache {stats['cache']['hits']}h/{stats['cache']['misses']}m, "
+          f"plans={stats['plans']}")
+    if args.mode in ("lsh", "auto"):
         rec = measure_recall(engine, qids, k=args.k)
-        print(f"recall@{args.k} vs full scan: {rec['recall']:.3f} "
-              f"scoring {100*rec['scored_fraction']:.1f}% of columns")
+        print(f"recall@{args.k} vs {rec['baseline_plan']} scan: "
+              f"{rec['recall']:.3f} scoring "
+              f"{100*rec['scored_fraction']:.1f}% of columns")
     for r in responses[:3]:
         names = [m.column for m in r.matches[:5]]
         print(f"  {r.name} ({r.n_candidates} scored) -> {names}")
@@ -84,7 +103,12 @@ def main():
                     help="catalog directory (enables service mode)")
     ap.add_argument("--serve", action="store_true",
                     help="serve queries through the online engine")
-    ap.add_argument("--mode", default="lsh", choices=["lsh", "full"])
+    ap.add_argument("--mode", default="lsh",
+                    choices=["lsh", "full", "sharded", "auto"])
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve over a mesh of all local devices (sharded "
+                         "plans; run with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N to fake N devices)")
     ap.add_argument("--lsh-bands", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
     args = ap.parse_args()

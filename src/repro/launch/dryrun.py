@@ -186,23 +186,27 @@ def lower_freyja_cell(mesh: Mesh, *, bf16_profiles: bool = False):
     """The paper's own distributed discovery query as a dry-run cell."""
     from repro.configs import freyja_discovery as FD
     from repro.core import features as FT
-    from repro.core.discovery import build_rank_sharded
+    from repro.exec import build_sharded_pipeline
     n, q, k = FD.N_COLUMNS, FD.N_QUERIES, FD.TOP_K
     zdt = jnp.bfloat16 if bf16_profiles else jnp.float32
     ba = shd.batch_axes(mesh)
     gb = (jnp.zeros((50, 5), jnp.int32), jnp.zeros((50, 5), jnp.float32),
           jnp.zeros((50, 32), jnp.float32), jnp.float32(0.5))
-    fn = build_rank_sharded(mesh, k, gb, shard_axes=ba)
+    fn = build_sharded_pipeline(mesh, gb, candidates="all", k=k,
+                                shard_axes=ba)
     shard = NamedSharding(mesh, P(ba))
     shard2 = NamedSharding(mesh, P(ba, None))
     rep = NamedSharding(mesh, P())
     args = (jax.ShapeDtypeStruct((n, FT.F_NUM), zdt),
             jax.ShapeDtypeStruct((n, FT.F_WORDS), jnp.uint32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),      # cids
+            jax.ShapeDtypeStruct((n,), jnp.int32),      # tids
             jax.ShapeDtypeStruct((q, FT.F_NUM), zdt),
             jax.ShapeDtypeStruct((q, FT.F_WORDS), jnp.uint32),
-            jax.ShapeDtypeStruct((q,), jnp.int32))
-    jitted = jax.jit(fn, in_shardings=(shard2, shard2, shard, rep, rep, rep))
+            jax.ShapeDtypeStruct((q,), jnp.int32),      # tq
+            jax.ShapeDtypeStruct((q,), jnp.int32))      # qid
+    jitted = jax.jit(fn, in_shardings=(shard2, shard2, shard, shard,
+                                       rep, rep, rep, rep))
     return jitted.lower(*args), {"kind": "discover", "batch": q, "seq": n,
                                  "cfg": None}
 
@@ -349,7 +353,10 @@ def main():
         cells = [(a, s) for a in registry.list_archs() for s in registry.SHAPES]
         cells.append(("freyja-discovery", "query"))
     else:
-        cells = [(args.arch, args.shape)]
+        shape = args.shape
+        if shape is None and args.arch == "freyja-discovery":
+            shape = "query"              # the discovery cell's only shape
+        cells = [(args.arch, shape)]
 
     for mk in meshes:
         for arch, shape in cells:
@@ -370,7 +377,7 @@ def main():
                 extra = r["reason"]
             else:
                 extra = r["error"][:160]
-            print(f"[{mk:6s}] {arch:22s} {shape:11s} {status:5s} "
+            print(f"[{mk:6s}] {arch:22s} {str(shape):11s} {status:5s} "
                   f"{time.time()-t0:6.1f}s {extra}", flush=True)
 
 

@@ -4,11 +4,12 @@ Layers (bottom-up):
 
 * ``catalog``  — persistent on-disk column catalog: profile / signature /
   metadata segments with incremental add/drop and compaction;
-* ``lsh``      — banded-MinHash candidate generation over the catalog's
-  signatures (device-side batched bucket probe);
-* ``engine``   — ``DiscoveryEngine``: batches concurrent queries through the
-  two-stage pipeline (LSH candidates -> GBDT re-rank) with an LRU result
-  cache, plus full-scan and mesh-sharded fallbacks;
+* ``lsh``      — banded-MinHash band keys over the catalog's signatures
+  (the candidate-stage input of the execution layer);
+* ``engine``   — ``DiscoveryEngine``: batches concurrent queries, plans
+  each micro-batch through the unified candidate→score→merge executor
+  (``repro.exec``: full-scan / LSH / hybrid × local / mesh-sharded), and
+  fronts it with a cost-aware LRU result cache + per-plan stats();
 * ``api``      — request/response dataclasses and the ``serve_discovery``
   entry point.
 """

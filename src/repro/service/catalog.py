@@ -9,6 +9,10 @@ can grow (or shrink) without reprofiling:
   a JSON sidecar) — the running service never rewrites old segments;
 * ``drop_table`` is a manifest tombstone (O(1));
 * ``compact()`` merges live segments into one and clears tombstones;
+  passing ``n_perm=`` / ``minhash_seed=`` **re-signs** every live column
+  from the per-segment value sketches (``values.npy``) instead of silently
+  keeping stale signatures, so the LSH geometry can be retuned without
+  re-ingesting the lake;
 * ``snapshot()`` materializes the live columns (profiles, signatures,
   table/column metadata) for the query engine; segment arrays are read with
   ``mmap_mode`` so a snapshot touches only the bytes it concatenates.
@@ -17,6 +21,7 @@ Layout::
 
     <root>/MANIFEST.json
     <root>/seg-00000001/{numeric,words,n_rows,sigs,table_ids}.npy
+    <root>/seg-00000001/values.npy     # folded value hashes (re-sign source)
     <root>/seg-00000001/meta.json      # column names, table name -> id
 
 The manifest is the single source of truth and is replaced atomically;
@@ -156,6 +161,8 @@ class ColumnCatalog:
         np.save(os.path.join(seg_dir, "words.npy"), words)
         np.save(os.path.join(seg_dir, "n_rows.npy"), batch.n_rows.astype(np.int32))
         np.save(os.path.join(seg_dir, "sigs.npy"), sigs)
+        # the re-sign source for signature maintenance at compact()
+        np.save(os.path.join(seg_dir, "values.npy"), batch.values32)
         np.save(os.path.join(seg_dir, "table_ids.npy"),
                 np.full((batch.n_columns,), tid, np.int32))
         with open(os.path.join(seg_dir, "meta.json"), "w") as f:
@@ -180,42 +187,119 @@ class ColumnCatalog:
         self.manifest["version"] = self.version + 1
         self._write_manifest()
 
-    def compact(self) -> None:
+    def compact(self, *, n_perm: int | None = None,
+                minhash_seed: int | None = None,
+                resign_chunk: int = 256) -> None:
         """Merge live segments into one; drop tombstoned columns; delete the
-        old segment directories."""
+        old segment directories.
+
+        Signature maintenance: passing ``n_perm`` and/or ``minhash_seed``
+        re-MinHashes every live column from the stored per-segment value
+        sketches (``values.npy``, in column chunks of ``resign_chunk``) and
+        updates the manifest, so snapshots after the compaction carry the
+        new signature geometry. Segments written before value storage
+        existed cannot be re-signed and raise ``ValueError``.
+        """
+        cur_seed = int(self.manifest["minhash_seed"])
+        new_perm = self.n_perm if n_perm is None else int(n_perm)
+        new_seed = cur_seed if minhash_seed is None else int(minhash_seed)
+        resign = new_perm != self.n_perm or new_seed != cur_seed
+
         parts = [self._load_segment(s) for s in self.manifest["segments"]]
         dropped = set(self.manifest["dropped_ids"])
         old_segs = list(self.manifest["segments"])
 
+        # segments written before value storage (or carrying columns merged
+        # from such segments) cannot be re-signed; their rows are tracked by
+        # a validity mask so a plain compact() never discards the re-sign
+        # source of the segments that DO have one
+        def _part_valid(part, keep):
+            if "values" not in part:
+                return np.zeros((int(keep.sum()),), bool)
+            if "values_valid" in part:
+                return np.asarray(part["values_valid"])[keep]
+            return np.ones((int(keep.sum()),), bool)
+
+        keeps = [~np.isin(p["table_ids"], list(dropped)) for p in parts]
+        if resign:
+            legacy = [s for s, p, keep in zip(old_segs, parts, keeps)
+                      if not _part_valid(p, keep).all()]
+            if legacy:
+                raise ValueError(
+                    f"cannot change n_perm/minhash_seed: segment(s) "
+                    f"{legacy} predate value storage (no complete "
+                    f"values.npy); re-ingest those tables to enable "
+                    f"signature maintenance")
+
         merged = {k: [] for k in ("numeric", "words", "n_rows", "sigs",
                                   "table_ids")}
+        values_parts: list[np.ndarray] = []
+        valid_parts: list[np.ndarray] = []
         names: list[str] = []
         tables: dict[str, int] = {}
-        for part in parts:
-            keep = ~np.isin(part["table_ids"], list(dropped))
+        for part, keep in zip(parts, keeps):
             for k in merged:
                 merged[k].append(part[k][keep])
+            if "values" in part:
+                values_parts.append(np.asarray(part["values"][keep]))
+            else:
+                values_parts.append(
+                    np.full((int(keep.sum()), 1), FT.HASH_SENTINEL,
+                            np.uint32))
+            valid_parts.append(_part_valid(part, keep))
             names.extend([n for n, ok in zip(part["names"], keep) if ok])
             tables.update({t: i for t, i in part["tables"].items()
                            if i not in dropped})
 
+        cat = {k: (np.concatenate(v) if v else
+                   self._empty_arrays()[k]) for k, v in merged.items()}
+        budget = max((v.shape[1] for v in values_parts), default=1)
+        values_parts = [
+            np.pad(v, ((0, 0), (0, budget - v.shape[1])),
+                   constant_values=FT.HASH_SENTINEL)
+            for v in values_parts]
+        values = (np.concatenate(values_parts) if values_parts else
+                  np.full((0, 1), FT.HASH_SENTINEL, np.uint32))
+        values_valid = (np.concatenate(valid_parts) if valid_parts else
+                        np.zeros((0,), bool))
+        if resign:
+            cat["sigs"] = self._resign(values, new_perm, new_seed,
+                                       chunk=resign_chunk)
+
         seg = f"seg-{int(self.manifest['next_segment']):08d}"
         seg_dir = os.path.join(self.root, seg)
         os.makedirs(seg_dir, exist_ok=True)
-        cat = {k: (np.concatenate(v) if v else
-                   self._empty_arrays()[k]) for k, v in merged.items()}
         for k, arr in cat.items():
             np.save(os.path.join(seg_dir, f"{k}.npy"), arr)
+        np.save(os.path.join(seg_dir, "values.npy"), values)
+        if not values_valid.all():         # all-True is implied when absent
+            np.save(os.path.join(seg_dir, "values_valid.npy"), values_valid)
         with open(os.path.join(seg_dir, "meta.json"), "w") as f:
             json.dump({"names": names, "tables": tables}, f)
 
         self.manifest["segments"] = [seg]
         self.manifest["next_segment"] = int(self.manifest["next_segment"]) + 1
         self.manifest["dropped_ids"] = []
+        self.manifest["n_perm"] = new_perm
+        self.manifest["minhash_seed"] = new_seed
         self.manifest["version"] = self.version + 1
         self._write_manifest()
         for s in old_segs:
             shutil.rmtree(os.path.join(self.root, s), ignore_errors=True)
+
+    @staticmethod
+    def _resign(values: np.ndarray, n_perm: int, seed: int,
+                chunk: int = 256) -> np.ndarray:
+        """Re-MinHash stored value sketches -> (C, n_perm) signatures."""
+        c = values.shape[0]
+        if c == 0:
+            return np.zeros((0, n_perm), np.uint32)
+        out = []
+        for i in range(0, c, chunk):
+            v = np.ascontiguousarray(values[i:i + chunk])
+            out.append(np.asarray(ops.minhash(v, n_perm=n_perm, seed=seed),
+                                  np.uint32))
+        return np.concatenate(out)
 
     # -- reads --------------------------------------------------------------
 
@@ -263,6 +347,12 @@ class ColumnCatalog:
         seg_dir = os.path.join(self.root, seg)
         out = {k: np.load(os.path.join(seg_dir, f"{k}.npy"), mmap_mode="r")
                for k in ("numeric", "words", "n_rows", "sigs", "table_ids")}
+        vpath = os.path.join(seg_dir, "values.npy")
+        if os.path.exists(vpath):    # absent in pre-maintenance segments
+            out["values"] = np.load(vpath, mmap_mode="r")
+            mpath = os.path.join(seg_dir, "values_valid.npy")
+            if os.path.exists(mpath):
+                out["values_valid"] = np.load(mpath, mmap_mode="r")
         with open(os.path.join(seg_dir, "meta.json")) as f:
             meta = json.load(f)
         out["names"] = meta["names"]

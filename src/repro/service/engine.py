@@ -1,22 +1,24 @@
-"""DiscoveryEngine: batched two-stage query serving over a catalog snapshot.
+"""DiscoveryEngine: batched query serving over a catalog snapshot.
 
-Pipeline per micro-batch of concurrent queries:
+The engine is a thin serving shell around the unified query-execution
+layer (``repro.exec``): per micro-batch of concurrent queries it asks the
+:class:`~repro.exec.Planner` for a plan (candidate stage × placement ×
+budget, chosen from lake size, mesh availability and the analytic cost
+model) and hands the padded batch to the :class:`~repro.exec.Executor`.
+All scoring math — full-scan, LSH/hybrid pruning, mesh-sharded variants of
+both — lives in ``repro.exec``; this module owns only serving concerns:
 
-1. **Candidate generation** — the LSH bucket probe marks the columns that
-   share a MinHash band with each query (``kernels/lsh_probe``), and a
-   stable top-k over the hit mask gathers them into a fixed candidate
-   budget (a static fraction of the lake, so the stage is jit-cached).
-2. **Re-rank** — only the gathered candidates go through the expensive
-   distance-features + GBDT scorer; the final top-k comes out of that
-   small (Q, budget) score block.
+* request resolution (resident column ids vs uploaded raw columns),
+* micro-batch padding so repeated batch shapes reuse compiles,
+* a **cost-aware LRU cache**: entries are weighted by the executed plan's
+  modeled cost, so a full-scan result outranks a pruned one and cheap
+  entries are evicted (or refused admission) first,
+* per-plan serving statistics via :meth:`DiscoveryEngine.stats`.
 
-Modes: ``lsh`` (two-stage, the default), ``full`` (single-device brute
-scan — the exact baseline), ``sharded`` (full scan via ``rank_sharded``
-over a mesh, for lakes larger than one device).
-
-An LRU cache keyed by the query-profile hash short-circuits repeated
-queries (identical uploaded columns are common in production traffic);
-entries are invalidated wholesale when the catalog version moves.
+Modes (``EngineConfig.mode``): ``lsh`` (pruned; sharded over the mesh
+whenever one is supplied — lakes bigger than one device), ``full``
+(single-device brute scan), ``sharded`` (brute scan over the mesh),
+``auto`` (planner picks by cost).
 """
 from __future__ import annotations
 
@@ -24,18 +26,13 @@ import dataclasses
 import hashlib
 import time
 from collections import OrderedDict
-from functools import partial
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import features as FT
-from repro.core.discovery import build_rank_sharded
 from repro.core.ingest import ingest_string_columns
-from repro.core.predictor import (JoinQualityModel, distance_features_ref,
-                                  gbdt_predict_ref)
-from repro.kernels.lsh_probe import lsh_probe_pallas
+from repro.core.predictor import JoinQualityModel
+from repro.exec import MODES, Executor, Planner, PlannerConfig
 from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
 from repro.service.catalog import (CatalogSnapshot, ColumnCatalog,
                                    profile_and_sign)
@@ -45,7 +42,7 @@ from repro.service.lsh import LSHConfig, LSHIndex
 @dataclasses.dataclass
 class EngineConfig:
     k: int = 10
-    mode: str = "lsh"                  # "lsh" | "full" | "sharded"
+    mode: str = "lsh"                  # "lsh" | "full" | "sharded" | "auto"
     lsh: LSHConfig = dataclasses.field(default_factory=LSHConfig)
     candidate_frac: float = 0.2        # LSH budget as a fraction of the lake
     max_candidates: int = 4096         # absolute cap on that budget
@@ -55,78 +52,34 @@ class EngineConfig:
     shard_axes: tuple = ("data",)
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-@partial(jax.jit, static_argnames=("k", "max_cand", "interpret"))
-def _lsh_rank(zq, wq, qkeys, tq, qid, z, w, ckeys, tids, gbdt_tuple,
-              k: int, max_cand: int, interpret: bool):
-    """Two-stage ranking. Query tensors are (Q, ...); tq=-1 disables the
-    same-table mask for a row, qid=-1 marks an external (non-resident)
-    query. Returns (scores (Q,k), ids (Q,k), n_scored (Q,)).
-
-    Candidate generation is hybrid (the blocking construction of Flores et
-    al.): every LSH bucket hit is a candidate, and the remaining budget is
-    filled with the nearest columns in profile space (squared-L2 proxy via
-    one matmul — no trees, no word features). LSH covers the high-overlap
-    joins; the profile proxy covers what the GBDT ranks by profile shape.
-    """
-    mask = lsh_probe_pallas(qkeys, ckeys, interpret=interpret)   # (Q, C)
-    # -||zq - z||² up to a per-query constant: 2·zq@zᵀ - ||z||²
-    proxy = 2.0 * zq @ z.T - jnp.sum(z * z, axis=1)[None]        # (Q, C)
-    proxy = proxy / (1.0 + jnp.abs(proxy))                       # squash to (-1, 1)
-    big = jnp.float32(4.0)
-    prio = mask.astype(jnp.float32) * big + proxy
-    # keep excluded columns out of the budget entirely
-    prio = jnp.where(tids[None] == tq[:, None], -jnp.inf, prio)
-    n = z.shape[0]
-    prio = jnp.where(jnp.arange(n)[None] == qid[:, None], -jnp.inf, prio)
-    pval, cand = jax.lax.top_k(prio, max_cand)                   # (Q, M)
-    valid = jnp.isfinite(pval)
-    d = distance_features_ref(zq[:, None], wq[:, None], z[cand], w[cand])
-    s = gbdt_predict_ref(gbdt_tuple, d)                          # (Q, M)
-    s = jnp.where(valid, s, -jnp.inf)
-    sc, pos = jax.lax.top_k(s, min(k, max_cand))
-    ids = jnp.take_along_axis(cand, pos, axis=1)
-    ids = jnp.where(jnp.isfinite(sc), ids, -1)
-    return sc, ids, valid.sum(axis=1)
-
-
-@partial(jax.jit, static_argnames=("k",))
-def _full_rank(zq, wq, tq, qid, z, w, tids, gbdt_tuple, k: int):
-    """Single-device brute scan (the exact baseline the LSH path prunes)."""
-    n = z.shape[0]
-    d = distance_features_ref(zq[:, None], wq[:, None], z[None], w[None])
-    s = gbdt_predict_ref(gbdt_tuple, d)                          # (Q, N)
-    s = jnp.where(tids[None] == tq[:, None], -jnp.inf, s)
-    s = jnp.where(jnp.arange(n)[None] == qid[:, None], -jnp.inf, s)
-    sc, ids = jax.lax.top_k(s, min(k, n))
-    ids = jnp.where(jnp.isfinite(sc), ids, -1)
-    return sc, ids, jnp.full((zq.shape[0],), n, jnp.int32)
-
-
 class DiscoveryEngine:
     """Serves discovery queries from a catalog snapshot."""
 
     def __init__(self, snapshot: CatalogSnapshot, model: JoinQualityModel,
                  config: EngineConfig | None = None, mesh=None):
         config = config if config is not None else EngineConfig()
+        if config.mode not in MODES:
+            raise ValueError(f"unknown mode {config.mode!r}; "
+                             f"want one of {MODES}")
+        if config.mode == "sharded" and mesh is None:
+            raise ValueError("sharded mode needs a mesh")
         self.config = config
         self.model = model
         self.mesh = mesh
-        self._gbdt = tuple(map(jnp.asarray, model.gbdt.astuple()))
-        self._cache: OrderedDict[bytes, list[ColumnMatch]] = OrderedDict()
-        self.stats = {"queries": 0, "cache_hits": 0, "scored_columns": 0,
-                      "scan_columns": 0, "batches": 0}
-        self._sharded_fn = None
+        self.planner = Planner(PlannerConfig(
+            k=config.k, candidate_frac=config.candidate_frac,
+            max_candidates=config.max_candidates,
+            n_bands=config.lsh.n_bands,
+            shard_axes=tuple(config.shard_axes)))
+        self._cache: OrderedDict[bytes, tuple[list[ColumnMatch], float]] = \
+            OrderedDict()
+        self._counters = {"queries": 0, "batches": 0, "cache_hits": 0,
+                          "cache_misses": 0, "cache_admitted": 0,
+                          "cache_rejected": 0, "cache_evicted": 0,
+                          "scored_columns": 0, "scan_columns": 0}
+        self._plan_counts: dict[str, int] = {}
+        self.last_plan = None
         self.refresh(snapshot)
-        if config.mode == "sharded":
-            if mesh is None:
-                raise ValueError("sharded mode needs a mesh")
-            self._sharded_fn = build_rank_sharded(
-                mesh, config.k, self._gbdt, shard_axes=config.shard_axes,
-                with_tables=True)
 
     @classmethod
     def from_catalog(cls, catalog: ColumnCatalog, model: JoinQualityModel,
@@ -141,11 +94,11 @@ class DiscoveryEngine:
         prof = snapshot.profiles
         self._z_np = prof.zscored.astype(np.float32)
         self._w_np = prof.words
-        self._z = jnp.asarray(self._z_np)
-        self._w = jnp.asarray(self._w_np)
-        self._tids = jnp.asarray(snapshot.table_ids)
         self.lsh = LSHIndex.build(snapshot.signatures, self.config.lsh)
-        self._ckeys = jnp.asarray(self.lsh.keys)
+        self._executor = Executor(
+            self._z_np, self._w_np, self.model.gbdt.astuple(),
+            table_ids=snapshot.table_ids, band_keys=self.lsh.keys,
+            mesh=self.mesh)
         self._cache.clear()
 
     @property
@@ -154,9 +107,7 @@ class DiscoveryEngine:
 
     @property
     def candidate_budget(self) -> int:
-        c = self.n_columns
-        want = max(self.config.k, int(c * self.config.candidate_frac))
-        return max(1, min(want, self.config.max_candidates, c))
+        return self.planner.candidate_budget(self.n_columns)
 
     # -- query path ---------------------------------------------------------
 
@@ -181,34 +132,69 @@ class DiscoveryEngine:
                 responses[i] = DiscoveryResponse(
                     name=requests[i].name, matches=self._trim(hit, requests[i]),
                     n_candidates=0, cached=True)
-                self.stats["cache_hits"] += 1
+                self._counters["cache_hits"] += 1
             else:
+                self._counters["cache_misses"] += 1
                 todo.append(i)
 
         if todo:
-            scores, ids, ncand = self._rank_rows(
+            scores, ids, ncand, plan = self._rank_rows(
                 zq[todo], wq[todo], sigq[todo], tq[todo], qid[todo])
+            # the plan's cost was modeled for the PADDED batch — normalize
+            # by that count, not len(todo), or a lone miss looks batch_pad×
+            # costlier than the same query served in a full batch
+            cost_per_query = (plan.cost.get("total_flops", 0.0)
+                              / max(plan.cost.get("n_queries", 1), 1))
             for row, i in enumerate(todo):
                 matches = self._matches(scores[row], ids[row])
-                self._cache_put(keys[i], matches)
+                self._cache_put(keys[i], matches, cost_per_query)
                 responses[i] = DiscoveryResponse(
                     name=requests[i].name,
                     matches=self._trim(matches, requests[i]),
                     n_candidates=int(ncand[row]))
-                self.stats["scored_columns"] += int(ncand[row])
-                self.stats["scan_columns"] += self.n_columns
+                self._counters["scored_columns"] += int(ncand[row])
+                self._counters["scan_columns"] += self.n_columns
 
-        self.stats["queries"] += len(requests)
-        self.stats["batches"] += 1
+        self._counters["queries"] += len(requests)
+        self._counters["batches"] += 1
         dt_ms = (time.perf_counter() - t0) * 1e3 / max(len(requests), 1)
         for r in responses:
             r.latency_ms = dt_ms
         return responses
 
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters for capacity planning (the ``/stats`` payload):
+        query/batch totals, cache hit/miss/admission counts, the per-plan
+        query histogram, and the last executed plan with its modeled cost."""
+        c = dict(self._counters)
+        out = {
+            "queries": c["queries"], "batches": c["batches"],
+            "scored_columns": c["scored_columns"],
+            "scan_columns": c["scan_columns"],
+            "cache": {
+                "hits": c["cache_hits"], "misses": c["cache_misses"],
+                "admitted": c["cache_admitted"],
+                "rejected": c["cache_rejected"],
+                "evicted": c["cache_evicted"],
+                "size": len(self._cache),
+                "capacity": self.config.cache_entries,
+            },
+            "plans": dict(self._plan_counts),
+            "n_columns": self.n_columns,
+        }
+        if self.last_plan is not None:
+            p = self.last_plan
+            out["last_plan"] = {"kind": p.kind, "budget": p.budget,
+                               "n_shards": p.n_shards, "k": p.k,
+                               "cost": p.cost}
+        return out
+
     # -- internals ----------------------------------------------------------
 
     def _rank_rows(self, zq, wq, sigq, tq, qid):
-        """Dispatch one padded micro-batch to the mode's jitted stage."""
+        """Plan + execute one padded micro-batch through ``repro.exec``."""
         q = zq.shape[0]
         pad = -(-q // self.config.batch_pad) * self.config.batch_pad
         if pad != q:
@@ -216,40 +202,15 @@ class DiscoveryEngine:
                 [a, np.repeat(a[-1:], pad - q, axis=0)])
             zq, wq, sigq, tq, qid = map(rep, (zq, wq, sigq, tq, qid))
 
-        mode = self.config.mode
-        if mode == "lsh":
-            qkeys = self.lsh.query_keys(sigq)
-            sc, ids, ncand = _lsh_rank(
-                jnp.asarray(zq), jnp.asarray(wq), jnp.asarray(qkeys),
-                jnp.asarray(tq), jnp.asarray(qid), self._z, self._w,
-                self._ckeys, self._tids, self._gbdt,
-                self.config.k, self.candidate_budget, _interpret())
-        elif mode == "full":
-            sc, ids, ncand = _full_rank(
-                jnp.asarray(zq), jnp.asarray(wq), jnp.asarray(tq),
-                jnp.asarray(qid), self._z, self._w, self._tids, self._gbdt,
-                self.config.k)
-        elif mode == "sharded":
-            sc, ids = self._sharded_rank(zq, wq, tq, qid)
-            ncand = np.full((zq.shape[0],), self.n_columns, np.int32)
-        else:
-            raise ValueError(f"unknown mode {self.config.mode!r}")
-        return np.asarray(sc)[:q], np.asarray(ids)[:q], np.asarray(ncand)[:q]
-
-    def _sharded_rank(self, zq, wq, tq, qid):
-        from repro.core.discovery import place_sharded_corpus
-        corpus = place_sharded_corpus(self.mesh, self.config.shard_axes,
-                                      self._z_np, self._w_np,
-                                      table_ids=self.snapshot.table_ids)
-        rep = corpus["rep"]
-        sc, ids = self._sharded_fn(
-            corpus["z"], corpus["w"], corpus["cids"],
-            jax.device_put(zq.astype(np.float32), rep),
-            jax.device_put(wq, rep),
-            jax.device_put(qid.astype(np.int32), rep),
-            corpus["tids"],
-            jax.device_put(tq.astype(np.int32), rep))
-        return np.asarray(sc), np.asarray(ids)
+        plan = self.planner.plan(n_columns=self.n_columns, n_queries=pad,
+                                 mode=self.config.mode, mesh=self.mesh)
+        qkeys = (self.lsh.query_keys(sigq) if plan.candidates != "all"
+                 else None)
+        sc, ids, ncand = self._executor.execute(plan, zq, wq, tq, qid,
+                                                qkeys=qkeys)
+        self.last_plan = plan
+        self._plan_counts[plan.kind] = self._plan_counts.get(plan.kind, 0) + q
+        return sc[:q], ids[:q], ncand[:q], plan
 
     def _resolve(self, requests):
         """Requests -> stacked (zq, wq, sigq, tq, qid) numpy rows."""
@@ -317,15 +278,35 @@ class DiscoveryEngine:
 
     def _cache_get(self, key):
         hit = self._cache.get(key)
-        if hit is not None:
-            self._cache.move_to_end(key)
-        return hit
-
-    def _cache_put(self, key, matches) -> None:
-        self._cache[key] = matches
+        if hit is None:
+            return None
         self._cache.move_to_end(key)
-        while len(self._cache) > self.config.cache_entries:
-            self._cache.popitem(last=False)
+        return hit[0]
+
+    def _cache_put(self, key, matches, cost: float) -> None:
+        """Cost-aware admission: when full, the cheapest (oldest on ties)
+        resident entry is the victim — and a new entry cheaper than every
+        resident one is not admitted at all (cheap plans are cheap to
+        recompute; a full-scan result outranks any pruned one)."""
+        cap = self.config.cache_entries
+        if cap <= 0:
+            return
+        if key in self._cache:
+            self._cache[key] = (matches, cost)
+            self._cache.move_to_end(key)
+            return
+        if len(self._cache) >= cap:
+            victim, vcost = None, np.inf
+            for k_, (_, c_) in self._cache.items():   # oldest-first: ties
+                if c_ < vcost:                        # go to the oldest
+                    victim, vcost = k_, c_
+            if cost < vcost:
+                self._counters["cache_rejected"] += 1
+                return
+            del self._cache[victim]
+            self._counters["cache_evicted"] += 1
+        self._cache[key] = (matches, cost)
+        self._counters["cache_admitted"] += 1
 
 
 def sigq_width(snapshot: CatalogSnapshot) -> int:
@@ -334,8 +315,14 @@ def sigq_width(snapshot: CatalogSnapshot) -> int:
 
 def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
                    k: int | None = None) -> dict:
-    """Recall@k of the engine's (LSH-pruned) top-k against the brute-force
-    scan on the same snapshot, plus the fraction of the lake scored."""
+    """Recall@k of the engine's (pruned) top-k against the full scan on the
+    same snapshot, plus the fraction of the lake scored.
+
+    Shard-aware on both sides: the pruned run reports the *global* number
+    of columns scored (per-device counts are psum-ed by the executor), and
+    the exact baseline is the sharded full scan whenever the engine's plan
+    is sharded — so ``scored_fraction`` and recall stay honest on meshes.
+    """
     k = k or engine.config.k
     if k > engine.config.k:
         raise ValueError(f"k={k} exceeds the engine's configured "
@@ -344,17 +331,20 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
     reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q), k=k)
             for q in query_ids]
     zq, wq, sigq, tq, qid = engine._resolve(reqs)
-    lsh_s, lsh_ids, ncand = engine._rank_rows(zq, wq, sigq, tq, qid)
-    full_s, full_ids, _ = map(np.asarray, _full_rank(
-        jnp.asarray(zq), jnp.asarray(wq), jnp.asarray(tq), jnp.asarray(qid),
-        engine._z, engine._w, engine._tids, engine._gbdt, k))
+    got_s, got_ids, ncand, plan = engine._rank_rows(zq, wq, sigq, tq, qid)
+    base_plan = engine.planner.plan(
+        n_columns=engine.n_columns, n_queries=len(reqs),
+        mode="sharded" if plan.sharded else "full",
+        mesh=engine.mesh if plan.sharded else None)
+    full_s, full_ids, _ = engine._executor.execute(base_plan, zq, wq, tq, qid)
     hits, total = 0, 0
     for row in range(len(reqs)):
         want = set(full_ids[row][:k][np.isfinite(full_s[row][:k])].tolist())
-        got = set(lsh_ids[row][:k][np.isfinite(lsh_s[row][:k])].tolist())
+        got = set(got_ids[row][:k][np.isfinite(got_s[row][:k])].tolist())
         hits += len(want & got)
         total += len(want)
     return {"recall": hits / max(total, 1),
             "scored_fraction": float(ncand.mean()) / max(engine.n_columns, 1),
             "candidate_budget": engine.candidate_budget,
+            "plan": plan.kind, "baseline_plan": base_plan.kind,
             "k": k, "n_queries": len(reqs)}

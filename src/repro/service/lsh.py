@@ -11,6 +11,11 @@ The probe itself is the device-side batched kernel ``kernels/lsh_probe``:
 (Q, B) query keys against the resident (C, B) catalog keys in one pass —
 uint32 equality compares instead of GBDT trees, which is why generating
 candidates for *every* concurrent query costs less than fully scoring one.
+
+On a mesh, the (C, B) key matrix is sharded over the column axis exactly
+like the profiles (``repro.exec.sharded.place_sharded_corpus`` pads with
+the kernel's corpus sentinel): every device probes its own shard, so the
+candidate stage scales with the lake alongside the scorer.
 """
 from __future__ import annotations
 

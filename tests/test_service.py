@@ -275,3 +275,151 @@ def test_request_validation():
         DiscoveryRequest()                      # neither
     with pytest.raises(ValueError):
         DiscoveryRequest(column_id=1, values=["a"])   # both
+
+
+# ---------------------------------------------------------------------------
+# executor-era engine surface: stats(), cost-aware cache, signature upkeep
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_expose_plan_and_cache(lake_and_model, catalog_dir):
+    lake, model = lake_and_model
+    engine = DiscoveryEngine.from_catalog(ColumnCatalog(catalog_dir), model,
+                                          EngineConfig(k=5, mode="lsh"))
+    engine.query(DiscoveryRequest(column_id=1))
+    engine.query(DiscoveryRequest(column_id=1))        # cache hit
+    engine.query(DiscoveryRequest(column_id=2))
+    s = engine.stats()
+    assert s["queries"] == 3
+    assert s["cache"]["hits"] == 1 and s["cache"]["misses"] == 2
+    assert s["cache"]["admitted"] == 2
+    assert s["plans"] == {"local-hybrid": 2}           # hits skip the planner
+    assert s["last_plan"]["kind"] == "local-hybrid"
+    assert s["last_plan"]["cost"]["total_flops"] > 0
+    assert s["last_plan"]["budget"] == engine.candidate_budget
+
+
+def test_engine_cache_cost_aware_admission(lake_and_model, catalog_dir):
+    """Cheap results are refused admission when the cache is full of more
+    expensive ones, and eviction removes the cheapest entry first."""
+    lake, model = lake_and_model
+    engine = DiscoveryEngine.from_catalog(ColumnCatalog(catalog_dir), model,
+                                          EngineConfig(cache_entries=2))
+    engine._cache_put(b"full-scan", ["A"], 100.0)
+    engine._cache_put(b"pruned", ["B"], 40.0)
+    engine._cache_put(b"cheap", ["C"], 10.0)           # < every resident cost
+    assert b"cheap" not in engine._cache
+    assert engine.stats()["cache"]["rejected"] == 1
+    engine._cache_put(b"mid", ["D"], 60.0)             # evicts the 40.0 entry
+    assert set(engine._cache) == {b"full-scan", b"mid"}
+    assert engine.stats()["cache"]["evicted"] == 1
+    # capacity 0 disables caching entirely
+    engine2 = DiscoveryEngine.from_catalog(ColumnCatalog(catalog_dir), model,
+                                           EngineConfig(cache_entries=0))
+    r1 = engine2.query(DiscoveryRequest(column_id=3))
+    r2 = engine2.query(DiscoveryRequest(column_id=3))
+    assert not r1.cached and not r2.cached
+
+
+def test_engine_auto_mode_plans_by_cost(lake_and_model, catalog_dir):
+    """auto on a big lake prunes; on a tiny catalog it falls back to the
+    brute scan (probe overhead beats the savings)."""
+    lake, model = lake_and_model
+    big = DiscoveryEngine.from_catalog(ColumnCatalog(catalog_dir), model,
+                                       EngineConfig(k=10, mode="auto"))
+    big.query(DiscoveryRequest(column_id=0))
+    assert big.stats()["last_plan"]["kind"] == "local-hybrid"
+
+    import tempfile
+    root = tempfile.mkdtemp(prefix="freyja_tiny_")
+    tiny_cat = ColumnCatalog(root, n_perm=128)
+    tiny_cat.add_table("t", [("x", [f"v{i}" for i in range(40)]),
+                             ("y", [f"w{i}" for i in range(40)])])
+    tiny = DiscoveryEngine.from_catalog(tiny_cat, model,
+                                        EngineConfig(k=10, mode="auto"))
+    tiny.query(DiscoveryRequest(column_id=0))
+    assert tiny.stats()["last_plan"]["kind"] == "local-all"
+
+
+def test_compact_resigns_signatures(tmp_path):
+    """compact(n_perm=, minhash_seed=) re-MinHashes from the stored value
+    sketches instead of silently keeping stale signatures."""
+    from repro.kernels import ops
+    cat = ColumnCatalog(str(tmp_path), n_perm=64, minhash_seed=0)
+    cat.add_table("a", [("x", [f"v{i}" for i in range(100)]),
+                        ("y", [f"w{i % 9}" for i in range(50)])])
+    cat.add_table("b", [("z", [f"v{i}" for i in range(40, 140)])])
+    cat.drop_table("b")
+    old = cat.snapshot()
+    assert old.signatures.shape == (2, 64)      # b is tombstoned already
+
+    cat.compact(n_perm=128, minhash_seed=3)
+    assert cat.n_perm == 128
+    snap = cat.snapshot()
+    assert snap.n_columns == 2 and snap.names == ["x", "y"]
+    assert snap.signatures.shape == (2, 128)
+    assert snap.minhash_seed == 3
+    # bit-exact vs re-MinHashing the surviving stored values
+    seg = cat.manifest["segments"][0]
+    vals = np.load(os.path.join(str(tmp_path), seg, "values.npy"))
+    want = np.asarray(ops.minhash(vals, n_perm=128, seed=3))
+    np.testing.assert_array_equal(snap.signatures, want)
+    # a reopened catalog signs external queries with the new geometry
+    assert ColumnCatalog(str(tmp_path)).n_perm == 128
+
+    # a second compaction without params keeps the new signatures
+    cat.compact()
+    np.testing.assert_array_equal(cat.snapshot().signatures, snap.signatures)
+
+
+def test_compact_resign_requires_stored_values(tmp_path):
+    cat = ColumnCatalog(str(tmp_path), n_perm=64)
+    cat.add_table("a", [("x", [f"v{i}" for i in range(30)])])
+    seg = cat.manifest["segments"][0]
+    os.remove(os.path.join(str(tmp_path), seg, "values.npy"))  # legacy seg
+    with pytest.raises(ValueError, match="predate value storage"):
+        cat.compact(n_perm=128)
+    cat.compact()                        # plain merge still works
+    assert cat.snapshot().signatures.shape == (1, 64)
+
+
+def test_compact_preserves_resign_source_across_legacy_merge(tmp_path):
+    """A plain compact() over a mix of legacy and value-carrying segments
+    must keep the re-sign source of the segments that have one (tracked by
+    a validity mask), so dropping the legacy tables later restores full
+    signature maintenance without re-ingesting everything."""
+    cat = ColumnCatalog(str(tmp_path), n_perm=64)
+    cat.add_table("a", [("x", [f"v{i}" for i in range(30)])])
+    cat.add_table("b", [("y", [f"w{i}" for i in range(20)])])
+    seg_b = cat.manifest["segments"][1]
+    os.remove(os.path.join(str(tmp_path), seg_b, "values.npy"))   # legacy
+
+    cat.compact()                        # plain merge: source survives
+    seg = cat.manifest["segments"][0]
+    valid = np.load(os.path.join(str(tmp_path), seg, "values_valid.npy"))
+    assert valid.tolist() == [True, False]
+    with pytest.raises(ValueError, match="predate value storage"):
+        cat.compact(n_perm=128)          # the legacy row still blocks
+
+    cat.drop_table("b")                  # shed the legacy rows...
+    cat.compact(n_perm=128, minhash_seed=5)     # ...and re-sign works again
+    snap = cat.snapshot()
+    assert snap.names == ["x"]
+    assert snap.signatures.shape == (1, 128) and snap.minhash_seed == 5
+
+
+def test_resigned_catalog_still_serves(lake_and_model, tmp_path):
+    """End-to-end: retune the LSH geometry at compaction, refresh the
+    engine, and keep recall on the pruned plan."""
+    lake, model = lake_and_model
+    from repro.core import select_queries
+    root = str(tmp_path)
+    cat = ColumnCatalog(root, n_perm=64, minhash_seed=0)
+    add_lake(cat, lake)
+    cat.compact(n_perm=128, minhash_seed=11)
+    engine = DiscoveryEngine.from_catalog(
+        ColumnCatalog(root), model,
+        EngineConfig(k=10, mode="lsh", lsh=LSHConfig(n_bands=64)))
+    qids = select_queries(lake, 8)
+    rec = measure_recall(engine, qids, k=10)
+    assert rec["recall"] >= 0.9, rec
+    assert rec["scored_fraction"] < 0.25, rec
