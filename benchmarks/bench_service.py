@@ -12,6 +12,11 @@ engine ran locally or over a mesh.
 
 ``--smoke`` runs one small lake in seconds and **fails (exit 1) on a
 recall@10 regression below the gate** — the CI hook after the tier-1 suite.
+
+``--sweep-blocks`` additionally sweeps the ``lsh_probe`` / ``fused_score``
+Pallas tile shapes (block_q × block_c/block_n) and records the full timing
+grid plus the fastest configuration under ``block_sweep`` in the JSON —
+the measured input for retuning the kernels' VMEM-fit default tiles.
 """
 from __future__ import annotations
 
@@ -31,6 +36,12 @@ N_QUERIES = 24
 SMOKE_N_QUERIES = 12
 BATCH = 8
 RECALL_GATE = 0.9
+
+# --sweep-blocks tile grids for the two hot Pallas kernels (ROADMAP:
+# "native Pallas tuning" — defaults were chosen for VMEM fit, not measured)
+SWEEP_BLOCK_Q = (8, 16, 32)
+SWEEP_BLOCK_C = (128, 256, 512, 1024)      # lsh_probe corpus tile
+SWEEP_BLOCK_N = (128, 256, 512)            # fused_score corpus tile
 
 
 def _bench_engine(engine, qids, requests):
@@ -60,7 +71,65 @@ def _bench_engine(engine, qids, requests):
     }
 
 
-def run(smoke: bool = False):
+def _time_best_of(fn, repeats: int = 3) -> float:
+    """Seconds for one call, best of ``repeats`` after a compile warm-up."""
+    np.asarray(fn())                       # warm-up: jit compile + dispatch
+    best = np.inf
+    for _ in range(repeats):
+        with Timer() as t:
+            np.asarray(fn())               # asarray blocks until ready
+        best = min(best, t.s)
+    return best
+
+
+def sweep_block_sizes(n_tables: int = 45, n_queries: int = 16,
+                      repeats: int = 3) -> dict:
+    """Sweep ``lsh_probe`` / ``fused_score`` tile shapes on the bench lake.
+
+    Times every (block_q, block_c/block_n) point best-of-``repeats`` and
+    records the full grid plus the fastest configuration per kernel —
+    the measured replacement for the VMEM-fit default tiles. On CPU the
+    kernels run in interpret mode, so the recorded best is per-host; on a
+    TPU host the same sweep measures the native tiles.
+    """
+    from functools import partial
+
+    from repro.core import profile_lake, select_queries
+    from repro.kernels import ops
+    from repro.service.lsh import band_keys
+
+    lake = bench_lake(seed=1, n_tables=n_tables)
+    model = bench_model()
+    prof = profile_lake(lake.batch)
+    z, w = prof.zscored.astype(np.float32), prof.words
+    sigs = np.asarray(ops.minhash(lake.batch.values32, n_perm=128, seed=0))
+    qids = select_queries(lake, n_queries)
+    ckeys = band_keys(sigs, 64)
+    qkeys = ckeys[qids]
+
+    out = {"n_columns": int(z.shape[0]), "n_queries": int(n_queries),
+           "repeats": int(repeats)}
+    grid = []
+    for bq in SWEEP_BLOCK_Q:
+        for bc in SWEEP_BLOCK_C:
+            s = _time_best_of(partial(ops.lsh_probe, qkeys, ckeys,
+                                      block_q=bq, block_c=bc), repeats)
+            grid.append({"block_q": bq, "block_c": bc, "ms": s * 1e3})
+    out["lsh_probe"] = {"grid": grid,
+                        "best": min(grid, key=lambda g: g["ms"])}
+    grid = []
+    for bq in SWEEP_BLOCK_Q:
+        for bn in SWEEP_BLOCK_N:
+            s = _time_best_of(partial(ops.fused_score, z[qids], w[qids],
+                                      z, w, model.gbdt,
+                                      block_q=bq, block_n=bn), repeats)
+            grid.append({"block_q": bq, "block_n": bn, "ms": s * 1e3})
+    out["fused_score"] = {"grid": grid,
+                          "best": min(grid, key=lambda g: g["ms"])}
+    return out
+
+
+def run(smoke: bool = False, sweep_blocks: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
@@ -125,6 +194,17 @@ def run(smoke: bool = False):
                      f"scored={100*lsh['scored_fraction']:.0f}%"))
         record["lakes"].append(entry)
 
+    if sweep_blocks:
+        sweep = sweep_block_sizes(n_tables=min(table_sizes),
+                                  n_queries=n_queries)
+        record["block_sweep"] = sweep
+        for kern in ("lsh_probe", "fused_score"):
+            best = sweep[kern]["best"]
+            shape = ",".join(f"{k}={v}" for k, v in best.items()
+                             if k != "ms")
+            rows.append((f"service/sweep/{kern}", best["ms"] * 1e3,
+                         f"best {shape} ({best['ms']:.2f} ms)"))
+
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
     rows.append(("service/json", 0.0, os.path.abspath(OUT_JSON)))
@@ -146,6 +226,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one small lake, fast; exit 1 below the recall gate")
+    ap.add_argument("--sweep-blocks", action="store_true",
+                    help="sweep lsh_probe/fused_score tile shapes and "
+                         "record the best configuration in the bench json")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke):
+    for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks):
         print(",".join(map(str, r)))

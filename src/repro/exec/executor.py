@@ -105,6 +105,28 @@ class Executor:
         # sharded state, built lazily per shard_axes
         self._placed: dict[tuple, dict] = {}
         self._pipelines: dict[tuple, object] = {}
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Release the corpus's device placements (local copies AND the
+        cached sharded placement). One executor wraps one immutable catalog
+        version; the MVCC engine keeps a per-version executor cache and
+        closes each executor when the last in-flight query batch unpins its
+        version — so retiring a snapshot actually frees device memory
+        instead of leaking one corpus placement per catalog refresh.
+        Idempotent; ``execute`` after close raises."""
+        if self._closed:
+            return
+        self._closed = True
+        self._placed.clear()
+        self._pipelines.clear()
+        self._z = self._w = self._cids = self._tids = self._ckeys = None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     # -- sharded state ------------------------------------------------------
 
@@ -144,6 +166,9 @@ class Executor:
         keys, required by pruned plans. Returns numpy
         ``(scores (Q, k), ids (Q, k), n_scored (Q,))``.
         """
+        if self._closed:
+            raise RuntimeError("executor is closed (its snapshot version "
+                               "was retired); pin a live version instead")
         q = int(np.asarray(zq).shape[0])
         if self.n_columns == 0 or q == 0:
             return (np.full((q, plan.k), -np.inf, np.float32),

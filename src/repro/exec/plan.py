@@ -136,8 +136,10 @@ class Planner:
                                 shards_eff)
             c_pruned = self._cost("hybrid", n_queries, n_columns, budget,
                                   shards_eff)
-            cand = ("hybrid" if c_pruned["total_flops"] < c_full["total_flops"]
-                    else "all")
+            # a calibrated cost_fn reports measured seconds as total_cost;
+            # the analytic default only has flops
+            pick = lambda c: c.get("total_cost", c["total_flops"])
+            cand = "hybrid" if pick(c_pruned) < pick(c_full) else "all"
 
         if not sharded:
             n_shards = 1

@@ -19,6 +19,7 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -276,6 +277,96 @@ def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
         "n_shards": shards,
         "scored_per_device": int(m),
     }
+
+
+def calibrate_stage_costs(bench="BENCH_service.json", *, k: int = 10,
+                          n_bands: int = 64):
+    """Fit per-stage time constants from measured service-bench timings.
+
+    Closes the ROADMAP "measured cost model" item: the analytic
+    :func:`discovery_stage_costs` predicts *flops*, but the "auto" planner
+    needs *time* crossovers that match the machine.  Each
+    ``BENCH_service.json`` lake entry records the measured per-query
+    latency of the plan each mode executed; regressing those against the
+    analytic per-stage flop counts (candidates / score / merge, plus a
+    fixed dispatch overhead) yields seconds-per-flop constants for this
+    host.  The full-scan rows pin the score/merge constants (their
+    candidate flops are zero); the pruned rows then identify the candidate
+    constant.
+
+    ``bench`` is a path or an already-loaded record.  Returns
+    ``(constants, cost_fn)`` where ``cost_fn`` is a drop-in for the
+    planner/engine hook (``Planner(cost_fn=...)`` /
+    ``EngineConfig(cost_fn=...)``): it returns the analytic stage dict
+    augmented with ``total_cost`` (predicted seconds for the batch), which
+    "auto" mode prefers over raw flops when present.
+    """
+    import json
+    if isinstance(bench, (str, os.PathLike)):
+        with open(bench) as f:
+            record = json.load(f)
+    else:
+        record = bench
+
+    rows_x, rows_y = [], []
+    for lake in record.get("lakes", []):
+        c = int(lake["n_columns"])
+        for stats in lake.get("modes", {}).values():
+            kind = stats.get("plan") or ""
+            cand = ("hybrid" if kind.endswith("hybrid") else
+                    "lsh" if kind.endswith("lsh") else "all")
+            budget = int(stats.get("plan_budget") or c)
+            stg = discovery_stage_costs(1, c, budget=budget, candidates=cand,
+                                        k=k, n_bands=n_bands)["stages"]
+            rows_x.append([stg["candidates"]["flops"], stg["score"]["flops"],
+                           stg["merge"]["flops"], 1.0])
+            rows_y.append(float(stats["batch_ms_per_query"]) * 1e-3)
+    if len(rows_y) < 4:
+        raise ValueError(
+            f"need >= 4 timed (lake, mode) observations to fit 4 constants; "
+            f"{bench!r} has {len(rows_y)} — run benchmarks/bench_service.py "
+            f"first")
+
+    x = np.asarray(rows_x, np.float64)
+    y = np.asarray(rows_y, np.float64)
+    coef, *_ = np.linalg.lstsq(x, y, rcond=None)
+    coef = np.clip(coef, 0.0, None)     # a stage can't have negative cost
+    pred = x @ coef
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    constants = {
+        "candidates_s_per_flop": float(coef[0]),
+        "score_s_per_flop": float(coef[1]),
+        "merge_s_per_flop": float(coef[2]),
+        "fixed_s_per_query": float(coef[3]),
+        "n_obs": len(rows_y),
+        "r2": 1.0 - ss_res / max(ss_tot, 1e-30),
+    }
+    return constants, make_calibrated_cost_fn(constants)
+
+
+def make_calibrated_cost_fn(constants: dict):
+    """Wrap fitted per-stage constants into a planner ``cost_fn`` hook."""
+
+    def cost_fn(n_queries: int, n_columns: int, *, budget: int,
+                candidates: str = "hybrid", k: int = 10, n_bands: int = 64,
+                n_trees: int = 30, tree_depth: int = 4,
+                n_shards: int = 1) -> dict:
+        c = discovery_stage_costs(n_queries, n_columns, budget=budget,
+                                  candidates=candidates, k=k,
+                                  n_bands=n_bands, n_trees=n_trees,
+                                  tree_depth=tree_depth, n_shards=n_shards)
+        stg = c["stages"]
+        seconds = (constants["fixed_s_per_query"] * c["n_queries"]
+                   + constants["candidates_s_per_flop"]
+                   * stg["candidates"]["flops"]
+                   + constants["score_s_per_flop"] * stg["score"]["flops"]
+                   + constants["merge_s_per_flop"] * stg["merge"]["flops"])
+        c["total_cost"] = float(seconds)
+        c["calibrated"] = True
+        return c
+
+    return cost_fn
 
 
 def w_avg_decode(cfg, seq: int) -> float:

@@ -14,6 +14,13 @@ chosen plan, serving stats, and recall against the exact scan:
 Add ``--mesh`` (with XLA_FLAGS=--xla_force_host_platform_device_count=8)
 to shard the lake over local devices — ``--mode lsh`` then runs the
 distributed LSH plan: per-device bucket probe + one small all_gather.
+
+``--follow`` turns the engine into a read replica: it tails the catalog's
+manifest chain and refreshes onto each new version before serving (the
+demo publishes a table mid-run to show the pickup).  ``--calibrate
+BENCH_service.json`` fits per-stage cost constants from measured bench
+timings and plugs them into the planner, so ``--mode auto`` crossovers
+are measured, not analytic.
 """
 from __future__ import annotations
 
@@ -30,7 +37,7 @@ from repro.core.predictor import JoinQualityModel
 
 def serve_mode(args, lake, model):
     """Persist → restart → serve through the online engine."""
-    from repro.service import (ColumnCatalog, DiscoveryEngine,
+    from repro.service import (CatalogReader, ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
                                add_lake, measure_recall, serve_discovery)
 
@@ -60,11 +67,27 @@ def serve_mode(args, lake, model):
         print(f"catalog: reusing {len(catalog.tables())} tables from "
               f"{args.catalog}")
 
+    cost_fn = None
+    if args.calibrate:
+        from repro.launch.costmodel import calibrate_stage_costs
+        constants, cost_fn = calibrate_stage_costs(args.calibrate)
+        print(f"calibrated cost model from {args.calibrate}: "
+              f"r2={constants['r2']:.3f} over {constants['n_obs']} obs, "
+              f"score={constants['score_s_per_flop']:.3e} s/flop, "
+              f"fixed={1e3*constants['fixed_s_per_query']:.3f} ms/query")
+
     # restart path: a fresh process would do exactly this
     engine = DiscoveryEngine.from_catalog(
         ColumnCatalog(args.catalog), model,
         EngineConfig(k=args.k, mode=args.mode,
-                     lsh=LSHConfig(n_bands=args.lsh_bands)), mesh=mesh)
+                     lsh=LSHConfig(n_bands=args.lsh_bands),
+                     cost_fn=cost_fn), mesh=mesh)
+    if args.follow:
+        # follower mode: the engine tails the manifest chain, picking up
+        # versions published by any concurrent writer before each batch
+        engine.follow(CatalogReader(args.catalog))
+        print(f"follower: tailing {args.catalog} from version "
+              f"{engine.version}")
     qids = select_queries(lake, args.queries)
     reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
             for q in qids]
@@ -89,6 +112,19 @@ def serve_mode(args, lake, model):
         names = [m.column for m in r.matches[:5]]
         print(f"  {r.name} ({r.n_candidates} scored) -> {names}")
 
+    if args.follow:
+        # demonstrate replication: a writer publishes a delta segment and
+        # the follower's next batch observes the new version
+        writer = ColumnCatalog(args.catalog)
+        if "follow_demo" not in writer.tables():
+            writer.add_table("follow_demo",
+                             [("demo_ids", [f"demo_{i}" for i in range(64)])])
+        v0 = engine.version
+        engine.query(DiscoveryRequest(name="demo", column_id=0))
+        print(f"follower: observed version {engine.version} (was {v0}) "
+              f"after a concurrent add_table; "
+              f"{engine.n_columns} columns live")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -111,6 +147,13 @@ def main():
                          "platform_device_count=N to fake N devices)")
     ap.add_argument("--lsh-bands", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--follow", action="store_true",
+                    help="follower mode: tail the catalog manifest chain "
+                         "and refresh onto new versions between batches")
+    ap.add_argument("--calibrate", default=None, metavar="BENCH_JSON",
+                    help="fit per-stage cost constants from a "
+                         "BENCH_service.json and use them as the planner's "
+                         "cost model (mode=auto crossovers become measured)")
     args = ap.parse_args()
 
     t0 = time.perf_counter()

@@ -2,26 +2,39 @@
 
 Layers (bottom-up):
 
-* ``catalog``  — persistent on-disk column catalog: profile / signature /
-  metadata segments with incremental add/drop and compaction;
-* ``lsh``      — banded-MinHash band keys over the catalog's signatures
+* ``catalog``   — persistent on-disk column catalog split into an MVCC
+  writer/reader pair: :class:`CatalogStore` (immutable delta segments,
+  versioned manifest chain advanced via compare-and-swap, advisory
+  :class:`WriterLease` for compaction) and :class:`CatalogReader` (tails
+  the chain, serves immutable snapshots keyed by version);
+* ``compactor`` — :class:`BackgroundCompactor`: off-thread compaction
+  against a pinned version, CAS-published swap, concurrent adds retained
+  via manifest replay;
+* ``lsh``       — banded-MinHash band keys over the catalog's signatures
   (the candidate-stage input of the execution layer);
-* ``engine``   — ``DiscoveryEngine``: batches concurrent queries, plans
-  each micro-batch through the unified candidate→score→merge executor
-  (``repro.exec``: full-scan / LSH / hybrid × local / mesh-sharded), and
-  fronts it with a cost-aware LRU result cache + per-plan stats();
-* ``api``      — request/response dataclasses and the ``serve_discovery``
+* ``engine``    — ``DiscoveryEngine``: batches concurrent queries, pins
+  one snapshot version per batch (refcounted release of retired
+  versions), plans each micro-batch through the unified
+  candidate→score→merge executor (``repro.exec``), and fronts it with a
+  version-namespaced cost-aware LRU result cache + per-plan stats();
+  ``engine.follow(reader)`` turns it into a read replica;
+* ``api``       — request/response dataclasses and the ``serve_discovery``
   entry point.
 """
 from repro.service.api import (ColumnMatch, DiscoveryRequest,
                                DiscoveryResponse, serve_discovery)
-from repro.service.catalog import CatalogSnapshot, ColumnCatalog, add_lake
+from repro.service.catalog import (CatalogReader, CatalogSnapshot,
+                                   CatalogStore, ColumnCatalog,
+                                   LeaseHeldError, WriterLease, add_lake)
+from repro.service.compactor import BackgroundCompactor
 from repro.service.engine import DiscoveryEngine, EngineConfig, measure_recall
 from repro.service.lsh import LSHConfig, LSHIndex, band_keys
 
 __all__ = [
     "ColumnMatch", "DiscoveryRequest", "DiscoveryResponse", "serve_discovery",
-    "CatalogSnapshot", "ColumnCatalog", "add_lake",
+    "CatalogReader", "CatalogSnapshot", "CatalogStore", "ColumnCatalog",
+    "LeaseHeldError", "WriterLease", "add_lake",
+    "BackgroundCompactor",
     "DiscoveryEngine", "EngineConfig", "measure_recall",
     "LSHConfig", "LSHIndex", "band_keys",
 ]

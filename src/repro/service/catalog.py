@@ -1,39 +1,56 @@
 """Persistent on-disk column catalog — the serving-grade lake index.
 
 The paper's point is that a column's footprint in the index is a few KB of
-profile; this module makes that index *durable and incremental* so a lake
-can grow (or shrink) without reprofiling:
+profile; this module makes that index *durable, incremental and
+multi-writer* so a lake can grow (or shrink) under concurrent ingest
+without reprofiling:
 
-* every ``add_table`` profiles the new columns on-device, MinHashes their
-  values, and writes one immutable **delta segment** (plain ``.npy`` files +
-  a JSON sidecar) — the running service never rewrites old segments;
+* :class:`CatalogStore` — the writer half. Every ``add_table`` profiles
+  the new columns on-device, MinHashes their values, and writes one
+  immutable **delta segment** (plain ``.npy`` files + a JSON sidecar); the
+  manifest advance is a **compare-and-swap** on a chain of immutable
+  per-version manifest files, so several ingest workers append delta
+  segments concurrently — a lost race re-reads the head and retries
+  (rewriting only the tid-dependent sidecar files, never re-profiling);
 * ``drop_table`` is a manifest tombstone (O(1));
-* ``compact()`` merges live segments into one and clears tombstones;
-  passing ``n_perm=`` / ``minhash_seed=`` **re-signs** every live column
-  from the per-segment value sketches (``values.npy``) instead of silently
-  keeping stale signatures, so the LSH geometry can be retuned without
-  re-ingesting the lake;
-* ``snapshot()`` materializes the live columns (profiles, signatures,
-  table/column metadata) for the query engine; segment arrays are read with
-  ``mmap_mode`` so a snapshot touches only the bytes it concatenates.
+* ``compact()`` merges the segments live at a **pinned** version into one
+  and CAS-publishes the swap — segments appended by concurrent writers
+  after the pin are retained via manifest replay, and an advisory
+  :class:`WriterLease` keeps compactors mutually exclusive.  Passing
+  ``n_perm=`` / ``minhash_seed=`` **re-signs** every live column from the
+  per-segment value sketches (``values.npy``) so the LSH geometry can be
+  retuned without re-ingesting the lake;
+* :class:`CatalogReader` — the follower half: tails the manifest chain
+  (``poll()``) and materializes immutable :class:`CatalogSnapshot`\\ s
+  keyed by version, so read replicas observe every version in order and
+  queries can pin one version for their whole pipeline.
 
 Layout::
 
-    <root>/MANIFEST.json
-    <root>/seg-00000001/{numeric,words,n_rows,sigs,table_ids}.npy
-    <root>/seg-00000001/values.npy     # folded value hashes (re-sign source)
-    <root>/seg-00000001/meta.json      # column names, table name -> id
+    <root>/MANIFEST.json            # pointer to the newest version (hint)
+    <root>/MANIFEST-00000007.json   # immutable per-version manifests (CAS)
+    <root>/LEASE.json               # advisory writer lease (compaction)
+    <root>/seg-00000001-3fa9c1/{numeric,words,n_rows,sigs,table_ids}.npy
+    <root>/seg-00000001-3fa9c1/values.npy  # folded value hashes (re-sign src)
+    <root>/seg-00000001-3fa9c1/meta.json   # column names, table name -> id
 
-The manifest is the single source of truth and is replaced atomically;
-a crash mid-``add_table`` leaves at worst an orphaned segment directory
-that the manifest never references.
+The CAS primitive is ``os.link`` of a fully-written temp file onto
+``MANIFEST-{v+1}`` — creation fails atomically if another writer already
+published that version.  ``MANIFEST.json`` is a best-effort pointer
+updated after each publish; readers resolve the true head by probing the
+chain forward from it, so a stale pointer costs a few extra ``stat``\\ s,
+never a wrong answer.  A crash mid-``add_table`` leaves at worst an
+orphaned segment directory that no manifest references.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import json
 import os
 import shutil
+import threading
+import time
 from typing import Iterable, Sequence
 
 import numpy as np
@@ -44,6 +61,7 @@ from repro.core.profiles import LakeProfiles, compute_profiles_batch
 from repro.kernels import ops
 
 MANIFEST = "MANIFEST.json"
+LEASE = "LEASE.json"
 _PROFILE_PAD_C = 8     # pad column counts so repeated adds reuse compiles
 
 
@@ -87,7 +105,12 @@ def _slice_batch(batch: ColumnBatch, idx: np.ndarray) -> ColumnBatch:
 
 @dataclasses.dataclass
 class CatalogSnapshot:
-    """Materialized live view of the catalog (what the engine serves from)."""
+    """Materialized live view of the catalog at one manifest version.
+
+    Immutable once built (all arrays are copies off the segment mmaps), so
+    a query pipeline that pins a snapshot is isolated from every concurrent
+    add / drop / compaction — including segment deletion after a swap.
+    """
 
     profiles: LakeProfiles          # zscored lazily via lake-wide mean/std
     signatures: np.ndarray          # (C, P) uint32 MinHash signatures
@@ -102,24 +125,246 @@ class CatalogSnapshot:
         return int(self.signatures.shape[0])
 
 
-class ColumnCatalog:
-    """Open (or create) the catalog rooted at ``root``."""
+# ---------------------------------------------------------------------------
+# manifest chain I/O (shared by store and reader)
+# ---------------------------------------------------------------------------
+
+def _manifest_name(version: int) -> str:
+    return f"MANIFEST-{int(version):08d}.json"
+
+
+def _read_json(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def read_manifest_version(root: str, version: int) -> dict | None:
+    """The immutable manifest at ``version`` (pointer fallback for catalogs
+    written before the CAS chain existed)."""
+    m = _read_json(os.path.join(root, _manifest_name(version)))
+    if m is None:
+        ptr = _read_json(os.path.join(root, MANIFEST))
+        if ptr is not None and int(ptr["version"]) == int(version):
+            return ptr
+    return m
+
+
+def read_latest_manifest(root: str) -> dict | None:
+    """Resolve the head of the manifest chain: start from the pointer hint
+    and probe forward until the next version is missing."""
+    m = _read_json(os.path.join(root, MANIFEST))
+    v = int(m["version"]) if m is not None else -1
+    while True:
+        nxt = _read_json(os.path.join(root, _manifest_name(v + 1)))
+        if nxt is None:
+            return m
+        m, v = nxt, v + 1
+
+
+def _empty_arrays(n_perm: int) -> dict[str, np.ndarray]:
+    return {"numeric": np.zeros((0, FT.F_NUM), np.float32),
+            "words": np.zeros((0, FT.F_WORDS), np.uint32),
+            "n_rows": np.zeros((0,), np.int32),
+            "sigs": np.zeros((0, n_perm), np.uint32),
+            "table_ids": np.zeros((0,), np.int32)}
+
+
+def _load_segment(root: str, seg: str) -> dict:
+    seg_dir = os.path.join(root, seg)
+    out = {k: np.load(os.path.join(seg_dir, f"{k}.npy"), mmap_mode="r")
+           for k in ("numeric", "words", "n_rows", "sigs", "table_ids")}
+    vpath = os.path.join(seg_dir, "values.npy")
+    if os.path.exists(vpath):    # absent in pre-maintenance segments
+        out["values"] = np.load(vpath, mmap_mode="r")
+        mpath = os.path.join(seg_dir, "values_valid.npy")
+        if os.path.exists(mpath):
+            out["values_valid"] = np.load(mpath, mmap_mode="r")
+    with open(os.path.join(seg_dir, "meta.json")) as f:
+        meta = json.load(f)
+    out["names"] = meta["names"]
+    out["tables"] = meta["tables"]
+    return out
+
+
+def materialize_snapshot(root: str, manifest: dict) -> CatalogSnapshot:
+    """Materialize the live columns of ``manifest`` into an immutable
+    :class:`CatalogSnapshot` (segment arrays are read with ``mmap_mode`` so
+    this touches only the bytes it concatenates)."""
+    dropped = set(manifest["dropped_ids"])
+    parts = [_load_segment(root, s) for s in manifest["segments"]]
+    acc = {k: [] for k in ("numeric", "words", "n_rows", "sigs",
+                           "table_ids")}
+    names: list[str] = []
+    table_names: dict[int, str] = {}
+    for part in parts:
+        keep = ~np.isin(part["table_ids"], list(dropped))
+        for k in acc:
+            acc[k].append(part[k][keep])
+        names.extend([n for n, ok in zip(part["names"], keep) if ok])
+        table_names.update({i: t for t, i in part["tables"].items()
+                            if i not in dropped})
+
+    empty = _empty_arrays(int(manifest["n_perm"]))
+    cat = {k: (np.concatenate(v) if v else empty[k])    # copies off mmap
+           for k, v in acc.items()}
+    numeric = cat["numeric"].astype(np.float32)
+    c = numeric.shape[0]
+    mean = numeric.mean(axis=0) if c else np.zeros((FT.F_NUM,), np.float32)
+    std = numeric.std(axis=0) if c else np.ones((FT.F_NUM,), np.float32)
+    std = np.where(std < 1e-6, 1.0, std).astype(np.float32)
+    profiles = LakeProfiles(numeric=numeric, words=cat["words"],
+                            n_rows=cat["n_rows"],
+                            mean=mean.astype(np.float32), std=std)
+    return CatalogSnapshot(profiles=profiles, signatures=cat["sigs"],
+                           table_ids=cat["table_ids"], names=names,
+                           table_names=table_names,
+                           version=int(manifest["version"]),
+                           minhash_seed=int(manifest["minhash_seed"]))
+
+
+# ---------------------------------------------------------------------------
+# writer lease
+# ---------------------------------------------------------------------------
+
+class LeaseHeldError(RuntimeError):
+    """Another writer holds a live lease over this catalog."""
+
+
+class WriterLease:
+    """Advisory time-bounded lease over a catalog root.
+
+    Used to keep compactors mutually exclusive (delta appends need no lease
+    — the manifest CAS already serializes them).  Acquisition atomically
+    creates ``LEASE.json``; an expired lease is stolen via atomic replace
+    and the steal verified by re-reading the token.  The lease is advisory:
+    it bounds concurrent *compaction work*, while manifest correctness is
+    always guaranteed by the CAS chain alone.
+    """
+
+    def __init__(self, root: str, *, owner: str | None = None,
+                 ttl_s: float = 60.0):
+        self.root = root
+        self.owner = owner or f"pid-{os.getpid()}"
+        self.ttl_s = float(ttl_s)
+        self.token = os.urandom(8).hex()
+        self._held = False
+
+    @property
+    def path(self) -> str:
+        return os.path.join(self.root, LEASE)
+
+    def _read(self) -> dict | None:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def _write_tmp(self) -> str:
+        rec = {"owner": self.owner, "token": self.token,
+               "expires": time.time() + self.ttl_s}
+        tmp = os.path.join(self.root, f".lease-{self.token}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        return tmp
+
+    def acquire(self) -> "WriterLease":
+        tmp = self._write_tmp()
+        try:
+            os.link(tmp, self.path)
+            self._held = True
+            return self
+        except FileExistsError:
+            pass
+        finally:
+            os.unlink(tmp)
+        cur = self._read()
+        if (cur is not None and cur.get("token") != self.token
+                and float(cur.get("expires", 0)) > time.time()):
+            raise LeaseHeldError(
+                f"catalog lease held by {cur.get('owner')!r} for another "
+                f"{float(cur['expires']) - time.time():.1f}s")
+        # expired (or unreadable) lease: unlink the record we judged
+        # expired iff it is still the one on disk, then race a fresh
+        # create-if-absent — exactly one stealer's link succeeds (a blind
+        # replace would let every stealer pass its own verification)
+        cur2 = self._read()
+        if (cur is not None and cur2 is not None
+                and cur2.get("token") == cur.get("token")):
+            try:
+                os.unlink(self.path)
+            except FileNotFoundError:
+                pass
+        tmp = self._write_tmp()
+        try:
+            os.link(tmp, self.path)
+        except FileExistsError:
+            raise LeaseHeldError("lost the race stealing an expired lease")
+        finally:
+            os.unlink(tmp)
+        self._held = True
+        return self
+
+    def renew(self) -> None:
+        if not self._held:
+            raise RuntimeError("cannot renew a lease that is not held")
+        tmp = self._write_tmp()
+        os.replace(tmp, self.path)
+
+    def release(self) -> None:
+        if not self._held:
+            return
+        self._held = False
+        cur = self._read()
+        if cur is not None and cur.get("token") == self.token:
+            try:
+                os.unlink(self.path)
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self) -> "WriterLease":
+        if not self._held:
+            self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# ---------------------------------------------------------------------------
+# store (writer half)
+# ---------------------------------------------------------------------------
+
+class CatalogStore:
+    """Open (or create) the catalog rooted at ``root``.
+
+    Safe for several concurrent writers (threads or processes, each with
+    its own store handle): every mutation is a CAS loop over the manifest
+    chain.  ``self.manifest`` is this handle's last-confirmed view of the
+    head; reads that must be fresh go through :meth:`_refresh`.
+    """
 
     def __init__(self, root: str, *, n_perm: int = 128, minhash_seed: int = 0):
         self.root = root
         os.makedirs(root, exist_ok=True)
-        path = os.path.join(root, MANIFEST)
-        if os.path.exists(path):
-            with open(path) as f:
-                self.manifest = json.load(f)
-        else:
-            self.manifest = {
+        self._mlock = threading.Lock()
+        self.stats = {"cas_retries": 0, "publishes": 0, "compactions": 0}
+        m = read_latest_manifest(root)
+        if m is None:
+            m = {
                 "version": 0, "n_perm": int(n_perm),
                 "minhash_seed": int(minhash_seed),
                 "next_table_id": 0, "next_segment": 1,
                 "segments": [], "tables": {}, "dropped_ids": [],
             }
-            self._write_manifest()
+            if not self._publish(m):        # lost the creation race
+                m = read_latest_manifest(root)
+        else:
+            self._ensure_chain(m)
+        self._set_manifest(m)
 
     # -- properties ---------------------------------------------------------
 
@@ -132,7 +377,64 @@ class ColumnCatalog:
         return int(self.manifest["version"])
 
     def tables(self) -> dict[str, int]:
-        return dict(self.manifest["tables"])
+        return dict(self._refresh()["tables"])
+
+    # -- manifest chain -----------------------------------------------------
+
+    def _set_manifest(self, m: dict) -> None:
+        with self._mlock:
+            if (not hasattr(self, "manifest")
+                    or int(m["version"]) >= self.version):
+                self.manifest = m
+
+    def _refresh(self) -> dict:
+        m = read_latest_manifest(self.root)
+        self._set_manifest(m)
+        return m
+
+    def _publish(self, m: dict) -> bool:
+        """CAS-advance the chain to ``m['version']``.  False = lost race."""
+        final = os.path.join(self.root, _manifest_name(m["version"]))
+        tmp = os.path.join(self.root,
+                           f".manifest-{os.urandom(6).hex()}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(m, f, indent=1)
+        try:
+            os.link(tmp, final)             # atomic create-if-absent
+        except FileExistsError:
+            return False
+        finally:
+            os.unlink(tmp)
+        self.stats["publishes"] += 1
+        self._update_pointer(m)
+        return True
+
+    def _update_pointer(self, m: dict) -> None:
+        """Best-effort MANIFEST.json hint (readers probe forward from it)."""
+        ptr = os.path.join(self.root, MANIFEST)
+        cur = _read_json(ptr)
+        if cur is not None and int(cur["version"]) >= int(m["version"]):
+            return
+        tmp = ptr + f".{os.urandom(4).hex()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(m, f, indent=1)
+        os.replace(tmp, ptr)                # atomic on POSIX
+
+    def _ensure_chain(self, m: dict) -> None:
+        """Backfill the chain file for a pre-CAS catalog's head version."""
+        final = os.path.join(self.root, _manifest_name(m["version"]))
+        if os.path.exists(final):
+            return
+        tmp = os.path.join(self.root,
+                           f".manifest-{os.urandom(6).hex()}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(m, f, indent=1)
+        try:
+            os.link(tmp, final)
+        except FileExistsError:
+            pass
+        finally:
+            os.unlink(tmp)
 
     # -- mutation -----------------------------------------------------------
 
@@ -141,10 +443,11 @@ class ColumnCatalog:
                   *, batch: ColumnBatch | None = None,
                   row_budget: int | None = None) -> int:
         """Register a table from raw string columns (``columns``) or an
-        already-packed ``ColumnBatch``. Writes one delta segment. Returns
-        the assigned table id."""
-        if name in self.manifest["tables"]:
-            raise ValueError(f"table {name!r} already in catalog")
+        already-packed ``ColumnBatch``. Writes one delta segment and
+        CAS-publishes the manifest advance; a lost race retries against the
+        new head, re-signing only if the LSH geometry changed underneath us
+        and rewriting only the tid-dependent sidecar files. Returns the
+        assigned table id."""
         if (columns is None) == (batch is None):
             raise ValueError("pass exactly one of columns= or batch=")
         if batch is None:
@@ -152,14 +455,61 @@ class ColumnCatalog:
         if batch.n_columns == 0:
             raise ValueError(f"table {name!r} has no columns")
 
-        numeric, words, sigs = self._profile_and_sign(batch)
-        tid = int(self.manifest["next_table_id"])
-        seg = f"seg-{int(self.manifest['next_segment']):08d}"
-        seg_dir = os.path.join(self.root, seg)
+        signed: dict[tuple[int, int], tuple] = {}   # geometry -> arrays
+        seg = seg_dir = None
+        seg_tid = seg_geom = None
+        try:
+            while True:
+                m = copy.deepcopy(self._refresh())
+                if name in m["tables"]:
+                    raise ValueError(f"table {name!r} already in catalog")
+                geom = (int(m["n_perm"]), int(m["minhash_seed"]))
+                if geom not in signed:
+                    signed[geom] = profile_and_sign(batch, *geom)
+                numeric, words, sigs = signed[geom]
+                tid = int(m["next_table_id"])
+                if seg is None:
+                    seg = (f"seg-{int(m['next_segment']):08d}-"
+                           f"{os.urandom(3).hex()}")
+                    seg_dir = os.path.join(self.root, seg)
+                    self._write_segment(seg_dir, batch, numeric, words,
+                                        sigs, tid, name)
+                    seg_tid, seg_geom = tid, geom
+                else:
+                    if geom != seg_geom:    # concurrent re-sign compaction
+                        np.save(os.path.join(seg_dir, "sigs.npy"), sigs)
+                        seg_geom = geom
+                    if tid != seg_tid:      # another writer took our tid
+                        np.save(os.path.join(seg_dir, "table_ids.npy"),
+                                np.full((batch.n_columns,), tid, np.int32))
+                        with open(os.path.join(seg_dir, "meta.json"),
+                                  "w") as f:
+                            json.dump({"names": list(batch.names),
+                                       "tables": {name: tid}}, f)
+                        seg_tid = tid
+
+                m["tables"][name] = tid
+                m["next_table_id"] = tid + 1
+                m["next_segment"] = int(m["next_segment"]) + 1
+                m["segments"].append(seg)
+                m["version"] = int(m["version"]) + 1
+                if self._publish(m):
+                    self._set_manifest(m)
+                    return tid
+                self.stats["cas_retries"] += 1
+        except BaseException:
+            if seg_dir is not None:         # never leak an orphan segment
+                shutil.rmtree(seg_dir, ignore_errors=True)
+            raise
+
+    @staticmethod
+    def _write_segment(seg_dir: str, batch: ColumnBatch, numeric, words,
+                       sigs, tid: int, name: str) -> None:
         os.makedirs(seg_dir, exist_ok=True)
         np.save(os.path.join(seg_dir, "numeric.npy"), numeric)
         np.save(os.path.join(seg_dir, "words.npy"), words)
-        np.save(os.path.join(seg_dir, "n_rows.npy"), batch.n_rows.astype(np.int32))
+        np.save(os.path.join(seg_dir, "n_rows.npy"),
+                batch.n_rows.astype(np.int32))
         np.save(os.path.join(seg_dir, "sigs.npy"), sigs)
         # the re-sign source for signature maintenance at compact()
         np.save(os.path.join(seg_dir, "values.npy"), batch.values32)
@@ -169,45 +519,91 @@ class ColumnCatalog:
             json.dump({"names": list(batch.names),
                        "tables": {name: tid}}, f)
 
-        self.manifest["tables"][name] = tid
-        self.manifest["next_table_id"] = tid + 1
-        self.manifest["next_segment"] = int(self.manifest["next_segment"]) + 1
-        self.manifest["segments"].append(seg)
-        self.manifest["version"] = self.version + 1
-        self._write_manifest()
-        return tid
-
     def drop_table(self, name: str) -> None:
         """Tombstone a table; its columns disappear from snapshots and its
         bytes are reclaimed at the next ``compact()``."""
-        tid = self.manifest["tables"].pop(name, None)
-        if tid is None:
-            raise KeyError(f"table {name!r} not in catalog")
-        self.manifest["dropped_ids"].append(int(tid))
-        self.manifest["version"] = self.version + 1
-        self._write_manifest()
+        while True:
+            m = copy.deepcopy(self._refresh())
+            if name not in m["tables"]:
+                raise KeyError(f"table {name!r} not in catalog")
+            tid = m["tables"].pop(name)
+            m["dropped_ids"].append(int(tid))
+            m["version"] = int(m["version"]) + 1
+            if self._publish(m):
+                self._set_manifest(m)
+                return
+            self.stats["cas_retries"] += 1
+
+    # -- compaction ---------------------------------------------------------
 
     def compact(self, *, n_perm: int | None = None,
                 minhash_seed: int | None = None,
-                resign_chunk: int = 256) -> None:
-        """Merge live segments into one; drop tombstoned columns; delete the
-        old segment directories.
+                resign_chunk: int = 256,
+                lease_ttl_s: float = 60.0,
+                on_built=None) -> None:
+        """Merge the segments live at a pinned version into one; drop
+        tombstoned columns; CAS-publish the swap; delete the replaced
+        segment directories.
+
+        Runs under the advisory :class:`WriterLease` (raises
+        :class:`LeaseHeldError` if another compactor holds it).  Concurrent
+        ``add_table`` / ``drop_table`` are safe: segments appended after
+        the pin are **retained via manifest replay** at publish time, and
+        tombstones laid after the pin stay tombstoned.  ``on_built`` (a
+        zero-arg callable) fires after the compacted segment is built and
+        before the publish — the hook concurrency tests synchronize on.
 
         Signature maintenance: passing ``n_perm`` and/or ``minhash_seed``
         re-MinHashes every live column from the stored per-segment value
         sketches (``values.npy``, in column chunks of ``resign_chunk``) and
         updates the manifest, so snapshots after the compaction carry the
-        new signature geometry. Segments written before value storage
+        new signature geometry.  A re-sign cannot replay concurrent adds
+        (their segments carry old-geometry signatures), so it restarts from
+        the new head instead.  Segments written before value storage
         existed cannot be re-signed and raise ``ValueError``.
         """
-        cur_seed = int(self.manifest["minhash_seed"])
-        new_perm = self.n_perm if n_perm is None else int(n_perm)
-        new_seed = cur_seed if minhash_seed is None else int(minhash_seed)
-        resign = new_perm != self.n_perm or new_seed != cur_seed
+        lease = WriterLease(self.root, ttl_s=lease_ttl_s).acquire()
+        try:
+            while True:
+                pinned = copy.deepcopy(self._refresh())
+                built = self._build_compacted(pinned, n_perm, minhash_seed,
+                                              resign_chunk,
+                                              renew=lease.renew)
+                lease.renew()           # a long build must not outlive ttl
+                if on_built is not None:
+                    on_built()
+                nm = self._publish_compacted(pinned, built)
+                if nm is not None:
+                    self._set_manifest(nm)
+                    self.stats["compactions"] += 1
+                    for s in built["replaced"]:
+                        shutil.rmtree(os.path.join(self.root, s),
+                                      ignore_errors=True)
+                    return
+                # unpublishable build (re-sign raced a concurrent write, or
+                # another compactor swapped our inputs out): rebuild from
+                # the head
+                shutil.rmtree(os.path.join(self.root, built["seg"]),
+                              ignore_errors=True)
+        finally:
+            lease.release()
 
-        parts = [self._load_segment(s) for s in self.manifest["segments"]]
-        dropped = set(self.manifest["dropped_ids"])
-        old_segs = list(self.manifest["segments"])
+    def _build_compacted(self, pinned: dict, n_perm, minhash_seed,
+                         resign_chunk: int, renew=None) -> dict:
+        """Merge ``pinned``'s live segments into one new on-disk segment.
+
+        ``renew`` (zero-arg, optional) is called once per merged segment
+        and once per re-sign chunk, so a build longer than the lease ttl
+        keeps its mutual exclusion."""
+        cur_seed = int(pinned["minhash_seed"])
+        cur_perm = int(pinned["n_perm"])
+        new_perm = cur_perm if n_perm is None else int(n_perm)
+        new_seed = cur_seed if minhash_seed is None else int(minhash_seed)
+        resign = new_perm != cur_perm or new_seed != cur_seed
+
+        parts = [_load_segment(self.root, s) for s in pinned["segments"]]
+        dropped = set(pinned["dropped_ids"])
+        old_segs = list(pinned["segments"])
 
         # segments written before value storage (or carrying columns merged
         # from such segments) cannot be re-signed; their rows are tracked by
@@ -238,6 +634,8 @@ class ColumnCatalog:
         names: list[str] = []
         tables: dict[str, int] = {}
         for part, keep in zip(parts, keeps):
+            if renew is not None:
+                renew()
             for k in merged:
                 merged[k].append(part[k][keep])
             if "values" in part:
@@ -252,7 +650,7 @@ class ColumnCatalog:
                            if i not in dropped})
 
         cat = {k: (np.concatenate(v) if v else
-                   self._empty_arrays()[k]) for k, v in merged.items()}
+                   _empty_arrays(cur_perm)[k]) for k, v in merged.items()}
         budget = max((v.shape[1] for v in values_parts), default=1)
         values_parts = [
             np.pad(v, ((0, 0), (0, budget - v.shape[1])),
@@ -264,9 +662,10 @@ class ColumnCatalog:
                         np.zeros((0,), bool))
         if resign:
             cat["sigs"] = self._resign(values, new_perm, new_seed,
-                                       chunk=resign_chunk)
+                                       chunk=resign_chunk, renew=renew)
 
-        seg = f"seg-{int(self.manifest['next_segment']):08d}"
+        seg = (f"seg-{int(pinned['next_segment']):08d}-"
+               f"{os.urandom(3).hex()}")
         seg_dir = os.path.join(self.root, seg)
         os.makedirs(seg_dir, exist_ok=True)
         for k, arr in cat.items():
@@ -277,25 +676,57 @@ class ColumnCatalog:
         with open(os.path.join(seg_dir, "meta.json"), "w") as f:
             json.dump({"names": names, "tables": tables}, f)
 
-        self.manifest["segments"] = [seg]
-        self.manifest["next_segment"] = int(self.manifest["next_segment"]) + 1
-        self.manifest["dropped_ids"] = []
-        self.manifest["n_perm"] = new_perm
-        self.manifest["minhash_seed"] = new_seed
-        self.manifest["version"] = self.version + 1
-        self._write_manifest()
-        for s in old_segs:
-            shutil.rmtree(os.path.join(self.root, s), ignore_errors=True)
+        return {"seg": seg, "replaced": old_segs,
+                "applied_drops": set(pinned["dropped_ids"]),
+                "n_perm": new_perm, "minhash_seed": new_seed,
+                "resign": resign}
+
+    def _publish_compacted(self, pinned: dict, built: dict) -> dict | None:
+        """CAS-publish the compaction swap, replaying concurrent writes.
+
+        Returns the published manifest, or None when a re-sign must restart
+        (its new geometry cannot absorb concurrently-added segments)."""
+        replaced = set(built["replaced"])
+        while True:
+            cur = read_latest_manifest(self.root)
+            live = set(cur["segments"])
+            new_segs = [s for s in cur["segments"] if s not in replaced]
+            geom_moved = (int(cur["n_perm"]), int(cur["minhash_seed"])) != \
+                (int(pinned["n_perm"]), int(pinned["minhash_seed"]))
+            # a segment we merged is gone from the head: another compactor
+            # already swapped it out — publishing would serve every one of
+            # its columns twice (once in ours, once in theirs). Restart.
+            if geom_moved or (built["resign"] and new_segs) or \
+                    not replaced <= live:
+                return None
+            nm = {
+                "version": int(cur["version"]) + 1,
+                "n_perm": built["n_perm"],
+                "minhash_seed": built["minhash_seed"],
+                "next_table_id": int(cur["next_table_id"]),
+                "next_segment": int(cur["next_segment"]) + 1,
+                "segments": [built["seg"]] + new_segs,
+                "tables": dict(cur["tables"]),
+                # tombstones laid after the pin survive the swap; the ones
+                # the compacted segment already applied are cleared
+                "dropped_ids": [d for d in cur["dropped_ids"]
+                                if d not in built["applied_drops"]],
+            }
+            if self._publish(nm):
+                return nm
+            self.stats["cas_retries"] += 1
 
     @staticmethod
     def _resign(values: np.ndarray, n_perm: int, seed: int,
-                chunk: int = 256) -> np.ndarray:
+                chunk: int = 256, renew=None) -> np.ndarray:
         """Re-MinHash stored value sketches -> (C, n_perm) signatures."""
         c = values.shape[0]
         if c == 0:
             return np.zeros((0, n_perm), np.uint32)
         out = []
         for i in range(0, c, chunk):
+            if renew is not None:
+                renew()
             v = np.ascontiguousarray(values[i:i + chunk])
             out.append(np.asarray(ops.minhash(v, n_perm=n_perm, seed=seed),
                                   np.uint32))
@@ -304,74 +735,122 @@ class ColumnCatalog:
     # -- reads --------------------------------------------------------------
 
     def snapshot(self) -> CatalogSnapshot:
-        dropped = set(self.manifest["dropped_ids"])
-        parts = [self._load_segment(s) for s in self.manifest["segments"]]
-        acc = {k: [] for k in ("numeric", "words", "n_rows", "sigs",
-                               "table_ids")}
-        names: list[str] = []
-        table_names: dict[int, str] = {}
-        for part in parts:
-            keep = ~np.isin(part["table_ids"], list(dropped))
-            for k in acc:
-                acc[k].append(part[k][keep])
-            names.extend([n for n, ok in zip(part["names"], keep) if ok])
-            table_names.update({i: t for t, i in part["tables"].items()
-                                if i not in dropped})
-
-        empty = self._empty_arrays()
-        cat = {k: (np.concatenate(v) if v else empty[k])    # copies off mmap
-               for k, v in acc.items()}
-        numeric = cat["numeric"].astype(np.float32)
-        c = numeric.shape[0]
-        mean = numeric.mean(axis=0) if c else np.zeros((FT.F_NUM,), np.float32)
-        std = numeric.std(axis=0) if c else np.ones((FT.F_NUM,), np.float32)
-        std = np.where(std < 1e-6, 1.0, std).astype(np.float32)
-        profiles = LakeProfiles(numeric=numeric, words=cat["words"],
-                                n_rows=cat["n_rows"],
-                                mean=mean.astype(np.float32), std=std)
-        return CatalogSnapshot(profiles=profiles, signatures=cat["sigs"],
-                               table_ids=cat["table_ids"], names=names,
-                               table_names=table_names, version=self.version,
-                               minhash_seed=int(self.manifest["minhash_seed"]))
-
-    # -- internals ----------------------------------------------------------
-
-    def _empty_arrays(self) -> dict[str, np.ndarray]:
-        return {"numeric": np.zeros((0, FT.F_NUM), np.float32),
-                "words": np.zeros((0, FT.F_WORDS), np.uint32),
-                "n_rows": np.zeros((0,), np.int32),
-                "sigs": np.zeros((0, self.n_perm), np.uint32),
-                "table_ids": np.zeros((0,), np.int32)}
-
-    def _load_segment(self, seg: str) -> dict:
-        seg_dir = os.path.join(self.root, seg)
-        out = {k: np.load(os.path.join(seg_dir, f"{k}.npy"), mmap_mode="r")
-               for k in ("numeric", "words", "n_rows", "sigs", "table_ids")}
-        vpath = os.path.join(seg_dir, "values.npy")
-        if os.path.exists(vpath):    # absent in pre-maintenance segments
-            out["values"] = np.load(vpath, mmap_mode="r")
-            mpath = os.path.join(seg_dir, "values_valid.npy")
-            if os.path.exists(mpath):
-                out["values_valid"] = np.load(mpath, mmap_mode="r")
-        with open(os.path.join(seg_dir, "meta.json")) as f:
-            meta = json.load(f)
-        out["names"] = meta["names"]
-        out["tables"] = meta["tables"]
-        return out
-
-    def _profile_and_sign(self, batch: ColumnBatch):
-        return profile_and_sign(batch, self.n_perm,
-                                int(self.manifest["minhash_seed"]))
-
-    def _write_manifest(self) -> None:
-        path = os.path.join(self.root, MANIFEST)
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.manifest, f, indent=1)
-        os.replace(tmp, path)                       # atomic on POSIX
+        """Materialize the current head (writers see their own writes)."""
+        return materialize_snapshot(self.root, self._refresh())
 
 
-def add_lake(catalog: ColumnCatalog, lake, prefix: str = "table") -> list[int]:
+# Back-compat alias: the pre-MVCC single-writer class name.
+ColumnCatalog = CatalogStore
+
+
+# ---------------------------------------------------------------------------
+# reader (follower half)
+# ---------------------------------------------------------------------------
+
+class CatalogReader:
+    """Read-only follower over a catalog root.
+
+    Tails the manifest chain (:meth:`poll`) and serves immutable
+    :class:`CatalogSnapshot`\\ s keyed by version, caching the most
+    recently materialized ones.  A follower observes **every** published
+    version in order — it never skips from v to v+2 without reporting v+1
+    — which is what the replication tests assert.
+
+    Old versions stay materializable only until a compaction deletes their
+    segments; snapshots already materialized (cached or held by an engine)
+    are plain numpy copies and remain valid forever.
+    """
+
+    def __init__(self, root: str, *, max_cached_snapshots: int = 4):
+        m = read_latest_manifest(root)
+        if m is None:
+            raise FileNotFoundError(f"no catalog manifest under {root!r}")
+        self.root = root
+        self._max_cached = int(max_cached_snapshots)
+        self._manifests: dict[int, dict] = {int(m["version"]): m}
+        self._version = int(m["version"])
+        self._snaps: "dict[int, CatalogSnapshot]" = {}
+        self._lock = threading.Lock()
+
+    @property
+    def version(self) -> int:
+        """Latest version this follower has observed."""
+        return self._version
+
+    def poll(self) -> list[int]:
+        """Probe the chain forward; returns newly observed versions in
+        order (empty when the head has not moved)."""
+        new: list[int] = []
+        with self._lock:
+            v = self._version
+            while True:
+                m = read_manifest_version(self.root, v + 1)
+                if m is None:
+                    break
+                v += 1
+                self._manifests[v] = m
+                new.append(v)
+            self._version = v
+            # keep a bounded manifest tail
+            for old in sorted(self._manifests):
+                if len(self._manifests) <= 64:
+                    break
+                del self._manifests[old]
+        return new
+
+    def manifest(self, version: int | None = None) -> dict:
+        if version is None:
+            version = self._version
+        version = int(version)
+        m = self._manifests.get(version) or \
+            read_manifest_version(self.root, version)
+        if m is None:
+            raise KeyError(f"catalog version {version} not found under "
+                           f"{self.root!r}")
+        return m
+
+    def snapshot(self, version: int | None = None) -> CatalogSnapshot:
+        """Immutable snapshot at ``version`` (default: latest, after an
+        implicit :meth:`poll`).
+
+        The latest-snapshot path is race-proof against compaction: if a
+        swap publishes and deletes our target's segments between the poll
+        and the materialize, the reader re-polls and retries at the new
+        head (the deletion itself proves a newer version exists).  An
+        *explicitly* pinned historical version whose segments were
+        compacted away raises ``KeyError`` instead — the caller asked for
+        that version, not whatever is newest."""
+        if version is not None:
+            try:
+                return self._snapshot_at(int(version))
+            except FileNotFoundError as e:
+                raise KeyError(
+                    f"catalog version {int(version)} is no longer "
+                    f"materializable (its segments were compacted away); "
+                    f"only snapshots materialized before the swap remain "
+                    f"valid") from e
+        self.poll()
+        while True:
+            head = self._version
+            try:
+                return self._snapshot_at(head)
+            except FileNotFoundError:
+                if not self.poll():     # head did not move: a real error
+                    raise
+
+    def _snapshot_at(self, version: int) -> CatalogSnapshot:
+        with self._lock:
+            if version in self._snaps:
+                return self._snaps[version]
+        snap = materialize_snapshot(self.root, self.manifest(version))
+        with self._lock:
+            self._snaps[version] = snap
+            while len(self._snaps) > self._max_cached:
+                del self._snaps[min(self._snaps)]
+        return snap
+
+
+def add_lake(catalog: CatalogStore, lake, prefix: str = "table") -> list[int]:
     """Ingest every table of a ``core.lakegen`` synthetic lake (one delta
     segment per table — exercising the incremental path at scale)."""
     tids = []

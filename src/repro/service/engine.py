@@ -1,31 +1,48 @@
-"""DiscoveryEngine: batched query serving over a catalog snapshot.
+"""DiscoveryEngine: batched query serving over pinned catalog snapshots.
 
 The engine is a thin serving shell around the unified query-execution
 layer (``repro.exec``): per micro-batch of concurrent queries it asks the
 :class:`~repro.exec.Planner` for a plan (candidate stage × placement ×
-budget, chosen from lake size, mesh availability and the analytic cost
-model) and hands the padded batch to the :class:`~repro.exec.Executor`.
-All scoring math — full-scan, LSH/hybrid pruning, mesh-sharded variants of
-both — lives in ``repro.exec``; this module owns only serving concerns:
+budget, chosen from lake size, mesh availability and the cost model) and
+hands the padded batch to the :class:`~repro.exec.Executor`.  All scoring
+math — full-scan, LSH/hybrid pruning, mesh-sharded variants of both —
+lives in ``repro.exec``; this module owns only serving concerns:
 
+* **MVCC snapshot pinning**: every query batch pins one immutable
+  per-version state (snapshot, LSH index, executor with its sharded
+  corpus placement) for its whole candidate→score→merge pipeline, so a
+  concurrent ``refresh`` — a follower picking up a new catalog version,
+  or a background compaction swap — can never tear a batch.  Retired
+  versions are released by refcount: the last in-flight batch to unpin
+  one closes its executor and frees the device placements;
 * request resolution (resident column ids vs uploaded raw columns),
 * micro-batch padding so repeated batch shapes reuse compiles,
-* a **cost-aware LRU cache**: entries are weighted by the executed plan's
-  modeled cost, so a full-scan result outranks a pruned one and cheap
-  entries are evicted (or refused admission) first,
+* a **cost-aware LRU cache** namespaced by snapshot version: keys embed
+  the pinned version, so a result computed against version v can never
+  answer a query served at v+1 (stale hits are structurally impossible,
+  even for inserts racing a refresh).  Entries are weighted by the
+  executed plan's modeled cost, so a full-scan result outranks a pruned
+  one and cheap entries are evicted (or refused admission) first;
+* **follower mode** (:meth:`follow`): attach a
+  :class:`~repro.service.catalog.CatalogReader` and each query batch
+  first tails the manifest chain, refreshing onto the newest version;
 * per-plan serving statistics via :meth:`DiscoveryEngine.stats`.
 
 Modes (``EngineConfig.mode``): ``lsh`` (pruned; sharded over the mesh
 whenever one is supplied — lakes bigger than one device), ``full``
 (single-device brute scan), ``sharded`` (brute scan over the mesh),
-``auto`` (planner picks by cost).
+``auto`` (planner picks by cost — the analytic model, or a measured one
+injected via ``EngineConfig.cost_fn``, e.g. from
+``launch.costmodel.calibrate_stage_costs``).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from collections import OrderedDict
+from typing import Callable
 
 import numpy as np
 
@@ -34,7 +51,7 @@ from repro.core.ingest import ingest_string_columns
 from repro.core.predictor import JoinQualityModel
 from repro.exec import MODES, Executor, Planner, PlannerConfig
 from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
-from repro.service.catalog import (CatalogSnapshot, ColumnCatalog,
+from repro.service.catalog import (CatalogSnapshot, CatalogStore,
                                    profile_and_sign)
 from repro.service.lsh import LSHConfig, LSHIndex
 
@@ -50,10 +67,28 @@ class EngineConfig:
     cache_entries: int = 1024
     exclude_same_table: bool = True
     shard_axes: tuple = ("data",)
+    cost_fn: Callable | None = None    # measured cost model (planner hook)
+
+
+@dataclasses.dataclass(eq=False)
+class _VersionState:
+    """Everything a query batch needs from one catalog version, immutable
+    after construction and released by refcount."""
+
+    snapshot: CatalogSnapshot
+    z: np.ndarray                      # zscored numeric profiles (C, F_NUM)
+    w: np.ndarray                      # word features (C, F_WORDS)
+    lsh: LSHIndex
+    executor: Executor
+    refs: int = 1                      # the head reference
+
+    @property
+    def version(self) -> int:
+        return int(self.snapshot.version)
 
 
 class DiscoveryEngine:
-    """Serves discovery queries from a catalog snapshot."""
+    """Serves discovery queries from pinned catalog snapshots."""
 
     def __init__(self, snapshot: CatalogSnapshot, model: JoinQualityModel,
                  config: EngineConfig | None = None, mesh=None):
@@ -70,40 +105,118 @@ class DiscoveryEngine:
             k=config.k, candidate_frac=config.candidate_frac,
             max_candidates=config.max_candidates,
             n_bands=config.lsh.n_bands,
-            shard_axes=tuple(config.shard_axes)))
+            shard_axes=tuple(config.shard_axes)),
+            cost_fn=config.cost_fn)
         self._cache: OrderedDict[bytes, tuple[list[ColumnMatch], float]] = \
             OrderedDict()
         self._counters = {"queries": 0, "batches": 0, "cache_hits": 0,
                           "cache_misses": 0, "cache_admitted": 0,
                           "cache_rejected": 0, "cache_evicted": 0,
-                          "scored_columns": 0, "scan_columns": 0}
+                          "scored_columns": 0, "scan_columns": 0,
+                          "refreshes": 0}
         self._plan_counts: dict[str, int] = {}
         self.last_plan = None
+        self._slock = threading.Lock()
+        self._head: _VersionState | None = None
+        self._live: set[_VersionState] = set()
+        self._reader = None
         self.refresh(snapshot)
 
     @classmethod
-    def from_catalog(cls, catalog: ColumnCatalog, model: JoinQualityModel,
+    def from_catalog(cls, catalog: CatalogStore, model: JoinQualityModel,
                      config: EngineConfig | None = None, mesh=None):
         return cls(catalog.snapshot(), model, config=config, mesh=mesh)
 
-    # -- snapshot management ------------------------------------------------
+    # -- snapshot management (MVCC) -----------------------------------------
 
     def refresh(self, snapshot: CatalogSnapshot) -> None:
-        """Swap in a new catalog snapshot (after add/drop/compact)."""
-        self.snapshot = snapshot
+        """Swap in a new catalog snapshot (after add/drop/compact).
+
+        In-flight query batches keep the version they pinned — the old
+        state is retired only once its last batch unpins it.  The result
+        cache is cleared; entries racing this swap land under the retired
+        version's namespace and can never hit again."""
+        st = self._build_state(snapshot)
+        with self._slock:
+            old, self._head = self._head, st
+            self._live.add(st)
+            self._cache.clear()
+            self._counters["refreshes"] += 1
+        if old is not None:
+            self._release(old)
+
+    def follow(self, reader) -> None:
+        """Attach a :class:`~repro.service.catalog.CatalogReader`; every
+        query batch first tails the manifest chain and refreshes onto the
+        newest published version."""
+        self._reader = reader
+        self._maybe_follow()
+
+    def _maybe_follow(self) -> None:
+        reader = self._reader
+        if reader is None:
+            return
+        if reader.poll():
+            # latest-snapshot path: race-proof against a compaction that
+            # deletes the polled version's segments before we materialize
+            self.refresh(reader.snapshot())
+
+    def _build_state(self, snapshot: CatalogSnapshot) -> _VersionState:
         prof = snapshot.profiles
-        self._z_np = prof.zscored.astype(np.float32)
-        self._w_np = prof.words
-        self.lsh = LSHIndex.build(snapshot.signatures, self.config.lsh)
-        self._executor = Executor(
-            self._z_np, self._w_np, self.model.gbdt.astuple(),
-            table_ids=snapshot.table_ids, band_keys=self.lsh.keys,
+        z = prof.zscored.astype(np.float32)
+        w = prof.words
+        lsh = LSHIndex.build(snapshot.signatures, self.config.lsh)
+        executor = Executor(
+            z, w, self.model.gbdt.astuple(),
+            table_ids=snapshot.table_ids, band_keys=lsh.keys,
             mesh=self.mesh)
-        self._cache.clear()
+        return _VersionState(snapshot=snapshot, z=z, w=w, lsh=lsh,
+                             executor=executor)
+
+    def _pin(self) -> _VersionState:
+        with self._slock:
+            st = self._head
+            st.refs += 1
+            return st
+
+    def _release(self, st: _VersionState) -> None:
+        with self._slock:
+            st.refs -= 1
+            dead = st.refs == 0
+            if dead:
+                self._live.discard(st)
+        if dead:
+            st.executor.close()
+
+    # -- compat surface (head-state views) ----------------------------------
+
+    @property
+    def snapshot(self) -> CatalogSnapshot:
+        return self._head.snapshot
+
+    @property
+    def version(self) -> int:
+        return self._head.version
+
+    @property
+    def lsh(self) -> LSHIndex:
+        return self._head.lsh
+
+    @property
+    def _executor(self) -> Executor:
+        return self._head.executor
+
+    @property
+    def _z_np(self) -> np.ndarray:
+        return self._head.z
+
+    @property
+    def _w_np(self) -> np.ndarray:
+        return self._head.w
 
     @property
     def n_columns(self) -> int:
-        return self.snapshot.n_columns
+        return self._head.snapshot.n_columns
 
     @property
     def candidate_budget(self) -> int:
@@ -117,12 +230,22 @@ class DiscoveryEngine:
     def query_batch(self, requests: list[DiscoveryRequest]
                     ) -> list[DiscoveryResponse]:
         t0 = time.perf_counter()
-        if self.n_columns == 0:
+        self._maybe_follow()
+        st = self._pin()
+        try:
+            return self._query_pinned(st, requests, t0)
+        finally:
+            self._release(st)
+
+    def _query_pinned(self, st: _VersionState,
+                      requests: list[DiscoveryRequest],
+                      t0: float) -> list[DiscoveryResponse]:
+        if st.snapshot.n_columns == 0:
             return [DiscoveryResponse(name=r.name, matches=[], n_candidates=0)
                     for r in requests]
-        zq, wq, sigq, tq, qid = self._resolve(requests)
-        keys = [self._cache_key(zq[i], wq[i], sigq[i], requests[i]) for i in
-                range(len(requests))]
+        zq, wq, sigq, tq, qid = self._resolve(requests, st)
+        keys = [self._cache_key(st, zq[i], wq[i], sigq[i], requests[i])
+                for i in range(len(requests))]
 
         responses: list[DiscoveryResponse | None] = [None] * len(requests)
         todo = []
@@ -130,7 +253,8 @@ class DiscoveryEngine:
             hit = self._cache_get(key)
             if hit is not None:
                 responses[i] = DiscoveryResponse(
-                    name=requests[i].name, matches=self._trim(hit, requests[i]),
+                    name=requests[i].name,
+                    matches=self._trim(hit, requests[i]),
                     n_candidates=0, cached=True)
                 self._counters["cache_hits"] += 1
             else:
@@ -139,21 +263,21 @@ class DiscoveryEngine:
 
         if todo:
             scores, ids, ncand, plan = self._rank_rows(
-                zq[todo], wq[todo], sigq[todo], tq[todo], qid[todo])
+                zq[todo], wq[todo], sigq[todo], tq[todo], qid[todo], st)
             # the plan's cost was modeled for the PADDED batch — normalize
             # by that count, not len(todo), or a lone miss looks batch_pad×
             # costlier than the same query served in a full batch
             cost_per_query = (plan.cost.get("total_flops", 0.0)
                               / max(plan.cost.get("n_queries", 1), 1))
             for row, i in enumerate(todo):
-                matches = self._matches(scores[row], ids[row])
+                matches = self._matches(scores[row], ids[row], st)
                 self._cache_put(keys[i], matches, cost_per_query)
                 responses[i] = DiscoveryResponse(
                     name=requests[i].name,
                     matches=self._trim(matches, requests[i]),
                     n_candidates=int(ncand[row]))
                 self._counters["scored_columns"] += int(ncand[row])
-                self._counters["scan_columns"] += self.n_columns
+                self._counters["scan_columns"] += st.snapshot.n_columns
 
         self._counters["queries"] += len(requests)
         self._counters["batches"] += 1
@@ -167,8 +291,13 @@ class DiscoveryEngine:
     def stats(self) -> dict:
         """Serving counters for capacity planning (the ``/stats`` payload):
         query/batch totals, cache hit/miss/admission counts, the per-plan
-        query histogram, and the last executed plan with its modeled cost."""
+        query histogram, snapshot-version lifecycle (current version,
+        refresh count, live pinned states), and the last executed plan with
+        its modeled cost."""
         c = dict(self._counters)
+        with self._slock:
+            version = self._head.version
+            live = len(self._live)
         out = {
             "queries": c["queries"], "batches": c["batches"],
             "scored_columns": c["scored_columns"],
@@ -183,18 +312,22 @@ class DiscoveryEngine:
             },
             "plans": dict(self._plan_counts),
             "n_columns": self.n_columns,
+            "snapshot": {"version": version, "refreshes": c["refreshes"],
+                         "live_states": live},
         }
         if self.last_plan is not None:
             p = self.last_plan
             out["last_plan"] = {"kind": p.kind, "budget": p.budget,
-                               "n_shards": p.n_shards, "k": p.k,
-                               "cost": p.cost}
+                                "n_shards": p.n_shards, "k": p.k,
+                                "cost": p.cost}
         return out
 
     # -- internals ----------------------------------------------------------
 
-    def _rank_rows(self, zq, wq, sigq, tq, qid):
+    def _rank_rows(self, zq, wq, sigq, tq, qid,
+                   st: _VersionState | None = None):
         """Plan + execute one padded micro-batch through ``repro.exec``."""
+        st = st if st is not None else self._head
         q = zq.shape[0]
         pad = -(-q // self.config.batch_pad) * self.config.batch_pad
         if pad != q:
@@ -202,22 +335,25 @@ class DiscoveryEngine:
                 [a, np.repeat(a[-1:], pad - q, axis=0)])
             zq, wq, sigq, tq, qid = map(rep, (zq, wq, sigq, tq, qid))
 
-        plan = self.planner.plan(n_columns=self.n_columns, n_queries=pad,
-                                 mode=self.config.mode, mesh=self.mesh)
-        qkeys = (self.lsh.query_keys(sigq) if plan.candidates != "all"
+        plan = self.planner.plan(n_columns=st.snapshot.n_columns,
+                                 n_queries=pad, mode=self.config.mode,
+                                 mesh=self.mesh)
+        qkeys = (st.lsh.query_keys(sigq) if plan.candidates != "all"
                  else None)
-        sc, ids, ncand = self._executor.execute(plan, zq, wq, tq, qid,
-                                                qkeys=qkeys)
+        sc, ids, ncand = st.executor.execute(plan, zq, wq, tq, qid,
+                                             qkeys=qkeys)
         self.last_plan = plan
         self._plan_counts[plan.kind] = self._plan_counts.get(plan.kind, 0) + q
         return sc[:q], ids[:q], ncand[:q], plan
 
-    def _resolve(self, requests):
+    def _resolve(self, requests, st: _VersionState | None = None):
         """Requests -> stacked (zq, wq, sigq, tq, qid) numpy rows."""
+        st = st if st is not None else self._head
+        snap = st.snapshot
         n = len(requests)
         zq = np.zeros((n, FT.F_NUM), np.float32)
         wq = np.zeros((n, FT.F_WORDS), np.uint32)
-        sigq = np.zeros((n, self.snapshot.signatures.shape[1]), np.uint32)
+        sigq = np.zeros((n, snap.signatures.shape[1]), np.uint32)
         tq = np.full((n,), -1, np.int32)
         qid = np.full((n,), -1, np.int32)
 
@@ -225,40 +361,43 @@ class DiscoveryEngine:
         for i, req in enumerate(requests):
             if req.column_id is not None:
                 cid = int(req.column_id)
-                if not 0 <= cid < self.n_columns:
+                if not 0 <= cid < snap.n_columns:
                     raise IndexError(f"column_id {cid} outside catalog "
-                                     f"(0..{self.n_columns - 1})")
-                zq[i] = self._z_np[cid]
-                wq[i] = self._w_np[cid]
-                sigq[i] = self.snapshot.signatures[cid]
+                                     f"(0..{snap.n_columns - 1})")
+                zq[i] = st.z[cid]
+                wq[i] = st.w[cid]
+                sigq[i] = snap.signatures[cid]
                 qid[i] = cid
                 if self.config.exclude_same_table:
-                    tq[i] = int(self.snapshot.table_ids[cid])
+                    tq[i] = int(snap.table_ids[cid])
         if external:
             ze, we, se = self._profile_external(
-                [requests[i] for i in external])
+                [requests[i] for i in external], st)
             for row, i in enumerate(external):
                 zq[i], wq[i], sigq[i] = ze[row], we[row], se[row]
         return zq, wq, sigq, tq, qid
 
-    def _profile_external(self, requests):
+    def _profile_external(self, requests, st: _VersionState):
         """Profile + sign uploaded raw columns with the snapshot's stats."""
         batch, _ = ingest_string_columns(
             [(r.name, r.values) for r in requests])
-        num, words, sigs = profile_and_sign(batch, sigq_width(self.snapshot),
-                                            self.snapshot.minhash_seed)
-        prof = self.snapshot.profiles
+        num, words, sigs = profile_and_sign(batch, sigq_width(st.snapshot),
+                                            st.snapshot.minhash_seed)
+        prof = st.snapshot.profiles
         return (num - prof.mean) / prof.std, words, sigs
 
-    def _matches(self, scores, ids) -> list[ColumnMatch]:
+    def _matches(self, scores, ids,
+                 st: _VersionState | None = None) -> list[ColumnMatch]:
+        st = st if st is not None else self._head
+        snap = st.snapshot
         out = []
         for s, i in zip(scores, ids):
             if not np.isfinite(s) or i < 0:
                 continue
-            tid = int(self.snapshot.table_ids[i])
+            tid = int(snap.table_ids[i])
             out.append(ColumnMatch(
-                column_id=int(i), column=self.snapshot.names[i],
-                table=self.snapshot.table_names.get(tid, str(tid)),
+                column_id=int(i), column=snap.names[i],
+                table=snap.table_names.get(tid, str(tid)),
                 score=float(s)))
         return out
 
@@ -266,15 +405,18 @@ class DiscoveryEngine:
         k = request.k if request.k is not None else self.config.k
         return list(matches[:k])
 
-    def _cache_key(self, z_row, w_row, sig_row, request) -> bytes:
+    def _cache_key(self, st: _VersionState, z_row, w_row, sig_row,
+                   request) -> bytes:
         h = hashlib.blake2b(digest_size=16)
         h.update(z_row.tobytes())
         h.update(w_row.tobytes())
         h.update(sig_row.tobytes())     # LSH results depend on the signature
         h.update(f"{self.config.mode}|{self.config.k}|"
                  f"{self.config.exclude_same_table}|"
-                 f"{self.snapshot.version}|{request.column_id}".encode())
-        return h.digest()
+                 f"{request.column_id}".encode())
+        # version prefix = cache namespace: an insert racing a refresh lands
+        # under its (retired) version and is unreachable from the new head
+        return st.version.to_bytes(8, "big", signed=True) + h.digest()
 
     def _cache_get(self, key):
         hit = self._cache.get(key)
@@ -330,13 +472,19 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
                          f"return config.k results")
     reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q), k=k)
             for q in query_ids]
-    zq, wq, sigq, tq, qid = engine._resolve(reqs)
-    got_s, got_ids, ncand, plan = engine._rank_rows(zq, wq, sigq, tq, qid)
-    base_plan = engine.planner.plan(
-        n_columns=engine.n_columns, n_queries=len(reqs),
-        mode="sharded" if plan.sharded else "full",
-        mesh=engine.mesh if plan.sharded else None)
-    full_s, full_ids, _ = engine._executor.execute(base_plan, zq, wq, tq, qid)
+    st = engine._pin()                  # both sides see one version
+    try:
+        zq, wq, sigq, tq, qid = engine._resolve(reqs, st)
+        got_s, got_ids, ncand, plan = engine._rank_rows(zq, wq, sigq, tq,
+                                                        qid, st)
+        base_plan = engine.planner.plan(
+            n_columns=st.snapshot.n_columns, n_queries=len(reqs),
+            mode="sharded" if plan.sharded else "full",
+            mesh=engine.mesh if plan.sharded else None)
+        full_s, full_ids, _ = st.executor.execute(base_plan, zq, wq, tq, qid)
+        n_columns = st.snapshot.n_columns
+    finally:
+        engine._release(st)
     hits, total = 0, 0
     for row in range(len(reqs)):
         want = set(full_ids[row][:k][np.isfinite(full_s[row][:k])].tolist())
@@ -344,7 +492,7 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
         hits += len(want & got)
         total += len(want)
     return {"recall": hits / max(total, 1),
-            "scored_fraction": float(ncand.mean()) / max(engine.n_columns, 1),
+            "scored_fraction": float(ncand.mean()) / max(n_columns, 1),
             "candidate_budget": engine.candidate_budget,
             "plan": plan.kind, "baseline_plan": base_plan.kind,
             "k": k, "n_queries": len(reqs)}

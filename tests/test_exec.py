@@ -108,6 +108,110 @@ def test_planner_cost_fn_hook_is_used():
     assert "all" in calls and "hybrid" in calls
 
 
+def test_planner_prefers_measured_total_cost():
+    """A calibrated cost_fn reports seconds as total_cost; auto mode must
+    decide on it, not on the (contradicting) flop counts."""
+    def measured(nq, nc, **kw):
+        pruned = kw["candidates"] != "all"
+        # flops say "prune"; the measured seconds say the probe dominates
+        return {"total_flops": 1.0 if pruned else 1e9,
+                "total_cost": 5.0 if pruned else 0.1}
+
+    p = Planner(PlannerConfig(k=10), cost_fn=measured)
+    assert p.plan(n_columns=100_000, mode="auto").candidates == "all"
+
+
+# ---------------------------------------------------------------------------
+# calibrated cost model (launch.costmodel.calibrate_stage_costs)
+# ---------------------------------------------------------------------------
+
+def _synthetic_bench_record(score_s_per_flop=2e-9, cand_s_per_flop=5e-10,
+                            merge_s_per_flop=1e-9, fixed_s=2e-4):
+    """A BENCH_service.json-shaped record whose timings follow known
+    per-stage constants exactly."""
+    from repro.launch.costmodel import discovery_stage_costs
+    lakes = []
+    for c in (128, 512, 2048, 8192):
+        modes = {}
+        for mode, cand, budget in (("full", "all", c),
+                                   ("lsh", "hybrid", max(10, c // 5))):
+            stg = discovery_stage_costs(1, c, budget=budget,
+                                        candidates=cand)["stages"]
+            s = (fixed_s + cand_s_per_flop * stg["candidates"]["flops"]
+                 + score_s_per_flop * stg["score"]["flops"]
+                 + merge_s_per_flop * stg["merge"]["flops"])
+            modes[mode] = {
+                "plan": f"local-{cand}", "plan_budget": budget,
+                "batch_ms_per_query": s * 1e3,
+            }
+        lakes.append({"n_columns": c, "modes": modes})
+    return {"lakes": lakes}
+
+
+def test_calibrate_recovers_planted_constants(tmp_path):
+    import json
+
+    from repro.launch.costmodel import calibrate_stage_costs
+    record = _synthetic_bench_record()
+    path = tmp_path / "BENCH_service.json"
+    path.write_text(json.dumps(record))
+
+    constants, cost_fn = calibrate_stage_costs(str(path))
+    assert constants["r2"] > 0.999, constants
+    assert np.isclose(constants["score_s_per_flop"], 2e-9, rtol=0.05)
+    assert np.isclose(constants["fixed_s_per_query"], 2e-4, rtol=0.05)
+
+    c = cost_fn(4, 10_000, budget=2000, candidates="hybrid")
+    assert c["calibrated"] and c["total_cost"] > 0
+    assert "total_flops" in c            # still a superset of the analytic
+
+    # end-to-end: the planner decides on the measured crossover — on this
+    # host pruning wins, but a probe-hostile measurement flips the same
+    # lake to the brute scan (the analytic flops alone never would)
+    p = Planner(PlannerConfig(k=10), cost_fn=cost_fn)
+    assert p.plan(n_columns=50_000, mode="auto").candidates == "hybrid"
+    _, hostile = calibrate_stage_costs(
+        _synthetic_bench_record(cand_s_per_flop=1e-7))
+    p2 = Planner(PlannerConfig(k=10), cost_fn=hostile)
+    assert p2.plan(n_columns=50_000, mode="auto").candidates == "all"
+
+
+def test_calibrate_needs_enough_observations():
+    from repro.launch.costmodel import calibrate_stage_costs
+    with pytest.raises(ValueError, match="observations"):
+        calibrate_stage_costs({"lakes": [
+            {"n_columns": 10,
+             "modes": {"full": {"plan": "local-all", "plan_budget": 10,
+                                "batch_ms_per_query": 1.0}}}]})
+
+
+def test_engine_accepts_calibrated_cost_fn(tmp_path):
+    """EngineConfig.cost_fn reaches the planner: a measured model that
+    makes pruning look slow flips auto mode to the brute scan."""
+    from repro.service import CatalogStore, DiscoveryEngine, DiscoveryRequest, \
+        EngineConfig
+
+    def probe_hostile(nq, nc, **kw):
+        pruned = kw["candidates"] != "all"
+        return {"total_flops": float(nc), "n_queries": nq,
+                "total_cost": 9.0 if pruned else 1.0}
+
+    store = CatalogStore(str(tmp_path), n_perm=64)
+    store.add_table("t", [("x", [f"v{i}" for i in range(300)]),
+                          ("y", [f"w{i}" for i in range(300)])])
+    from repro.core import GBDTConfig, LakeSpec, generate_lake, \
+        train_quality_model
+    lake = generate_lake(LakeSpec(n_domains=4, n_tables=6, row_budget=256,
+                                  rows_log_mean=5.0, seed=1))
+    model = train_quality_model([lake], GBDTConfig(n_trees=10, depth=3),
+                                n_query=16)
+    engine = DiscoveryEngine.from_catalog(
+        store, model, EngineConfig(k=3, mode="auto",
+                                   cost_fn=probe_hostile))
+    engine.query(DiscoveryRequest(column_id=0))
+    assert engine.stats()["last_plan"]["kind"] == "local-all"
+
+
 # ---------------------------------------------------------------------------
 # stages
 # ---------------------------------------------------------------------------

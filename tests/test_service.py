@@ -407,6 +407,29 @@ def test_compact_preserves_resign_source_across_legacy_merge(tmp_path):
     assert snap.signatures.shape == (1, 128) and snap.minhash_seed == 5
 
 
+def test_bench_sweep_blocks_smoke(lake_and_model, monkeypatch):
+    """--sweep-blocks plumbing: the tile sweep times every grid point and
+    records a best configuration per kernel (tiny grid, tiny lake)."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    import benchmarks.bench_service as bs
+    lake, model = lake_and_model
+    monkeypatch.setattr(bs, "bench_lake", lambda **kw: lake)
+    monkeypatch.setattr(bs, "bench_model", lambda: model)
+    monkeypatch.setattr(bs, "SWEEP_BLOCK_Q", (8,))
+    monkeypatch.setattr(bs, "SWEEP_BLOCK_C", (128, 256))
+    monkeypatch.setattr(bs, "SWEEP_BLOCK_N", (256,))
+    out = bs.sweep_block_sizes(n_queries=4, repeats=1)
+    assert len(out["lsh_probe"]["grid"]) == 2
+    assert len(out["fused_score"]["grid"]) == 1
+    best = out["lsh_probe"]["best"]
+    assert best in out["lsh_probe"]["grid"] and best["ms"] > 0
+    assert best["ms"] == min(g["ms"] for g in out["lsh_probe"]["grid"])
+    assert out["fused_score"]["best"]["block_n"] == 256
+    assert out["n_columns"] == lake.n_columns
+
+
 def test_resigned_catalog_still_serves(lake_and_model, tmp_path):
     """End-to-end: retune the LSH geometry at compaction, refresh the
     engine, and keep recall on the pruned plan."""
