@@ -17,6 +17,13 @@ recall@10 regression below the gate** — the CI hook after the tier-1 suite.
 Pallas tile shapes (block_q × block_c/block_n) and records the full timing
 grid plus the fastest configuration under ``block_sweep`` in the JSON —
 the measured input for retuning the kernels' VMEM-fit default tiles.
+
+``--batch-sweep`` (needs ≥ 2 devices, e.g. ``XLA_FLAGS=--xla_force_host_
+platform_device_count=8``) measures QPS and p99 latency vs concurrent
+batch size for the replicated-query 1-D plan (grid ``(1, N)``) against
+every 2-D (query × data) grid and the planner's automatic choice, and
+records the measured **crossover batch size** — the smallest batch at
+which the best 2-D grid beats 1-D — under ``batch_sweep`` in the JSON.
 """
 from __future__ import annotations
 
@@ -42,6 +49,12 @@ RECALL_GATE = 0.9
 SWEEP_BLOCK_Q = (8, 16, 32)
 SWEEP_BLOCK_C = (128, 256, 512, 1024)      # lsh_probe corpus tile
 SWEEP_BLOCK_N = (128, 256, 512)            # fused_score corpus tile
+
+# --batch-sweep concurrent-batch sizes (all multiples of the engine's
+# batch_pad so every grid divides the padded batch)
+BATCH_SWEEP_SIZES = (8, 16, 32, 64, 128, 256)
+BATCH_SWEEP_TABLES = 90
+BATCH_SWEEP_REPEATS = 9
 
 
 def _bench_engine(engine, qids, requests):
@@ -129,7 +142,111 @@ def sweep_block_sizes(n_tables: int = 45, n_queries: int = 16,
     return out
 
 
-def run(smoke: bool = False, sweep_blocks: bool = False):
+def batch_sweep(n_tables: int = BATCH_SWEEP_TABLES,
+                repeats: int = BATCH_SWEEP_REPEATS) -> dict:
+    """QPS/p99 vs concurrent batch size: 1-D replicated-query grid vs
+    every 2-D (query × data) factorization, plus the planner's auto pick.
+
+    One engine per grid (the corpus placement is cached per geometry);
+    each batch size is timed over ``repeats`` runs of one ``query_batch``
+    call after a compile warm-up (QPS from the median run — host devices
+    share cores, so best-of is noise-prone — p99 from the same set). Records the measured
+    **sustained crossover**: the smallest batch from which the best 2-D
+    grid beats the 1-D plan's QPS at every measured size onward (a single
+    noisy win at a small batch doesn't count) — the point the planner's
+    query-axis cost term should sit near.
+    """
+    import jax
+
+    from repro.service import (ColumnCatalog, DiscoveryEngine,
+                               DiscoveryRequest, EngineConfig, LSHConfig,
+                               add_lake)
+
+    n_dev = len(jax.devices())
+    out = {"n_devices": n_dev, "n_tables": n_tables, "repeats": repeats,
+           "mode": "lsh", "batches": []}
+    if n_dev < 2:
+        out["skipped"] = ("needs >= 2 devices; run with XLA_FLAGS="
+                          "--xla_force_host_platform_device_count=8")
+        return out
+
+    lake = bench_lake(seed=1, n_tables=n_tables)
+    model = bench_model()
+    root = tempfile.mkdtemp(prefix="freyja_bsweep_")
+    try:
+        add_lake(ColumnCatalog(root, n_perm=128), lake)
+        snapshot = ColumnCatalog(root).snapshot()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    out["n_columns"] = c = snapshot.n_columns
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+
+    def make_engine(grid):
+        return DiscoveryEngine(
+            snapshot, model,
+            EngineConfig(k=10, mode="lsh", lsh=LSHConfig(n_bands=64),
+                         candidate_frac=0.2, cache_entries=0, grid=grid),
+            mesh=mesh)
+
+    grids_2d = [(q, n_dev // q) for q in range(2, n_dev + 1)
+                if n_dev % q == 0]
+    engines = {(1, n_dev): make_engine((1, n_dev)),
+               **{g: make_engine(g) for g in grids_2d},
+               "auto": make_engine(None)}
+
+    rng = np.random.default_rng(0)
+    for batch in BATCH_SWEEP_SIZES:
+        reqs = [DiscoveryRequest(name=f"b{batch}_q{i}", column_id=int(col))
+                for i, col in enumerate(rng.integers(0, c, size=batch))]
+        entry = {"batch": batch, "grids": {}}
+        for key, engine in engines.items():
+            # a pinned grid with more query shards than queries is
+            # inadmissible at this batch size (planner raises) — skip it
+            # rather than abort the sweep (e.g. (16, 1) at batch 8)
+            if key != "auto" and key[0] > batch:
+                continue
+            engine.query_batch(reqs)           # compile warm-up
+            times = []
+            for _ in range(repeats):
+                with Timer() as t:
+                    engine.query_batch(reqs)
+                times.append(t.s)
+            stats = {
+                "qps": batch / float(np.median(times)),
+                # tail estimate across the repeat runs' per-query means
+                # (with few repeats this approaches the WORST run — a
+                # conservative batch-serving tail, not a per-query p99)
+                "p99_ms_per_query": float(np.percentile(times, 99))
+                / batch * 1e3,
+            }
+            if key == "auto":
+                stats["planned_grid"] = \
+                    engine.stats()["last_plan"]["grid"]
+            entry["grids"]["x".join(map(str, key)) if key != "auto"
+                           else "auto"] = stats
+        one_d = entry["grids"][f"1x{n_dev}"]
+        ran_2d = [g for g in grids_2d if "x".join(map(str, g))
+                  in entry["grids"]]
+        best_g = max(ran_2d,
+                     key=lambda g: entry["grids"]["x".join(map(str, g))]
+                     ["qps"])
+        best = entry["grids"]["x".join(map(str, best_g))]
+        entry["one_d_qps"] = one_d["qps"]
+        entry["best_2d"] = {"grid": list(best_g), "qps": best["qps"]}
+        entry["speedup_2d_over_1d"] = best["qps"] / max(one_d["qps"], 1e-9)
+        out["batches"].append(entry)
+    wins = [e["speedup_2d_over_1d"] > 1.0 for e in out["batches"]]
+    crossover = None
+    for i, won in enumerate(wins):
+        if won and all(wins[i:]):
+            crossover = out["batches"][i]["batch"]
+            break
+    out["crossover_batch"] = crossover
+    return out
+
+
+def run(smoke: bool = False, sweep_blocks: bool = False,
+        batch_sweep_flag: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
@@ -205,6 +322,24 @@ def run(smoke: bool = False, sweep_blocks: bool = False):
             rows.append((f"service/sweep/{kern}", best["ms"] * 1e3,
                          f"best {shape} ({best['ms']:.2f} ms)"))
 
+    if batch_sweep_flag:
+        bs = batch_sweep()
+        record["batch_sweep"] = bs
+        if bs.get("skipped"):
+            rows.append(("service/batch_sweep", 0.0, bs["skipped"]))
+        else:
+            for e in bs["batches"]:
+                rows.append((f"service/batch_sweep/B{e['batch']}", 0.0,
+                             f"1D {e['one_d_qps']:.0f} QPS vs best 2-D "
+                             f"{'x'.join(map(str, e['best_2d']['grid']))} "
+                             f"{e['best_2d']['qps']:.0f} QPS "
+                             f"({e['speedup_2d_over_1d']:.2f}x)"))
+            rows.append(("service/batch_sweep/crossover", 0.0,
+                         f"2-D sustains a win over 1-D from batch "
+                         f"{bs['crossover_batch']}"
+                         if bs["crossover_batch"] is not None else
+                         "no sustained 2-D win at the measured batches"))
+
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
     rows.append(("service/json", 0.0, os.path.abspath(OUT_JSON)))
@@ -229,6 +364,11 @@ if __name__ == "__main__":
     ap.add_argument("--sweep-blocks", action="store_true",
                     help="sweep lsh_probe/fused_score tile shapes and "
                          "record the best configuration in the bench json")
+    ap.add_argument("--batch-sweep", action="store_true",
+                    help="measure QPS/p99 vs batch size for 1-D vs 2-D "
+                         "(query x data) grids and record the crossover "
+                         "batch (needs >= 2 devices)")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks):
+    for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks,
+                 batch_sweep_flag=args.batch_sweep):
         print(",".join(map(str, r)))

@@ -7,22 +7,27 @@ three composable stages:
 * **candidate generation** (``stages.candidate_priorities``): full-scan
   mask, LSH bucket probe (Pallas kernel), or hybrid profile-proximity;
 * **scoring** (``stages.score_columns`` / ``score_streamed``): GBDT over
-  distance features, locally or ``shard_map``-sharded over the mesh;
-* **top-k merge** (``stages.merge_topk`` / ``merge_topk_sharded``): local
-  ``top_k``, or per-device top-k + one small ``all_gather``.
+  distance features, locally or per (Q-shard, C-shard) tile of a 2-D
+  (query × data) device grid via ``shard_map``;
+* **top-k merge** (``stages.merge_topk`` + ``merge_topk_sharded`` +
+  ``assemble_query_shards``): local ``top_k``, or the two-phase grid
+  merge — per-device top-k reduced over the data axis, then one small
+  query-axis ``all_gather`` reassembling the batch.
 
-The :class:`Planner` resolves (mode, lake size, mesh availability,
-candidate budget) into a :class:`QueryPlan` using the analytic per-stage
-cost model in ``launch.costmodel`` (injectable), and the
-:class:`Executor` runs any plan against one corpus view.
+The :class:`Planner` resolves (mode, lake size, batch size, mesh,
+candidate budget) into a :class:`QueryPlan` — including the
+``grid=(q_shards, d_shards)`` placement dimension — using the analytic
+per-stage cost model in ``launch.costmodel`` (injectable), and the
+:class:`Executor` runs any plan against one corpus view, caching corpus
+placements per grid geometry.
 """
-from repro.exec.executor import Executor, pad_topk
+from repro.exec.executor import Executor, pad_rows, pad_topk
 from repro.exec.plan import MODES, Planner, PlannerConfig, QueryPlan
 from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
 from repro.exec.stages import CANDIDATE_KINDS
 
 __all__ = [
-    "Executor", "pad_topk",
+    "Executor", "pad_rows", "pad_topk",
     "MODES", "Planner", "PlannerConfig", "QueryPlan",
     "build_sharded_pipeline", "place_sharded_corpus",
     "CANDIDATE_KINDS",

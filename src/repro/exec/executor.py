@@ -6,9 +6,15 @@ optional LSH band keys) plus the GBDT parameters, and executes any
 
 * local plans dispatch to module-level jitted pipelines (cached by jax
   across executors, so a catalog refresh never recompiles);
-* sharded plans place the corpus over the mesh **once** (cached on the
-  executor — the seed implementation re-placed per query batch) and build
-  one ``shard_map`` pipeline per (stage kinds, k, budget) shape.
+* sharded plans run on the plan's 2-D ``grid=(q_shards, d_shards)``: the
+  executor re-shapes its mesh's devices into a (query × data) grid mesh
+  per geometry, places the corpus over each grid's ``data`` axis **once**
+  (cached per grid — the seed implementation re-placed per query batch),
+  pads the query batch to a multiple of ``q_shards``, shards it over the
+  ``query`` axis, and unpads the reassembled result. ``(1, d)`` grids use
+  the caller's own mesh and the legacy replicated-query specs, so 1-D
+  plans (and multi-axis ``shard_axes`` like the dry-run's pod×data) are
+  untouched.
 
 Both ``core.discovery.rank``/``rank_sharded`` and the service's
 ``DiscoveryEngine`` are thin adapters over this class — the single copy of
@@ -17,7 +23,7 @@ the scoring pipeline in the repo.
 The returned contract is uniform: ``(scores (Q, k), global ids (Q, k),
 n_scored (Q,))`` as numpy, padded with -inf / -1 when fewer than k columns
 are rankable, with ``n_scored`` the *global* number of columns the GBDT
-actually scored per query (psum-ed over shards on a mesh).
+actually scored per query (psum-ed over the data axes on a mesh).
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.exec import stages
 from repro.exec.plan import QueryPlan
@@ -34,6 +41,20 @@ from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def pad_rows(arrays, multiple: int):
+    """Pad every array's leading (query) axis up to a multiple of
+    ``multiple`` by repeating the last row — the repeated rows carry their
+    qid/tq along, so masking stays consistent, and the caller slices the
+    duplicate results back off. Returns (padded_arrays, original_length)."""
+    q = int(np.asarray(arrays[0]).shape[0])
+    pad = -(-q // max(multiple, 1)) * max(multiple, 1)
+    if pad == q:
+        return [np.asarray(a) for a in arrays], q
+    rep = lambda a: np.concatenate(
+        [np.asarray(a), np.repeat(np.asarray(a)[-1:], pad - q, axis=0)])
+    return [rep(a) for a in arrays], q
 
 
 def pad_topk(scores: np.ndarray, ids: np.ndarray, k: int):
@@ -102,9 +123,10 @@ class Executor:
         self._tids = jnp.asarray(self._tids_np)
         self._ckeys = (jnp.asarray(self._ckeys_np)
                        if self._ckeys_np is not None else None)
-        # sharded state, built lazily per shard_axes
+        # sharded state, built lazily per placement (shard_axes / grid)
         self._placed: dict[tuple, dict] = {}
         self._pipelines: dict[tuple, object] = {}
+        self._grid_meshes: dict[tuple, Mesh] = {}
         self._closed = False
 
     # -- lifecycle ----------------------------------------------------------
@@ -122,6 +144,7 @@ class Executor:
         self._closed = True
         self._placed.clear()
         self._pipelines.clear()
+        self._grid_meshes.clear()
         self._z = self._w = self._cids = self._tids = self._ckeys = None
 
     @property
@@ -130,28 +153,58 @@ class Executor:
 
     # -- sharded state ------------------------------------------------------
 
+    def _grid_mesh(self, grid: tuple) -> Mesh:
+        """(q, d) -> a (query × data × model) mesh over this executor's
+        devices (``launch.mesh.make_grid_mesh``, cached per geometry). The
+        flat device order is preserved, so a (1, d) grid's data placement
+        is byte-identical to the caller's own mesh."""
+        from repro.launch.mesh import make_grid_mesh
+
+        grid = tuple(grid)
+        if grid not in self._grid_meshes:
+            self._grid_meshes[grid] = make_grid_mesh(
+                grid[0], grid[1], devices=self.mesh.devices)
+        return self._grid_meshes[grid]
+
+    def _plan_mesh_axes(self, plan: QueryPlan):
+        """Mesh + (shard_axes, query_axes) a plan executes with.
+
+        (1, d) grids keep the caller's mesh and replicated-query specs —
+        the legacy 1-D pipeline, including multi-axis ``shard_axes``;
+        q > 1 grids (or a caller mesh that already carries a non-trivial
+        ``query`` axis) run on the re-shaped (query × data) grid mesh."""
+        names = tuple(getattr(self.mesh, "axis_names", ()))
+        premade_q = ("query" in names
+                     and int(self.mesh.shape["query"]) > 1)
+        if plan.grid[0] == 1 and not premade_q:
+            return self.mesh, plan.shard_axes, ()
+        return self._grid_mesh(plan.grid), ("data",), ("query",)
+
     def _corpus(self, plan: QueryPlan) -> dict:
-        # one placement per shard_axes: band keys ride along whenever the
-        # executor has them, so an "all" plan and a pruned plan (e.g. the
-        # recall baseline next to the served plan) share the z/w/cids/tids
-        # device copies instead of double-placing the corpus
-        key = plan.shard_axes
+        # one placement per (mesh geometry, data axes): band keys ride
+        # along whenever the executor has them, so an "all" plan and a
+        # pruned plan (e.g. the recall baseline next to the served plan)
+        # share the z/w/cids/tids device copies instead of double-placing
+        # the corpus
+        mesh, axes, qaxes = self._plan_mesh_axes(plan)
+        key = (plan.grid if qaxes else (), axes)
         if key not in self._placed:
             self._placed[key] = place_sharded_corpus(
-                self.mesh, plan.shard_axes, self._z_np, self._w_np,
+                mesh, axes, self._z_np, self._w_np,
                 table_ids=self._tids_np, band_keys=self._ckeys_np)
         return self._placed[key]
 
     def _pipeline(self, plan: QueryPlan):
-        key = (plan.candidates, plan.k, plan.budget_per_shard,
-               plan.shard_axes)
+        mesh, axes, qaxes = self._plan_mesh_axes(plan)
+        key = (plan.candidates, plan.k, plan.budget_per_shard, axes,
+               plan.grid if qaxes else ())
         if key not in self._pipelines:
             self._pipelines[key] = build_sharded_pipeline(
-                self.mesh, self._gbdt, candidates=plan.candidates,
+                mesh, self._gbdt, candidates=plan.candidates,
                 k=plan.k,
                 budget_per_shard=(plan.budget_per_shard
                                   if plan.candidates != "all" else None),
-                shard_axes=plan.shard_axes, block=self.score_block,
+                shard_axes=axes, query_axes=qaxes, block=self.score_block,
                 interpret=_interpret())
         return self._pipelines[key]
 
@@ -207,15 +260,27 @@ class Executor:
 
     def _execute_sharded(self, plan, zq, wq, tq, qid, qkeys):
         corpus = self._corpus(plan)
-        rep = corpus["rep"]
+        mesh, _, qaxes = self._plan_mesh_axes(plan)
+        # pad the batch to a multiple of the query-axis size; duplicate
+        # results are sliced off below
+        if qkeys is not None:
+            (zq, wq, tq, qid, qkeys), q = pad_rows(
+                (zq, wq, tq, qid, qkeys), plan.grid[0])
+        else:
+            (zq, wq, tq, qid), q = pad_rows((zq, wq, tq, qid),
+                                            plan.grid[0])
+        qsharding = NamedSharding(mesh, P(qaxes) if qaxes else P())
         put = lambda a, dt=None: jax.device_put(
-            np.asarray(a, dt) if dt else np.asarray(a), rep)
+            np.asarray(a, dt) if dt else np.asarray(a), qsharding)
         fn = self._pipeline(plan)
         if plan.candidates == "all":
-            return fn(corpus["z"], corpus["w"], corpus["cids"],
-                      corpus["tids"], put(zq, np.float32), put(wq),
-                      put(tq, np.int32), put(qid, np.int32))
-        return fn(corpus["z"], corpus["w"], corpus["cids"], corpus["tids"],
-                  corpus["ckeys"], put(zq, np.float32), put(wq),
-                  put(qkeys, np.uint32), put(tq, np.int32),
-                  put(qid, np.int32))
+            sc, ids, n = fn(corpus["z"], corpus["w"], corpus["cids"],
+                            corpus["tids"], put(zq, np.float32), put(wq),
+                            put(tq, np.int32), put(qid, np.int32))
+        else:
+            sc, ids, n = fn(corpus["z"], corpus["w"], corpus["cids"],
+                            corpus["tids"], corpus["ckeys"],
+                            put(zq, np.float32), put(wq),
+                            put(qkeys, np.uint32), put(tq, np.int32),
+                            put(qid, np.int32))
+        return sc[:q], ids[:q], n[:q]

@@ -1,4 +1,4 @@
-"""Query planner: lake size × mesh × budget × cost model -> QueryPlan.
+"""Query planner: lake size × batch size × mesh × cost model -> QueryPlan.
 
 A :class:`QueryPlan` names one choice per pipeline stage:
 
@@ -6,9 +6,34 @@ A :class:`QueryPlan` names one choice per pipeline stage:
 stage          choices                    picked by
 =============  =========================  ==============================
 candidates     all | lsh | hybrid         mode, or cost model on "auto"
-score          local | sharded            mesh availability + lake size
-merge          top_k | topk+all_gather    follows the score placement
+score          local | (q × d) grid       mesh availability + lake size
+merge          top_k | 2-phase gather     follows the score placement
 =============  =========================  ==============================
+
+Sharded plans place work on a 2-D **(query × data) device grid**: the
+``grid=(q_shards, d_shards)`` placement dimension shards the query batch
+over the ``query`` mesh axis alongside the lake's column axis over
+``data``, so each device scores one (Q-shard, C-shard) tile.  The 1-D
+plans of earlier revisions are the ``(1, d)`` degenerate grids; the other
+degenerate family ``(q, 1)`` replicates the corpus but scales concurrent
+batches with the mesh.  ``choose_grid`` picks the factorization from the
+batch size, the lake size, and the (query-axis aware) cost model:
+
+* ``q_shards`` never exceeds the padded batch — an idle query shard is
+  pure waste;
+* for ``d_shards > 1`` the per-device column shard must clear
+  ``min_columns_per_shard`` (below that the probe/all_gather overhead
+  beats the saving), while ``d_shards == 1`` is always admissible on the
+  data side (the corpus is replicated, which is what the 1-D plans
+  already did with the *query* batch) — though "auto" mode only goes
+  sharded at all when some ``d_shards > 1`` option exists, i.e. when the
+  lake itself justifies the mesh;
+* among admissible factorizations the cheapest by the cost model wins —
+  measured seconds when a calibrated ``cost_fn`` is injected, otherwise
+  the analytic flop + HBM + collective-byte composite (flops alone are
+  factorization-symmetric: ql·cl is constant at fixed q·d; the HBM term
+  penalizes corpus replication, the collective term penalizes wide
+  data-axis merges — that tension is the whole placement decision).
 
 Plan selection ("auto" mode) compares the analytic per-stage costs
 (``launch.costmodel.discovery_stage_costs`` unless the caller injects a
@@ -36,16 +61,25 @@ class QueryPlan:
     """One fully-resolved execution plan for a query micro-batch."""
 
     candidates: str                 # "all" | "lsh" | "hybrid"
-    sharded: bool                   # score per shard, merge via all_gather
+    sharded: bool                   # score per grid tile, 2-phase merge
     budget: int                     # GLOBAL candidate budget (n for "all")
     k: int
-    n_shards: int = 1
+    n_shards: int = 1               # data-axis shards (= grid[1])
+    grid: tuple = (1, 1)            # (q_shards, d_shards) device grid
     shard_axes: tuple = ("data",)
     cost: dict = dataclasses.field(default_factory=dict, compare=False)
 
     def __post_init__(self):
         if self.candidates not in CANDIDATE_KINDS:
             raise ValueError(f"unknown candidate stage {self.candidates!r}")
+        g = tuple(int(x) for x in self.grid)
+        if len(g) != 2 or g[0] < 1 or g[1] < 1:
+            raise ValueError(f"grid must be (q_shards, d_shards) >= (1, 1); "
+                             f"got {self.grid!r}")
+        if g == (1, 1) and self.n_shards > 1:
+            g = (1, int(self.n_shards))     # legacy 1-D construction
+        object.__setattr__(self, "grid", g)
+        object.__setattr__(self, "n_shards", g[1])
 
     @property
     def kind(self) -> str:
@@ -53,8 +87,18 @@ class QueryPlan:
         return f"{'sharded' if self.sharded else 'local'}-{self.candidates}"
 
     @property
+    def q_shards(self) -> int:
+        """Query-axis shard count of the placement grid."""
+        return self.grid[0]
+
+    @property
+    def n_grid_devices(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+    @property
     def budget_per_shard(self) -> int:
-        """Per-device slice of the global budget (ceil split)."""
+        """Per-device slice of the global budget (ceil split over the DATA
+        axis only — every query shard sees the full per-query budget)."""
         return max(1, -(-self.budget // max(self.n_shards, 1)))
 
 
@@ -65,19 +109,21 @@ class PlannerConfig:
     max_candidates: int = 4096      # absolute cap on that budget
     n_bands: int = 64
     shard_axes: tuple = ("data",)
-    # below this many columns per shard, sharding costs more than it saves
-    # (dispatch + all_gather against a trivial local scan) — "auto" only
+    # below this many columns per data shard, column-sharding costs more
+    # than it saves (dispatch + all_gather against a trivial local scan);
+    # gates d_shards > 1 factorizations (and hence "auto" sharding)
     min_columns_per_shard: int = 64
 
 
 class Planner:
-    """Resolves (mode, lake, mesh) into a :class:`QueryPlan`.
+    """Resolves (mode, lake, batch, mesh) into a :class:`QueryPlan`.
 
     ``cost_fn(n_queries, n_columns, budget=..., candidates=..., n_bands=...,
-    n_shards=..., k=...)`` must return a dict with at least
+    n_shards=..., q_shards=..., k=...)`` must return a dict with at least
     ``total_flops``; the default is the analytic discovery model in
     ``launch.costmodel``. Injecting a measured model here is the hook the
-    ROADMAP's tuning items plug into.
+    ROADMAP's tuning items plug into — with one, grid selection compares
+    predicted seconds instead of the analytic composite.
     """
 
     def __init__(self, config: PlannerConfig | None = None,
@@ -96,27 +142,98 @@ class Planner:
         return max(1, min(want, cfg.max_candidates, n_columns))
 
     def _n_shards(self, mesh) -> int:
+        """Grid capacity of ``mesh``: the data-shardable devices, times a
+        pre-existing ``query`` axis when the caller built one."""
         if mesh is None:
             return 1
         n = 1
         for ax in self.config.shard_axes:
             n *= int(mesh.shape[ax])
+        try:
+            n *= int(mesh.shape["query"])
+        except (KeyError, TypeError):
+            pass
         return n
 
     def _cost(self, candidates: str, n_queries: int, n_columns: int,
-              budget: int, n_shards: int) -> dict:
+              budget: int, n_shards: int, q_shards: int = 1) -> dict:
         return self.cost_fn(n_queries, n_columns, budget=budget,
                             candidates=candidates, k=self.config.k,
-                            n_bands=self.config.n_bands, n_shards=n_shards)
+                            n_bands=self.config.n_bands, n_shards=n_shards,
+                            q_shards=q_shards)
+
+    # -- grid placement -----------------------------------------------------
+
+    def grid_options(self, n_devices: int, n_queries: int,
+                     n_columns: int) -> list[tuple[int, int]]:
+        """Admissible (q_shards, d_shards) factorizations of ``n_devices``.
+
+        Hard constraints: q·d uses every grid device, q never exceeds the
+        (padded) batch, and a d > 1 column shard must clear
+        ``min_columns_per_shard``. Sorted by q for determinism.
+        """
+        cfg = self.config
+        q_cap = max(int(n_queries), 1)
+        out = []
+        for q in range(1, n_devices + 1):
+            if n_devices % q or q > q_cap:
+                continue
+            d = n_devices // q
+            if d > 1 and -(-n_columns // d) < cfg.min_columns_per_shard:
+                continue
+            out.append((q, d))
+        return out
+
+    def choose_grid(self, n_devices: int, *, n_queries: int, n_columns: int,
+                    candidates: str, budget: int) -> tuple[int, int] | None:
+        """Cheapest admissible grid by the cost model, or None if no
+        factorization is admissible (the caller then stays local, or falls
+        back to (1, n_devices) when sharding was explicitly requested)."""
+        options = self.grid_options(n_devices, n_queries, n_columns)
+        if not options:
+            return None
+
+        def key(g):
+            q, d = g
+            c = self._cost(candidates, n_queries, max(n_columns, 1),
+                           max(budget, 1), d, q)
+            composite = (c.get("total_flops", 0.0)
+                         + c.get("total_hbm_bytes", 0.0)
+                         + c.get("total_collective_bytes", 0.0))
+            # measured seconds win when a calibrated cost_fn is injected;
+            # the analytic composite breaks (near-)ties, then smaller q
+            # (the conservative legacy placement)
+            return (c.get("total_cost", composite), composite, q)
+
+        return min(options, key=key)
+
+    def _resolve_grid(self, grid, n_devices: int, n_queries: int,
+                      n_columns: int, candidates: str,
+                      budget: int) -> tuple[int, int]:
+        if grid is not None:
+            q, d = (int(grid[0]), int(grid[1]))
+            if q < 1 or d < 1 or q * d != n_devices:
+                raise ValueError(
+                    f"grid {grid!r} does not factorize the mesh's "
+                    f"{n_devices} grid devices (want q*d == {n_devices})")
+            if q > max(n_queries, 1):
+                raise ValueError(
+                    f"grid {grid!r}: q_shards={q} exceeds the padded batch "
+                    f"of {n_queries} — idle query shards are pure waste")
+            return (q, d)
+        return (self.choose_grid(n_devices, n_queries=n_queries,
+                                 n_columns=n_columns, candidates=candidates,
+                                 budget=budget)
+                or (1, n_devices))
 
     # -- entry point --------------------------------------------------------
 
     def plan(self, *, n_columns: int, n_queries: int = 1, mode: str = "auto",
-             mesh=None) -> QueryPlan:
+             mesh=None, grid: tuple | None = None) -> QueryPlan:
         if mode not in MODES:
             raise ValueError(f"unknown mode {mode!r}; want one of {MODES}")
         cfg = self.config
-        n_shards = self._n_shards(mesh)
+        n_dev = self._n_shards(mesh)
         budget = self.candidate_budget(n_columns)
 
         if mode == "sharded":
@@ -127,26 +244,45 @@ class Planner:
             cand, sharded = "all", False
         elif mode == "lsh":
             # an explicit mesh is operator intent: shard whenever one exists
-            cand, sharded = "hybrid", n_shards > 1
-        else:  # auto: cost-based candidate stage, size-gated sharding
-            sharded = (n_shards > 1 and
-                       n_columns >= cfg.min_columns_per_shard * n_shards)
-            shards_eff = n_shards if sharded else 1
+            cand, sharded = "hybrid", n_dev > 1
+        else:  # auto: cost-based candidate stage, grid-gated sharding
+            # shard only when the LAKE justifies it (an admissible d > 1
+            # factorization exists — the legacy min-columns-per-shard gate,
+            # generalized): a (q, 1) corpus-replicating grid alone must not
+            # drag a tiny lake onto the mesh, where shard_map dispatch and
+            # the two all_gathers dwarf the trivial local scan
+            sharded = (n_dev > 1 and
+                       any(d > 1 for _, d in
+                           self.grid_options(n_dev, n_queries, n_columns)))
+            # cost each candidate kind AT ITS OWN best admissible grid (the
+            # geometry that would actually execute), then pick the kind —
+            # costing both at a fixed (1, n_dev) could compare geometries
+            # that are inadmissible and will never run
+            if sharded:
+                g_all = self._resolve_grid(grid, n_dev, n_queries,
+                                           n_columns, "all", n_columns)
+                g_pruned = self._resolve_grid(grid, n_dev, n_queries,
+                                              n_columns, "hybrid", budget)
+            else:
+                g_all = g_pruned = (1, 1)
             c_full = self._cost("all", n_queries, n_columns, n_columns,
-                                shards_eff)
+                                g_all[1], g_all[0])
             c_pruned = self._cost("hybrid", n_queries, n_columns, budget,
-                                  shards_eff)
+                                  g_pruned[1], g_pruned[0])
             # a calibrated cost_fn reports measured seconds as total_cost;
             # the analytic default only has flops
             pick = lambda c: c.get("total_cost", c["total_flops"])
             cand = "hybrid" if pick(c_pruned) < pick(c_full) else "all"
 
-        if not sharded:
-            n_shards = 1
         if cand == "all":
             budget = n_columns
+        if sharded:
+            g = self._resolve_grid(grid, n_dev, n_queries, n_columns,
+                                   cand, budget)
+        else:
+            g = (1, 1)
         cost = self._cost(cand, n_queries, max(n_columns, 1),
-                          max(budget, 1), max(n_shards, 1))
+                          max(budget, 1), max(g[1], 1), g[0])
         return QueryPlan(candidates=cand, sharded=sharded, budget=budget,
-                         k=cfg.k, n_shards=n_shards,
+                         k=cfg.k, n_shards=g[1], grid=g,
                          shard_axes=tuple(cfg.shard_axes), cost=cost)

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.predictor import distance_features_ref, gbdt_predict_ref
-from repro.kernels.lsh_probe import lsh_probe_pallas
+from repro.kernels.lsh_probe import lsh_probe_tile
 
 CANDIDATE_KINDS = ("all", "lsh", "hybrid")
 
@@ -62,10 +62,10 @@ def candidate_priorities(kind: str, zq, qkeys, z, ckeys, cids, tids, tq, qid,
     """
     excl = exclusion_mask(cids, tids, tq, qid)
     if kind == "lsh":
-        hit = lsh_probe_pallas(qkeys, ckeys, interpret=interpret)
+        hit = lsh_probe_tile(qkeys, ckeys, interpret=interpret)
         prio = jnp.where(hit > 0, 0.0, -jnp.inf)
     elif kind == "hybrid":
-        hit = lsh_probe_pallas(qkeys, ckeys, interpret=interpret)
+        hit = lsh_probe_tile(qkeys, ckeys, interpret=interpret)
         # -||zq - z||² up to a per-query constant: 2·zq@zᵀ - ||z||²
         proxy = 2.0 * zq @ z.T - jnp.sum(z * z, axis=1)[None]
         proxy = proxy / (1.0 + jnp.abs(proxy))            # squash to (-1, 1)
@@ -153,3 +153,21 @@ def merge_topk_sharded(local_scores, local_ids, k: int, axes):
     gs, gp = jax.lax.top_k(all_s, min(k, all_s.shape[1]))
     gi = jnp.take_along_axis(all_i, gp, axis=1)
     return gs, jnp.where(jnp.isfinite(gs), gi, -1)
+
+
+def assemble_query_shards(scores, ids, n_scored, axes):
+    """Phase-2 merge of the 2-D grid: reassemble the query batch.
+
+    After :func:`merge_topk_sharded` reduced over the DATA axis, every
+    device holds the finished (Q_local, k) rows of its *query* shard. One
+    tiled ``all_gather`` per query axis (row axis 0, so shard order is
+    batch order) replicates the full (Q, k) batch — collective bytes
+    O(Q·k), independent of both the lake size and the data-axis width.
+    ``n_scored`` rides along so per-query accounting follows its row. Runs
+    inside ``shard_map``; a no-op when ``axes`` is empty (1-D plans).
+    """
+    for ax in axes:
+        scores = jax.lax.all_gather(scores, ax, axis=0, tiled=True)
+        ids = jax.lax.all_gather(ids, ax, axis=0, tiled=True)
+        n_scored = jax.lax.all_gather(n_scored, ax, axis=0, tiled=True)
+    return scores, ids, n_scored

@@ -64,3 +64,21 @@ def lsh_probe_pallas(qkeys, ckeys, *, block_q: int = 8, block_c: int = 512,
         interpret=interpret,
     )(qk, ck)
     return out[:q, :c]
+
+
+def lsh_probe_tile(qkeys, ckeys, *, block_q: int = 8, block_c: int = 512,
+                   interpret: bool = True):
+    """Per-(Q-shard, C-shard) tile entry point for grid pipelines.
+
+    Under a 2-D (query × data) ``shard_map`` each device probes only its
+    local query shard — often just 1-4 rows when the batch is spread over
+    the ``query`` mesh axis. This wrapper clamps the query tile to the
+    local shard size (and the corpus tile to the local column count) so a
+    q-sharded probe doesn't pad every tiny shard up to the global default
+    tile; shapes are static inside ``jit``/``shard_map``, so the clamp
+    costs nothing at trace time.
+    """
+    bq = max(1, min(int(block_q), int(qkeys.shape[0]) or 1))
+    bc = max(1, min(int(block_c), int(ckeys.shape[0]) or 1))
+    return lsh_probe_pallas(qkeys, ckeys, block_q=bq, block_c=bc,
+                            interpret=interpret)

@@ -219,22 +219,34 @@ def cell_cost(cfg, kind: str, batch: int, seq: int, mesh_shape: dict,
 def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
                           candidates: str = "hybrid", k: int = 10,
                           n_bands: int = 64, n_trees: int = 30,
-                          tree_depth: int = 4, n_shards: int = 1) -> dict:
+                          tree_depth: int = 4, n_shards: int = 1,
+                          q_shards: int = 1) -> dict:
     """Analytic per-device cost of one discovery micro-batch, per stage.
 
     The planner's default cost hook (``repro.exec.Planner``): flops / HBM
-    bytes / collective bytes for the candidate→score→merge pipeline, with
-    the column axis split over ``n_shards`` devices. A pruned plan pays
-    the bucket probe (Q·C·B uint32 compares) and, for ``hybrid``, one
-    (Q, F_NUM)×(F_NUM, C) proxy matmul over *all* local columns to score
-    only ``budget/n_shards`` of them — so it beats the brute scan exactly
-    when the budget is small relative to the lake, which is the decision
-    "auto" mode makes. Replace via the ``cost_fn`` hook once measured
-    numbers exist (ROADMAP: native-TPU tuning).
+    bytes / collective bytes for the candidate→score→merge pipeline over a
+    (``q_shards`` × ``n_shards``) query×data device grid — each device
+    sees ``ceil(Q / q_shards)`` queries against ``ceil(C / n_shards)``
+    columns. A pruned plan pays the bucket probe (Ql·Cl·B uint32 compares)
+    and, for ``hybrid``, one (Ql, F_NUM)×(F_NUM, Cl) proxy matmul over
+    *all* local columns to score only ``budget/n_shards`` of them — so it
+    beats the brute scan exactly when the budget is small relative to the
+    lake, which is the decision "auto" mode makes.
+
+    Per-device flops are factorization-symmetric at fixed q·d (Ql·Cl is
+    constant), so the grid choice hangs on the asymmetric terms: the HBM
+    bytes grow with Cl (corpus replication across query shards re-reads
+    the keys/profiles on every replica), while the merge collective
+    shrinks with d (phase 1 gathers Ql·k·d pairs over the data axis) and
+    pays a small query-axis reassembly (phase 2) instead. Replace via the
+    ``cost_fn`` hook once measured numbers exist (ROADMAP: native-TPU
+    tuning).
     """
     from repro.core import features as FT
 
-    q = max(int(n_queries), 1)
+    qg = max(int(n_queries), 1)
+    q_sh = max(int(q_shards), 1)
+    q = -(-qg // q_sh)                                 # local queries/device
     shards = max(int(n_shards), 1)
     cl = -(-max(int(n_columns), 1) // shards)          # local columns/device
     # distance-feature work per scored pair: F_NUM |Δz| subs, the 10×10
@@ -261,20 +273,26 @@ def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
         "hbm_bytes": float((q + m) * profile_bytes + q * m * F4),
     }
     kl = min(k, m)
+    # phase 1: tiled all_gather of every data shard's (score, id) top-k
+    # pairs within the query shard; phase 2: all_gather over the query
+    # axis reassembles the (Q, k) batch from its (Ql, k) shards
+    data_coll = float(q * kl * shards * (F4 + 4)) if shards > 1 else 0.0
+    query_coll = float(q * kl * q_sh * (F4 + 4)) if q_sh > 1 else 0.0
     stg["merge"] = {
         "flops": float(q * m),
         "hbm_bytes": float(q * m * F4),
-        # tiled all_gather of every shard's (score, id) top-k pairs
-        "collective_bytes": (float(q * kl * shards * (F4 + 4))
-                             if shards > 1 else 0.0),
+        "collective_bytes": data_coll + query_coll,
     }
     return {
         "stages": stg,
         "total_flops": float(sum(s["flops"] for s in stg.values())),
         "total_hbm_bytes": float(sum(s["hbm_bytes"] for s in stg.values())),
         "total_collective_bytes": float(stg["merge"]["collective_bytes"]),
-        "n_queries": q,
+        "n_queries": qg,
+        "queries_per_device": int(q),
         "n_shards": shards,
+        "q_shards": q_sh,
+        "grid": [q_sh, shards],
         "scored_per_device": int(m),
     }
 
@@ -351,12 +369,15 @@ def make_calibrated_cost_fn(constants: dict):
     def cost_fn(n_queries: int, n_columns: int, *, budget: int,
                 candidates: str = "hybrid", k: int = 10, n_bands: int = 64,
                 n_trees: int = 30, tree_depth: int = 4,
-                n_shards: int = 1) -> dict:
+                n_shards: int = 1, q_shards: int = 1) -> dict:
         c = discovery_stage_costs(n_queries, n_columns, budget=budget,
                                   candidates=candidates, k=k,
                                   n_bands=n_bands, n_trees=n_trees,
-                                  tree_depth=tree_depth, n_shards=n_shards)
+                                  tree_depth=tree_depth, n_shards=n_shards,
+                                  q_shards=q_shards)
         stg = c["stages"]
+        # per-device stage flops × fitted s/flop: the critical-path device
+        # (dispatch overhead is per-batch, so the fixed term stays global)
         seconds = (constants["fixed_s_per_query"] * c["n_queries"]
                    + constants["candidates_s_per_flop"]
                    * stg["candidates"]["flops"]

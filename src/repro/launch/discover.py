@@ -14,6 +14,9 @@ chosen plan, serving stats, and recall against the exact scan:
 Add ``--mesh`` (with XLA_FLAGS=--xla_force_host_platform_device_count=8)
 to shard the lake over local devices — ``--mode lsh`` then runs the
 distributed LSH plan: per-device bucket probe + one small all_gather.
+``--grid QxD`` pins the 2-D (query × data) device grid (e.g. ``--grid
+2x4`` on 8 devices shards the query batch 2-way alongside a 4-way column
+shard); without it the planner factorizes the mesh per batch.
 
 ``--follow`` turns the engine into a read replica: it tails the catalog's
 manifest chain and refreshes onto each new version before serving (the
@@ -46,6 +49,17 @@ def serve_mode(args, lake, model):
         from repro.launch.mesh import make_local_mesh
         mesh = make_local_mesh()
         print(f"mesh: {dict(mesh.shape)} ({len(mesh.devices.flat)} devices)")
+
+    grid = None
+    if args.grid:
+        if mesh is None:
+            raise SystemExit("--grid needs --mesh")
+        try:
+            grid = tuple(int(x) for x in args.grid.lower().split("x"))
+            assert len(grid) == 2
+        except (ValueError, AssertionError):
+            raise SystemExit(f"--grid wants QxD (e.g. 2x4), got {args.grid!r}")
+        print(f"grid: {grid[0]} query shards x {grid[1]} data shards")
 
     t0 = time.perf_counter()
     catalog = ColumnCatalog(args.catalog)
@@ -81,7 +95,7 @@ def serve_mode(args, lake, model):
         ColumnCatalog(args.catalog), model,
         EngineConfig(k=args.k, mode=args.mode,
                      lsh=LSHConfig(n_bands=args.lsh_bands),
-                     cost_fn=cost_fn), mesh=mesh)
+                     cost_fn=cost_fn, grid=grid), mesh=mesh)
     if args.follow:
         # follower mode: the engine tails the manifest chain, picking up
         # versions published by any concurrent writer before each batch
@@ -99,7 +113,7 @@ def serve_mode(args, lake, model):
     stats = engine.stats()
     plan = stats.get("last_plan", {})
     print(f"plan: {plan.get('kind')} budget={plan.get('budget')} "
-          f"shards={plan.get('n_shards')} "
+          f"grid={'x'.join(map(str, plan.get('grid', [1, 1])))} "
           f"(~{plan.get('cost', {}).get('total_flops', 0)/1e6:.2f} MFLOP/batch); "
           f"cache {stats['cache']['hits']}h/{stats['cache']['misses']}m, "
           f"plans={stats['plans']}")
@@ -145,6 +159,12 @@ def main():
                     help="serve over a mesh of all local devices (sharded "
                          "plans; run with XLA_FLAGS=--xla_force_host_"
                          "platform_device_count=N to fake N devices)")
+    ap.add_argument("--grid", default=None, metavar="QxD",
+                    help="pin the (query x data) device grid for sharded "
+                         "plans, e.g. 2x4 (needs --mesh; Q*D must equal the "
+                         "device count). Default: the planner factorizes "
+                         "the mesh per batch from batch size, lake size, "
+                         "and the cost model")
     ap.add_argument("--lsh-bands", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--follow", action="store_true",

@@ -20,3 +20,27 @@ def make_local_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_grid_mesh(q_shards: int, d_shards: int, *, devices=None):
+    """2-D (query × data) grid mesh for discovery serving.
+
+    ``q_shards`` shards the concurrent query batch, ``d_shards`` the
+    lake's column axis — each device owns one (Q-shard, C-shard) tile of
+    the scoring problem (``repro.exec.sharded``). Degenerate geometries
+    are both useful: ``(1, d)`` is the classic replicated-query data
+    sharding, ``(q, 1)`` replicates the corpus to scale concurrent
+    batches. ``devices`` defaults to all local devices and must be
+    divisible by ``q_shards × d_shards``; the remainder becomes a trailing
+    ``model`` axis (replicated by discovery placements).
+    """
+    import numpy as np
+
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    devs = devs.reshape(-1)
+    n = q_shards * d_shards
+    if n <= 0 or devs.size % n:
+        raise ValueError(f"grid ({q_shards}, {d_shards}) does not tile "
+                         f"{devs.size} devices")
+    return jax.sharding.Mesh(devs.reshape(q_shards, d_shards, devs.size // n),
+                             ("query", "data", "model"))

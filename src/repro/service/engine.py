@@ -34,6 +34,12 @@ whenever one is supplied — lakes bigger than one device), ``full``
 ``auto`` (planner picks by cost — the analytic model, or a measured one
 injected via ``EngineConfig.cost_fn``, e.g. from
 ``launch.costmodel.calibrate_stage_costs``).
+
+Sharded plans place work on a 2-D (query × data) device grid: the
+planner factorizes the mesh into ``grid=(q_shards, d_shards)`` per
+micro-batch (large concurrent batches shard the query axis alongside the
+lake), or the operator pins a geometry with ``EngineConfig.grid`` /
+``--grid``. The executed grid is surfaced in ``stats()["last_plan"]``.
 """
 from __future__ import annotations
 
@@ -49,7 +55,7 @@ import numpy as np
 from repro.core import features as FT
 from repro.core.ingest import ingest_string_columns
 from repro.core.predictor import JoinQualityModel
-from repro.exec import MODES, Executor, Planner, PlannerConfig
+from repro.exec import MODES, Executor, Planner, PlannerConfig, pad_rows
 from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
 from repro.service.catalog import (CatalogSnapshot, CatalogStore,
                                    profile_and_sign)
@@ -68,6 +74,10 @@ class EngineConfig:
     exclude_same_table: bool = True
     shard_axes: tuple = ("data",)
     cost_fn: Callable | None = None    # measured cost model (planner hook)
+    # (q_shards, d_shards) device grid for sharded plans; None lets the
+    # planner pick the factorization per micro-batch from the batch size,
+    # lake size, and cost model (large batches shard the query axis too)
+    grid: tuple | None = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -318,7 +328,8 @@ class DiscoveryEngine:
         if self.last_plan is not None:
             p = self.last_plan
             out["last_plan"] = {"kind": p.kind, "budget": p.budget,
-                                "n_shards": p.n_shards, "k": p.k,
+                                "n_shards": p.n_shards,
+                                "grid": list(p.grid), "k": p.k,
                                 "cost": p.cost}
         return out
 
@@ -328,16 +339,13 @@ class DiscoveryEngine:
                    st: _VersionState | None = None):
         """Plan + execute one padded micro-batch through ``repro.exec``."""
         st = st if st is not None else self._head
-        q = zq.shape[0]
-        pad = -(-q // self.config.batch_pad) * self.config.batch_pad
-        if pad != q:
-            rep = lambda a: np.concatenate(
-                [a, np.repeat(a[-1:], pad - q, axis=0)])
-            zq, wq, sigq, tq, qid = map(rep, (zq, wq, sigq, tq, qid))
+        (zq, wq, sigq, tq, qid), q = pad_rows((zq, wq, sigq, tq, qid),
+                                              self.config.batch_pad)
+        pad = zq.shape[0]
 
         plan = self.planner.plan(n_columns=st.snapshot.n_columns,
                                  n_queries=pad, mode=self.config.mode,
-                                 mesh=self.mesh)
+                                 mesh=self.mesh, grid=self.config.grid)
         qkeys = (st.lsh.query_keys(sigq) if plan.candidates != "all"
                  else None)
         sc, ids, ncand = st.executor.execute(plan, zq, wq, tq, qid,
@@ -461,9 +469,11 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
     same snapshot, plus the fraction of the lake scored.
 
     Shard-aware on both sides: the pruned run reports the *global* number
-    of columns scored (per-device counts are psum-ed by the executor), and
-    the exact baseline is the sharded full scan whenever the engine's plan
-    is sharded — so ``scored_fraction`` and recall stay honest on meshes.
+    of columns scored (per-device counts are psum-ed over the DATA axes
+    only — a query-sharded grid must not double-count its query replicas),
+    and the exact baseline is the sharded full scan **on the same
+    (q_shards, d_shards) grid** whenever the engine's plan is sharded — so
+    ``scored_fraction`` and recall stay honest on any mesh geometry.
     """
     k = k or engine.config.k
     if k > engine.config.k:
@@ -477,10 +487,15 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
         zq, wq, sigq, tq, qid = engine._resolve(reqs, st)
         got_s, got_ids, ncand, plan = engine._rank_rows(zq, wq, sigq, tq,
                                                         qid, st)
+        # the served plan's grid was chosen against the PADDED batch; plan
+        # the baseline at the same size so its q_shards stay admissible
+        bp = engine.config.batch_pad
+        pad = -(-len(reqs) // bp) * bp
         base_plan = engine.planner.plan(
-            n_columns=st.snapshot.n_columns, n_queries=len(reqs),
+            n_columns=st.snapshot.n_columns, n_queries=pad,
             mode="sharded" if plan.sharded else "full",
-            mesh=engine.mesh if plan.sharded else None)
+            mesh=engine.mesh if plan.sharded else None,
+            grid=plan.grid if plan.sharded else None)
         full_s, full_ids, _ = st.executor.execute(base_plan, zq, wq, tq, qid)
         n_columns = st.snapshot.n_columns
     finally:
