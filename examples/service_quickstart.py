@@ -2,7 +2,9 @@
 
 Builds a tiny on-disk catalog from plain Python string columns, restarts an
 engine from it, adds a table incrementally, and asks both kinds of query —
-a catalog-resident column and an uploaded (external) column.
+a catalog-resident column and an uploaded (external) column — first through
+the continuous-batching scheduler (the async front door: futures, deadlines,
+coalesced batches), then through the ``serve_discovery`` compat adapter.
 
   PYTHONPATH=src python examples/service_quickstart.py
 """
@@ -10,7 +12,7 @@ import tempfile
 
 from repro.core import GBDTConfig, LakeSpec, generate_lake, train_quality_model
 from repro.service import (ColumnCatalog, DiscoveryEngine, DiscoveryRequest,
-                           EngineConfig, serve_discovery)
+                           EngineConfig, RequestScheduler, serve_discovery)
 
 
 def fake_table(prefix: str, n: int = 300, overlap: float = 0.0):
@@ -52,17 +54,32 @@ def main():
         DiscoveryRequest(name="uploaded",
                          values=[f"shared_{i}" for i in range(200, 500)]),
     ]
+
+    # async front door: submit from any thread, get a future per request;
+    # the worker coalesces arrivals into bucket-snapped micro-batches
+    with RequestScheduler(engine) as scheduler:
+        futures = [scheduler.submit(r, deadline_ms=5_000.0)
+                   for r in requests]
+        for resp in (f.result() for f in futures):
+            print(f"{resp.name}: scored {resp.n_candidates} columns "
+                  f"(queue {resp.queue_ms:.1f}ms + "
+                  f"compute {resp.compute_ms:.1f}ms)")
+            for m in resp.matches:
+                print(f"  {m.table}.{m.column}  q={m.score:.3f}")
+
+    # compat adapter: same responses, request order, scheduler inside
     for resp in serve_discovery(engine, requests):
-        print(f"{resp.name}: scored {resp.n_candidates} columns")
-        for m in resp.matches:
-            print(f"  {m.table}.{m.column}  q={m.score:.3f}")
+        print(f"{resp.name} (served again): {len(resp.matches)} matches")
 
     stats = engine.stats()
     plan = stats.get("last_plan", {})
+    sched = stats.get("scheduler", {})
     print(f"served via plan {plan.get('kind')} "
           f"(budget {plan.get('budget')}); "
           f"cache {stats['cache']['hits']} hits / "
-          f"{stats['cache']['misses']} misses")
+          f"{stats['cache']['misses']} misses; "
+          f"batches {sched.get('batches')} sized "
+          f"{sched.get('batch_size_hist')}")
 
 
 if __name__ == "__main__":

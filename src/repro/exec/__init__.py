@@ -22,13 +22,14 @@ per-stage cost model in ``launch.costmodel`` (injectable), and the
 placements per grid geometry.
 """
 from repro.exec.executor import Executor, pad_rows, pad_topk
-from repro.exec.plan import MODES, Planner, PlannerConfig, QueryPlan
+from repro.exec.plan import (DEFAULT_BATCH_BUCKETS, MODES, Planner,
+                             PlannerConfig, QueryPlan)
 from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
 from repro.exec.stages import CANDIDATE_KINDS
 
 __all__ = [
     "Executor", "pad_rows", "pad_topk",
-    "MODES", "Planner", "PlannerConfig", "QueryPlan",
+    "DEFAULT_BATCH_BUCKETS", "MODES", "Planner", "PlannerConfig", "QueryPlan",
     "build_sharded_pipeline", "place_sharded_corpus",
     "CANDIDATE_KINDS",
 ]

@@ -55,6 +55,15 @@ from repro.exec.stages import CANDIDATE_KINDS
 
 MODES = ("auto", "lsh", "full", "sharded")
 
+# Padded-batch bucket ladder the continuous-batching runtime snaps formed
+# micro-batches to.  Powers of two so every (q_shards, d_shards) mesh
+# factorization divides every bucket — the compiled executables and the
+# per-bucket grid choices are shared across all batch sizes that snap to
+# the same bucket, instead of one compile per odd batch size.  A measured
+# ladder (``launch.costmodel.derive_batch_buckets``) replaces this default
+# with the exact sizes a ``bench_service --batch-sweep`` run timed.
+DEFAULT_BATCH_BUCKETS = (8, 16, 32, 64, 128, 256)
+
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
@@ -113,6 +122,11 @@ class PlannerConfig:
     # than it saves (dispatch + all_gather against a trivial local scan);
     # gates d_shards > 1 factorizations (and hence "auto" sharding)
     min_columns_per_shard: int = 64
+    # padded-batch bucket ladder (sorted ascending); empty = no snapping,
+    # callers pad by their own multiple.  ``snap_batch`` rounds a formed
+    # batch up to the smallest bucket that fits so compiled executables
+    # and per-bucket grid choices are reused across batch sizes
+    batch_buckets: tuple = ()
 
 
 class Planner:
@@ -140,6 +154,20 @@ class Planner:
         cfg = self.config
         want = max(cfg.k, int(n_columns * cfg.candidate_frac))
         return max(1, min(want, cfg.max_candidates, n_columns))
+
+    def snap_batch(self, n_queries: int) -> int:
+        """Padded batch size for ``n_queries``: the smallest configured
+        bucket that fits, the next multiple of the top bucket beyond the
+        ladder, or ``n_queries`` itself when no ladder is configured."""
+        n = max(int(n_queries), 1)
+        buckets = tuple(sorted(self.config.batch_buckets))
+        if not buckets:
+            return n
+        for b in buckets:
+            if n <= b:
+                return int(b)
+        top = int(buckets[-1])
+        return -(-n // top) * top
 
     def _n_shards(self, mesh) -> int:
         """Grid capacity of ``mesh``: the data-shardable devices, times a

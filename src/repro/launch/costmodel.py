@@ -363,6 +363,38 @@ def calibrate_stage_costs(bench="BENCH_service.json", *, k: int = 10,
     return constants, make_calibrated_cost_fn(constants)
 
 
+def derive_batch_buckets(bench="BENCH_service.json"):
+    """Batch-bucket ladder for the continuous-batching scheduler, derived
+    from a measured ``BENCH_service.json``.
+
+    When the record carries a ``--batch-sweep`` section, its measured
+    batch sizes ARE the ladder: they are exactly the padded shapes whose
+    grid choice (1-D vs each 2-D factorization, and the sustained
+    crossover between them) was timed on this host, so snapping formed
+    batches to them reuses both the compiled executables and the
+    measured placement decisions.  Without a sweep (or without a
+    readable file) the analytic default
+    ``repro.exec.DEFAULT_BATCH_BUCKETS`` is returned.
+
+    ``bench`` is a path or an already-loaded record.  Returns a sorted
+    tuple of bucket sizes.
+    """
+    import json
+
+    from repro.exec.plan import DEFAULT_BATCH_BUCKETS
+    record = bench
+    if isinstance(bench, (str, os.PathLike)):
+        try:
+            with open(bench) as f:
+                record = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return DEFAULT_BATCH_BUCKETS
+    sweep = (record or {}).get("batch_sweep", {})
+    sizes = sorted({int(e["batch"]) for e in sweep.get("batches", [])
+                    if int(e["batch"]) >= 1})
+    return tuple(sizes) if sizes else DEFAULT_BATCH_BUCKETS
+
+
 def make_calibrated_cost_fn(constants: dict):
     """Wrap fitted per-stage constants into a planner ``cost_fn`` hook."""
 

@@ -24,6 +24,13 @@ demo publishes a table mid-run to show the pickup).  ``--calibrate
 BENCH_service.json`` fits per-stage cost constants from measured bench
 timings and plugs them into the planner, so ``--mode auto`` crossovers
 are measured, not analytic.
+
+``--open-loop`` follows the closed-loop serve with an **open-loop**
+measurement through the continuous-batching scheduler: requests arrive
+as a Poisson process at ``--offered-qps`` (default: 2× the closed-loop
+rate just measured), each carrying ``--deadline-ms``; reported are the
+achieved QPS, goodput under the deadline, p50/p99 latency *including
+queue wait*, shed rate, and the formed-batch size histogram.
 """
 from __future__ import annotations
 
@@ -126,6 +133,10 @@ def serve_mode(args, lake, model):
         names = [m.column for m in r.matches[:5]]
         print(f"  {r.name} ({r.n_candidates} scored) -> {names}")
 
+    if args.open_loop:
+        closed_qps = len(responses) / max(dt, 1e-9)
+        open_loop_mode(args, engine, qids, closed_qps)
+
     if args.follow:
         # demonstrate replication: a writer publishes a delta segment and
         # the follower's next batch observes the new version
@@ -138,6 +149,41 @@ def serve_mode(args, lake, model):
         print(f"follower: observed version {engine.version} (was {v0}) "
               f"after a concurrent add_table; "
               f"{engine.n_columns} columns live")
+
+
+def open_loop_mode(args, engine, qids, closed_qps: float) -> None:
+    """Poisson-arrival serving through the continuous-batching scheduler."""
+    from repro.launch.costmodel import derive_batch_buckets
+    from repro.service import DiscoveryRequest
+    from repro.service.loadgen import run_open_loop
+    from repro.service.scheduler import SchedulerConfig
+
+    offered = args.offered_qps or 2.0 * closed_qps
+    buckets = derive_batch_buckets(args.calibrate or "BENCH_service.json")
+    pool = [DiscoveryRequest(name=f"ol{i}", column_id=int(q))
+            for i, q in enumerate(qids)]
+    # warm every bucket's compiled shape BEFORE offering load, or the
+    # first formed batch at each new size pays its jit compile against
+    # the deadline and the printed numbers measure XLA, not serving
+    engine.config.batch_buckets = buckets
+    engine.planner.config.batch_buckets = buckets
+    for b in buckets:
+        engine.query_batch([pool[i % len(pool)] for i in range(b)])
+    r = run_open_loop(engine, pool, offered, args.open_loop_duration,
+                      args.deadline_ms,
+                      scheduler_config=SchedulerConfig(batch_buckets=buckets))
+    print(f"open-loop: offered {r['offered_qps']:.0f} QPS for "
+          f"{r['duration_s']:.2f}s (Poisson, deadline "
+          f"{args.deadline_ms:.0f}ms, buckets {r['buckets']})")
+    if r["p50_ms"] is not None:
+        print(f"  achieved {r['qps']:.0f} QPS, goodput "
+              f"{r['goodput_qps']:.0f} QPS; latency incl queue "
+              f"p50={r['p50_ms']:.1f}ms p99={r['p99_ms']:.1f}ms")
+    print(f"  shed {r['shed']}/{r['n_offered']} "
+          f"({100*r['shed_rate']:.1f}%), expired {r['expired']} "
+          f"({100*r['expired_rate']:.1f}%); formed {r['batches']} batches, "
+          f"size hist {r['batch_size_hist']}, "
+          f"bucket hits {r['bucket_hits']}/{r['batches']}")
 
 
 def main():
@@ -174,6 +220,18 @@ def main():
                     help="fit per-stage cost constants from a "
                          "BENCH_service.json and use them as the planner's "
                          "cost model (mode=auto crossovers become measured)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="follow the closed-loop serve with a Poisson "
+                         "open-loop run through the continuous-batching "
+                         "scheduler (QPS, goodput, p50/p99 incl queue "
+                         "wait, shed rate)")
+    ap.add_argument("--offered-qps", type=float, default=0.0,
+                    help="open-loop offered load (0 = 2x the measured "
+                         "closed-loop QPS)")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="per-request deadline for the open-loop run")
+    ap.add_argument("--open-loop-duration", type=float, default=2.0,
+                    help="seconds of Poisson arrivals to offer")
     args = ap.parse_args()
 
     t0 = time.perf_counter()

@@ -18,8 +18,13 @@ Layers (bottom-up):
   candidate→score→merge executor (``repro.exec``), and fronts it with a
   version-namespaced cost-aware LRU result cache + per-plan stats();
   ``engine.follow(reader)`` turns it into a read replica;
+* ``scheduler`` — :class:`RequestScheduler`: the continuous-batching
+  request runtime — a future-based ``submit(request, deadline_ms=,
+  priority=)`` front door whose background worker coalesces queued
+  arrivals into bucket-snapped micro-batches, expires past-deadline
+  requests, and sheds load via bounded-queue admission;
 * ``api``       — request/response dataclasses and the ``serve_discovery``
-  entry point.
+  compatibility adapter (request-order draining over the scheduler).
 """
 from repro.service.api import (ColumnMatch, DiscoveryRequest,
                                DiscoveryResponse, serve_discovery)
@@ -29,6 +34,8 @@ from repro.service.catalog import (CatalogReader, CatalogSnapshot,
 from repro.service.compactor import BackgroundCompactor
 from repro.service.engine import DiscoveryEngine, EngineConfig, measure_recall
 from repro.service.lsh import LSHConfig, LSHIndex, band_keys
+from repro.service.scheduler import (DeadlineExpired, RequestScheduler,
+                                     SchedulerConfig, SchedulerOverloadError)
 
 __all__ = [
     "ColumnMatch", "DiscoveryRequest", "DiscoveryResponse", "serve_discovery",
@@ -37,4 +44,6 @@ __all__ = [
     "BackgroundCompactor",
     "DiscoveryEngine", "EngineConfig", "measure_recall",
     "LSHConfig", "LSHIndex", "band_keys",
+    "DeadlineExpired", "RequestScheduler", "SchedulerConfig",
+    "SchedulerOverloadError",
 ]

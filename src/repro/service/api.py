@@ -1,13 +1,22 @@
 """Request/response surface of the discovery service.
 
-``serve_discovery`` is the entry point a server loop (or the CLI driver in
-``launch/discover.py``) feeds: it drains an iterable of requests in
-micro-batches so concurrent queries share one device dispatch, and yields
-responses in request order.
+Requests enter the system through the continuous-batching runtime
+(:class:`~repro.service.scheduler.RequestScheduler`): ``submit`` returns a
+future per request, a background worker coalesces queued arrivals into
+bucket-snapped micro-batches, and every response carries the split
+``queue_ms`` / ``compute_ms`` latency.
+
+``serve_discovery`` survives as a thin **compatibility adapter** over the
+scheduler: it drains an iterable of requests and yields responses in
+request order, exactly like the synchronous loop it replaced — the
+batching underneath is now the scheduler's (coalescing window + bucket
+ladder) rather than fixed ``max_batch`` chunks, which only changes *when*
+device dispatches happen, never which response belongs to which request.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Iterable, Iterator, Sequence
 
 
@@ -25,6 +34,13 @@ class DiscoveryRequest:
     column_id: int | None = None
     values: Sequence[str] | None = None
     k: int | None = None            # trim below the engine's k if smaller
+    # stashed (geometry, numeric, words, sigs) profile of an uploaded
+    # column — written by DiscoveryEngine.profile_request (the scheduler
+    # calls it at submit time, in the submitter's thread) so the formed
+    # batch's device path never profiles; keyed by signature geometry and
+    # re-profiled on mismatch, z-scored per pinned snapshot at resolve
+    _profile: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
         if (self.column_id is None) == (self.values is None):
@@ -45,22 +61,40 @@ class DiscoveryResponse:
     matches: list[ColumnMatch]
     n_candidates: int               # columns actually scored for this query
     cached: bool = False
-    latency_ms: float = 0.0
+    queue_ms: float = 0.0           # submit -> batch formation (scheduler)
+    compute_ms: float = 0.0         # engine resolve+plan+execute share
+    latency_ms: float = 0.0         # queue_ms + compute_ms
 
 
 def serve_discovery(engine, requests: Iterable[DiscoveryRequest],
-                    max_batch: int = 64) -> Iterator[DiscoveryResponse]:
-    """Drain ``requests`` through ``engine`` in micro-batches."""
-    pending: list[DiscoveryRequest] = []
+                    max_batch: int = 64,
+                    scheduler=None) -> Iterator[DiscoveryResponse]:
+    """Drain ``requests`` through ``engine``; yield responses in request
+    order.
 
-    def flush():
-        out = engine.query_batch(pending)
-        pending.clear()
-        return out
+    Compatibility adapter over :class:`RequestScheduler`: each request is
+    submitted as it is drawn from the iterable (with ``block=True``, so a
+    full queue is backpressure on the producer, never a shed) and
+    responses are yielded strictly in submission order regardless of the
+    order batches complete in.  ``max_batch`` caps the scheduler's formed
+    batches, preserving the old chunking bound.  Pass an existing
+    ``scheduler`` to share one runtime across callers; otherwise a
+    private one is created and closed on exhaustion.
+    """
+    from repro.service.scheduler import RequestScheduler, SchedulerConfig
 
-    for req in requests:
-        pending.append(req)
-        if len(pending) >= max_batch:
-            yield from flush()
-    if pending:
-        yield from flush()
+    own = scheduler is None
+    if own:
+        scheduler = RequestScheduler(
+            engine, SchedulerConfig(max_batch=int(max_batch)))
+    pending: deque = deque()
+    try:
+        for req in requests:
+            pending.append(scheduler.submit(req, block=True))
+            while pending and pending[0].done():
+                yield pending.popleft().result()
+        while pending:
+            yield pending.popleft().result()
+    finally:
+        if own:
+            scheduler.close()

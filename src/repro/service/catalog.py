@@ -19,9 +19,13 @@ without reprofiling:
   :class:`WriterLease` keeps compactors mutually exclusive.  Passing
   ``n_perm=`` / ``minhash_seed=`` **re-signs** every live column from the
   per-segment value sketches (``values.npy``) so the LSH geometry can be
-  retuned without re-ingesting the lake;
+  retuned without re-ingesting the lake; ``retain_versions=N`` defers
+  deletion of replaced segments until the head passes the swap by N
+  versions, keeping the last N manifest versions materializable for
+  pinned/lagging followers;
 * :class:`CatalogReader` — the follower half: tails the manifest chain
-  (``poll()``) and materializes immutable :class:`CatalogSnapshot`\\ s
+  (``poll()`` — a single ``os.stat`` of the pointer hint when nothing
+  changed) and materializes immutable :class:`CatalogSnapshot`\\ s
   keyed by version, so read replicas observe every version in order and
   queries can pin one version for their whole pipeline.
 
@@ -540,10 +544,21 @@ class CatalogStore:
                 minhash_seed: int | None = None,
                 resign_chunk: int = 256,
                 lease_ttl_s: float = 60.0,
+                retain_versions: int = 0,
                 on_built=None) -> None:
         """Merge the segments live at a pinned version into one; drop
         tombstoned columns; CAS-publish the swap; delete the replaced
         segment directories.
+
+        ``retain_versions=N`` keeps replaced segments on disk until the
+        manifest head has advanced ``N`` versions past the swap that
+        retired them (tracked via the manifest's ``retired`` list, GC'd
+        by later compactions), so the last ``N`` manifest versions stay
+        **materializable** — a pinned historical ``reader.snapshot(v)``
+        or a lagging follower inside the window never hits a deleted
+        segment.  The default ``0`` deletes immediately (and purges any
+        window left by earlier compactions); already-materialized
+        snapshots are plain numpy copies and outlive deletion either way.
 
         Runs under the advisory :class:`WriterLease` (raises
         :class:`LeaseHeldError` if another compactor holds it).  Concurrent
@@ -572,11 +587,12 @@ class CatalogStore:
                 lease.renew()           # a long build must not outlive ttl
                 if on_built is not None:
                     on_built()
-                nm = self._publish_compacted(pinned, built)
+                nm, due = self._publish_compacted(pinned, built,
+                                                  retain_versions)
                 if nm is not None:
                     self._set_manifest(nm)
                     self.stats["compactions"] += 1
-                    for s in built["replaced"]:
+                    for s in due:
                         shutil.rmtree(os.path.join(self.root, s),
                                       ignore_errors=True)
                     return
@@ -681,12 +697,17 @@ class CatalogStore:
                 "n_perm": new_perm, "minhash_seed": new_seed,
                 "resign": resign}
 
-    def _publish_compacted(self, pinned: dict, built: dict) -> dict | None:
+    def _publish_compacted(self, pinned: dict, built: dict,
+                           retain_versions: int = 0):
         """CAS-publish the compaction swap, replaying concurrent writes.
 
-        Returns the published manifest, or None when a re-sign must restart
-        (its new geometry cannot absorb concurrently-added segments)."""
+        Returns ``(manifest, due_segments)`` — the published manifest plus
+        the retired segments now past the ``retain_versions`` window (the
+        caller deletes those, and only those) — or ``(None, None)`` when a
+        re-sign must restart (its new geometry cannot absorb
+        concurrently-added segments)."""
         replaced = set(built["replaced"])
+        retain = max(int(retain_versions), 0)
         while True:
             cur = read_latest_manifest(self.root)
             live = set(cur["segments"])
@@ -698,9 +719,16 @@ class CatalogStore:
             # its columns twice (once in ours, once in theirs). Restart.
             if geom_moved or (built["resign"] and new_segs) or \
                     not replaced <= live:
-                return None
+                return None, None
+            v_new = int(cur["version"]) + 1
+            # retirement window: a segment replaced by the publish at
+            # version v stays on disk until the head passes v + retain,
+            # so the last `retain` manifest versions stay materializable
+            retired = [[int(v), s] for v, s in cur.get("retired", [])]
+            retired += [[v_new, s] for s in built["replaced"]]
+            due = [s for v, s in retired if v <= v_new - retain]
             nm = {
-                "version": int(cur["version"]) + 1,
+                "version": v_new,
                 "n_perm": built["n_perm"],
                 "minhash_seed": built["minhash_seed"],
                 "next_table_id": int(cur["next_table_id"]),
@@ -711,9 +739,11 @@ class CatalogStore:
                 # the compacted segment already applied are cleared
                 "dropped_ids": [d for d in cur["dropped_ids"]
                                 if d not in built["applied_drops"]],
+                "retired": [[v, s] for v, s in retired
+                            if v > v_new - retain],
             }
             if self._publish(nm):
-                return nm
+                return nm, due
             self.stats["cas_retries"] += 1
 
     @staticmethod
@@ -761,27 +791,59 @@ class CatalogReader:
     are plain numpy copies and remain valid forever.
     """
 
-    def __init__(self, root: str, *, max_cached_snapshots: int = 4):
+    def __init__(self, root: str, *, max_cached_snapshots: int = 4,
+                 deep_poll_every: int = 128):
+        self.root = root
+        # stat the pointer BEFORE resolving the head: a publish landing in
+        # between moves the pointer afterwards, so the next poll goes deep
+        self._ptr_stat = self._stat_pointer()
         m = read_latest_manifest(root)
         if m is None:
             raise FileNotFoundError(f"no catalog manifest under {root!r}")
-        self.root = root
         self._max_cached = int(max_cached_snapshots)
+        self._deep_every = max(int(deep_poll_every), 1)
         self._manifests: dict[int, dict] = {int(m["version"]): m}
         self._version = int(m["version"])
         self._snaps: "dict[int, CatalogSnapshot]" = {}
         self._lock = threading.Lock()
+        self.stats = {"polls": 0, "fast_polls": 0, "deep_polls": 0}
 
     @property
     def version(self) -> int:
         """Latest version this follower has observed."""
         return self._version
 
+    def _stat_pointer(self):
+        try:
+            s = os.stat(os.path.join(self.root, MANIFEST))
+        except FileNotFoundError:
+            return None
+        return (s.st_mtime_ns, s.st_ino, s.st_size)
+
     def poll(self) -> list[int]:
         """Probe the chain forward; returns newly observed versions in
-        order (empty when the head has not moved)."""
+        order (empty when the head has not moved).
+
+        Fast path: every publish rewrites the ``MANIFEST.json`` pointer
+        hint (``os.replace`` — new inode, new mtime), so an unchanged
+        pointer stat means nothing moved and the poll is a **single
+        ``os.stat``** — no JSON read/parse per probe.  The pointer is
+        best-effort (a writer could crash between the chain CAS and the
+        pointer rewrite), so every ``deep_poll_every``-th poll probes the
+        chain regardless; correctness never depends on the hint."""
         new: list[int] = []
         with self._lock:
+            self.stats["polls"] += 1
+            st = self._stat_pointer()
+            if (st is not None and st == self._ptr_stat
+                    and self.stats["polls"] % self._deep_every != 0):
+                self.stats["fast_polls"] += 1
+                return []
+            self.stats["deep_polls"] += 1
+            # cache the PRE-probe stat: a publish racing the probe below
+            # either lands in it, or moves the pointer after this stat
+            # and the next poll goes deep again
+            self._ptr_stat = st
             v = self._version
             while True:
                 m = read_manifest_version(self.root, v + 1)

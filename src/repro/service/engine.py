@@ -15,8 +15,16 @@ lives in ``repro.exec``; this module owns only serving concerns:
   or a background compaction swap — can never tear a batch.  Retired
   versions are released by refcount: the last in-flight batch to unpin
   one closes its executor and frees the device placements;
-* request resolution (resident column ids vs uploaded raw columns),
-* micro-batch padding so repeated batch shapes reuse compiles,
+* request resolution (resident column ids vs uploaded raw columns —
+  uploads are profiled once per signature geometry and stashed on the
+  request, so a scheduler can pay that device work at submit time,
+  off the formed-batch path),
+* micro-batch padding so repeated batch shapes reuse compiles: the next
+  ``batch_pad`` multiple, or — when a bucket ladder is configured
+  (``EngineConfig.batch_buckets``, installed by the continuous-batching
+  :class:`~repro.service.scheduler.RequestScheduler`) — the smallest
+  ladder bucket that fits, so only a handful of shapes are ever
+  compiled/planned,
 * a **cost-aware LRU cache** namespaced by snapshot version: keys embed
   the pinned version, so a result computed against version v can never
   answer a query served at v+1 (stale hits are structurally impossible,
@@ -70,6 +78,12 @@ class EngineConfig:
     candidate_frac: float = 0.2        # LSH budget as a fraction of the lake
     max_candidates: int = 4096         # absolute cap on that budget
     batch_pad: int = 8                 # pad micro-batches to this multiple
+    # padded-batch bucket ladder: when set, micro-batches snap UP to the
+    # smallest bucket that fits instead of the next batch_pad multiple, so
+    # only the ladder's shapes are ever compiled/planned.  None = legacy
+    # batch_pad padding; the continuous-batching scheduler installs its
+    # ladder here at construction (see service.scheduler)
+    batch_buckets: tuple | None = None
     cache_entries: int = 1024
     exclude_same_table: bool = True
     shard_axes: tuple = ("data",)
@@ -115,10 +129,12 @@ class DiscoveryEngine:
             k=config.k, candidate_frac=config.candidate_frac,
             max_candidates=config.max_candidates,
             n_bands=config.lsh.n_bands,
-            shard_axes=tuple(config.shard_axes)),
+            shard_axes=tuple(config.shard_axes),
+            batch_buckets=tuple(config.batch_buckets or ())),
             cost_fn=config.cost_fn)
         self._cache: OrderedDict[bytes, tuple[list[ColumnMatch], float]] = \
             OrderedDict()
+        self._cache_lock = threading.Lock()
         self._counters = {"queries": 0, "batches": 0, "cache_hits": 0,
                           "cache_misses": 0, "cache_admitted": 0,
                           "cache_rejected": 0, "cache_evicted": 0,
@@ -130,6 +146,7 @@ class DiscoveryEngine:
         self._head: _VersionState | None = None
         self._live: set[_VersionState] = set()
         self._reader = None
+        self._scheduler = None
         self.refresh(snapshot)
 
     @classmethod
@@ -150,7 +167,8 @@ class DiscoveryEngine:
         with self._slock:
             old, self._head = self._head, st
             self._live.add(st)
-            self._cache.clear()
+            with self._cache_lock:
+                self._cache.clear()
             self._counters["refreshes"] += 1
         if old is not None:
             self._release(old)
@@ -161,6 +179,12 @@ class DiscoveryEngine:
         newest published version."""
         self._reader = reader
         self._maybe_follow()
+
+    def attach_scheduler(self, scheduler) -> None:
+        """Register the continuous-batching runtime driving this engine so
+        its counters surface under ``stats()["scheduler"]`` (called by
+        ``RequestScheduler.__init__``; the latest attached wins)."""
+        self._scheduler = scheduler
 
     def _maybe_follow(self) -> None:
         reader = self._reader
@@ -239,6 +263,14 @@ class DiscoveryEngine:
 
     def query_batch(self, requests: list[DiscoveryRequest]
                     ) -> list[DiscoveryResponse]:
+        """Serve one micro-batch against one pinned snapshot version.
+
+        Reentrant: the scheduler's worker, direct callers, and racing
+        ``refresh``/follower swaps may all run concurrently — each call
+        pins its own version end-to-end and the result cache/counters
+        are lock-guarded.  ``compute_ms`` on each response is this
+        call's per-query share; ``queue_ms`` stays 0 unless a scheduler
+        delivered the batch."""
         t0 = time.perf_counter()
         self._maybe_follow()
         st = self._pin()
@@ -259,6 +291,7 @@ class DiscoveryEngine:
 
         responses: list[DiscoveryResponse | None] = [None] * len(requests)
         todo = []
+        scored = 0
         for i, key in enumerate(keys):
             hit = self._cache_get(key)
             if hit is not None:
@@ -266,9 +299,7 @@ class DiscoveryEngine:
                     name=requests[i].name,
                     matches=self._trim(hit, requests[i]),
                     n_candidates=0, cached=True)
-                self._counters["cache_hits"] += 1
             else:
-                self._counters["cache_misses"] += 1
                 todo.append(i)
 
         if todo:
@@ -286,14 +317,20 @@ class DiscoveryEngine:
                     name=requests[i].name,
                     matches=self._trim(matches, requests[i]),
                     n_candidates=int(ncand[row]))
-                self._counters["scored_columns"] += int(ncand[row])
-                self._counters["scan_columns"] += st.snapshot.n_columns
+                scored += int(ncand[row])
 
-        self._counters["queries"] += len(requests)
-        self._counters["batches"] += 1
+        with self._slock:                  # one locked fold per batch
+            self._counters["queries"] += len(requests)
+            self._counters["batches"] += 1
+            self._counters["cache_hits"] += len(requests) - len(todo)
+            self._counters["cache_misses"] += len(todo)
+            self._counters["scored_columns"] += scored
+            self._counters["scan_columns"] += \
+                len(todo) * st.snapshot.n_columns
         dt_ms = (time.perf_counter() - t0) * 1e3 / max(len(requests), 1)
         for r in responses:
-            r.latency_ms = dt_ms
+            r.compute_ms = dt_ms
+            r.latency_ms = r.queue_ms + dt_ms
         return responses
 
     # -- observability ------------------------------------------------------
@@ -302,8 +339,10 @@ class DiscoveryEngine:
         """Serving counters for capacity planning (the ``/stats`` payload):
         query/batch totals, cache hit/miss/admission counts, the per-plan
         query histogram, snapshot-version lifecycle (current version,
-        refresh count, live pinned states), and the last executed plan with
-        its modeled cost."""
+        refresh count, live pinned states), the last executed plan with
+        its modeled cost, and — when a :class:`RequestScheduler` is
+        attached — the scheduler's counters (queue depth, formed-batch
+        size histogram, bucket hits, expirations, sheds)."""
         c = dict(self._counters)
         with self._slock:
             version = self._head.version
@@ -325,6 +364,8 @@ class DiscoveryEngine:
             "snapshot": {"version": version, "refreshes": c["refreshes"],
                          "live_states": live},
         }
+        if self._scheduler is not None:
+            out["scheduler"] = self._scheduler.stats()
         if self.last_plan is not None:
             p = self.last_plan
             out["last_plan"] = {"kind": p.kind, "budget": p.budget,
@@ -335,12 +376,22 @@ class DiscoveryEngine:
 
     # -- internals ----------------------------------------------------------
 
+    def _pad_target(self, n_queries: int) -> int:
+        """Padded size of an ``n_queries`` micro-batch: the bucket ladder
+        when one is configured (scheduler-installed or explicit), else
+        the next ``batch_pad`` multiple — the legacy padding."""
+        if self.planner.config.batch_buckets:
+            return self.planner.snap_batch(n_queries)
+        bp = max(self.config.batch_pad, 1)
+        return -(-max(int(n_queries), 1) // bp) * bp
+
     def _rank_rows(self, zq, wq, sigq, tq, qid,
                    st: _VersionState | None = None):
         """Plan + execute one padded micro-batch through ``repro.exec``."""
         st = st if st is not None else self._head
-        (zq, wq, sigq, tq, qid), q = pad_rows((zq, wq, sigq, tq, qid),
-                                              self.config.batch_pad)
+        (zq, wq, sigq, tq, qid), q = pad_rows(
+            (zq, wq, sigq, tq, qid),
+            self._pad_target(np.asarray(zq).shape[0]))
         pad = zq.shape[0]
 
         plan = self.planner.plan(n_columns=st.snapshot.n_columns,
@@ -351,7 +402,9 @@ class DiscoveryEngine:
         sc, ids, ncand = st.executor.execute(plan, zq, wq, tq, qid,
                                              qkeys=qkeys)
         self.last_plan = plan
-        self._plan_counts[plan.kind] = self._plan_counts.get(plan.kind, 0) + q
+        with self._slock:
+            self._plan_counts[plan.kind] = \
+                self._plan_counts.get(plan.kind, 0) + q
         return sc[:q], ids[:q], ncand[:q], plan
 
     def _resolve(self, requests, st: _VersionState | None = None):
@@ -379,20 +432,62 @@ class DiscoveryEngine:
                 if self.config.exclude_same_table:
                     tq[i] = int(snap.table_ids[cid])
         if external:
-            ze, we, se = self._profile_external(
-                [requests[i] for i in external], st)
-            for row, i in enumerate(external):
-                zq[i], wq[i], sigq[i] = ze[row], we[row], se[row]
+            profs = self._ensure_profiled([requests[i] for i in external],
+                                          st)
+            prof = snap.profiles
+            for (_, num, words, sigs), i in zip(profs, external):
+                # z-scoring is per-version (lake-wide mean/std move with
+                # the snapshot) but pure numpy — the stashed raw profile
+                # is what the device computed
+                zq[i] = (num - prof.mean) / prof.std
+                wq[i] = words
+                sigq[i] = sigs
         return zq, wq, sigq, tq, qid
 
-    def _profile_external(self, requests, st: _VersionState):
-        """Profile + sign uploaded raw columns with the snapshot's stats."""
-        batch, _ = ingest_string_columns(
-            [(r.name, r.values) for r in requests])
-        num, words, sigs = profile_and_sign(batch, sigq_width(st.snapshot),
-                                            st.snapshot.minhash_seed)
-        prof = st.snapshot.profiles
-        return (num - prof.mean) / prof.std, words, sigs
+    def profile_request(self, request: DiscoveryRequest) -> None:
+        """Profile + MinHash an uploaded (``values=``) request against the
+        current head's signature geometry and stash the raw profile on the
+        request.  The scheduler calls this at **submit time**, in the
+        submitter's thread, so the worker's formed-batch path is pure
+        scoring dispatch; a no-op for resident (``column_id=``) requests
+        and for requests already stashed with a matching geometry."""
+        if request.values is None:
+            return
+        st = self._pin()
+        try:
+            self._ensure_profiled([request], st)
+        finally:
+            self._release(st)
+
+    def _ensure_profiled(self, requests, st: _VersionState) -> list[tuple]:
+        """Return one (geometry, numeric, words, sigs) profile per request
+        for ``st``'s signature geometry, stashing fresh ones on the
+        requests.  The stash is geometry-keyed, not version-keyed: a
+        refresh that keeps the MinHash geometry reuses the device
+        profiling and only re-z-scores (cheap numpy) at resolve.  The
+        returned tuples — not re-reads of the mutable stash, which a
+        concurrent profile against a different geometry may replace — are
+        what the caller must consume."""
+        snap = st.snapshot
+        geom = (sigq_width(snap), int(snap.minhash_seed))
+        out: dict[int, tuple] = {}
+        todo, queued = [], set()
+        for r in requests:
+            p = r._profile                 # snapshot the mutable field once
+            if p is not None and p[0] == geom:
+                out[id(r)] = p
+            elif id(r) not in queued:      # one profile per request object
+                queued.add(id(r))
+                todo.append(r)
+        if todo:
+            batch, _ = ingest_string_columns(
+                [(r.name, r.values) for r in todo])
+            num, words, sigs = profile_and_sign(batch, *geom)
+            for row, r in enumerate(todo):
+                p = (geom, num[row], words[row], sigs[row])
+                r._profile = p
+                out[id(r)] = p
+        return [out[id(r)] for r in requests]
 
     def _matches(self, scores, ids,
                  st: _VersionState | None = None) -> list[ColumnMatch]:
@@ -427,11 +522,12 @@ class DiscoveryEngine:
         return st.version.to_bytes(8, "big", signed=True) + h.digest()
 
     def _cache_get(self, key):
-        hit = self._cache.get(key)
-        if hit is None:
-            return None
-        self._cache.move_to_end(key)
-        return hit[0]
+        with self._cache_lock:
+            hit = self._cache.get(key)
+            if hit is None:
+                return None
+            self._cache.move_to_end(key)
+            return hit[0]
 
     def _cache_put(self, key, matches, cost: float) -> None:
         """Cost-aware admission: when full, the cheapest (oldest on ties)
@@ -441,22 +537,23 @@ class DiscoveryEngine:
         cap = self.config.cache_entries
         if cap <= 0:
             return
-        if key in self._cache:
-            self._cache[key] = (matches, cost)
-            self._cache.move_to_end(key)
-            return
-        if len(self._cache) >= cap:
-            victim, vcost = None, np.inf
-            for k_, (_, c_) in self._cache.items():   # oldest-first: ties
-                if c_ < vcost:                        # go to the oldest
-                    victim, vcost = k_, c_
-            if cost < vcost:
-                self._counters["cache_rejected"] += 1
+        with self._cache_lock:
+            if key in self._cache:
+                self._cache[key] = (matches, cost)
+                self._cache.move_to_end(key)
                 return
-            del self._cache[victim]
-            self._counters["cache_evicted"] += 1
-        self._cache[key] = (matches, cost)
-        self._counters["cache_admitted"] += 1
+            if len(self._cache) >= cap:
+                victim, vcost = None, np.inf
+                for k_, (_, c_) in self._cache.items():  # oldest-first:
+                    if c_ < vcost:                       # ties go oldest
+                        victim, vcost = k_, c_
+                if cost < vcost:
+                    self._counters["cache_rejected"] += 1
+                    return
+                del self._cache[victim]
+                self._counters["cache_evicted"] += 1
+            self._cache[key] = (matches, cost)
+            self._counters["cache_admitted"] += 1
 
 
 def sigq_width(snapshot: CatalogSnapshot) -> int:
@@ -489,8 +586,7 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
                                                         qid, st)
         # the served plan's grid was chosen against the PADDED batch; plan
         # the baseline at the same size so its q_shards stay admissible
-        bp = engine.config.batch_pad
-        pad = -(-len(reqs) // bp) * bp
+        pad = engine._pad_target(len(reqs))
         base_plan = engine.planner.plan(
             n_columns=st.snapshot.n_columns, n_queries=pad,
             mode="sharded" if plan.sharded else "full",

@@ -1,0 +1,79 @@
+"""Open-loop (Poisson-arrival) load driver for the request scheduler.
+
+Closed-loop measurements (time N back-to-back batches) hide queueing: the
+benchmark only ever offers the next request once the last one finished.
+An **open-loop** driver offers requests on a Poisson arrival process at a
+fixed rate regardless of completion — so queue wait, deadline misses, and
+load shedding become visible.  This is the shared measurement core behind
+``benchmarks/bench_service.py --open-loop`` and
+``launch/discover.py --open-loop``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.service.scheduler import (DeadlineExpired, RequestScheduler,
+                                     SchedulerConfig, SchedulerOverloadError)
+
+
+def run_open_loop(engine, pool, offered_qps: float, duration_s: float,
+                  deadline_ms: float, *,
+                  scheduler_config: SchedulerConfig | None = None,
+                  seed: int = 0, max_arrivals: int | None = None) -> dict:
+    """Offer a Poisson request stream to a fresh scheduler over ``engine``.
+
+    ``pool`` is a list of :class:`DiscoveryRequest`\\ s cycled round-robin
+    (reused objects are safe: requests are read-only on the serve path).
+    Returns achieved QPS, goodput under the deadline, latency-incl-queue
+    percentiles, shed and expiration rates, and the scheduler's formed-
+    batch statistics.  ``max_arrivals`` bounds the submit loop (the run
+    shortens rather than the rate dropping).
+    """
+    rng = np.random.default_rng(seed)
+    n = max(int(offered_qps * duration_s), 16)
+    if max_arrivals is not None:
+        n = min(n, int(max_arrivals))
+    arrivals = np.cumsum(rng.exponential(1.0 / offered_qps, size=n))
+    scheduler = RequestScheduler(engine, scheduler_config)
+    try:
+        futures, shed = [], 0
+        t0 = time.perf_counter()
+        for i in range(n):
+            gap = arrivals[i] - (time.perf_counter() - t0)
+            if gap > 0:
+                time.sleep(gap)
+            try:
+                futures.append(scheduler.submit(pool[i % len(pool)],
+                                                deadline_ms=deadline_ms))
+            except SchedulerOverloadError:
+                shed += 1
+        lats, expired = [], 0
+        for f in futures:
+            try:
+                lats.append(f.result(timeout=300).latency_ms)
+            except DeadlineExpired:
+                expired += 1
+        wall = time.perf_counter() - t0      # submit + drain
+        stats = scheduler.stats()
+    finally:
+        scheduler.close()
+    completed = len(lats)
+    good = sum(1 for l in lats if l <= deadline_ms)
+    return {
+        "offered_qps": n / max(float(arrivals[-1]), 1e-9),
+        "n_offered": n,
+        "duration_s": wall,
+        "qps": completed / max(wall, 1e-9),
+        "goodput_qps": good / max(wall, 1e-9),
+        "p50_ms": float(np.percentile(lats, 50)) if lats else None,
+        "p99_ms": float(np.percentile(lats, 99)) if lats else None,
+        "shed": shed, "shed_rate": shed / n,
+        "expired": expired, "expired_rate": expired / n,
+        "batches": stats["batches"],
+        "batch_size_hist": stats["batch_size_hist"],
+        "bucket_hits": stats["bucket_hits"],
+        "buckets": stats["buckets"],
+        "max_queue_depth": stats["max_queue_depth"],
+    }

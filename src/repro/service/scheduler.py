@@ -1,0 +1,317 @@
+"""Continuous-batching request runtime for the discovery engine.
+
+The synchronous serving surface (``serve_discovery`` draining an iterable
+in fixed-size chunks) cannot coalesce arrivals across callers, has no
+backpressure, and forms whatever batch size the iterable happened to
+yield — mostly *not* the sizes the 2-D grid planner is fastest at.  This
+module replaces it with an asynchronous scheduler:
+
+* :meth:`RequestScheduler.submit` is the request entry point: it enqueues
+  one :class:`~repro.service.api.DiscoveryRequest` and immediately
+  returns a ``concurrent.futures.Future`` that resolves to the
+  :class:`~repro.service.api.DiscoveryResponse` (or raises
+  :class:`DeadlineExpired`).  Uploaded (``values=``) columns are profiled
+  **in the submitter's thread** against the engine's current snapshot
+  geometry, so the worker's formed-batch path is pure scoring dispatch;
+* a single background worker forms **micro-batches** by coalescing the
+  queued arrivals within a bounded wait window (``max_wait_ms``), in
+  priority order (higher first, FIFO within a priority);
+* formed batches are **snapped to a bucket ladder** (``batch_buckets``):
+  the engine pads each batch up to the smallest bucket that fits, so
+  only a handful of compiled executables — and the planner grid choices
+  measured for exactly those sizes — ever exist, instead of one per odd
+  batch size.  The ladder is installed on the engine's planner at
+  scheduler construction (``launch.costmodel.derive_batch_buckets`` can
+  derive it from a measured ``BENCH_service.json`` batch sweep);
+* **deadline-aware admission**: a request submitted with ``deadline_ms=``
+  is dropped at batch-formation time once its deadline has passed (its
+  future raises :class:`DeadlineExpired`) — a queue that fell behind
+  sheds dead work instead of computing answers nobody is waiting for;
+* **bounded-queue load shedding**: when ``max_queue`` requests are
+  already waiting, ``submit`` raises :class:`SchedulerOverloadError`
+  (or blocks for backpressure with ``block=True`` — what the
+  ``serve_discovery`` compat adapter uses).
+
+Each formed batch runs through ``engine.query_batch`` — one pinned MVCC
+snapshot version end-to-end, exactly like a direct call — and every
+response carries the split ``queue_ms`` / ``compute_ms`` latency.
+Scheduler counters (formed-batch size histogram, bucket hits,
+expirations, sheds, queue depth) surface through ``scheduler.stats()``
+and, once attached, under ``engine.stats()["scheduler"]``.
+
+Typical serving-loop wiring::
+
+    engine = DiscoveryEngine.from_catalog(store, model, EngineConfig())
+    with RequestScheduler(engine) as scheduler:
+        fut = scheduler.submit(request, deadline_ms=50.0)
+        ...                          # any thread, any number of callers
+        response = fut.result()
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+
+from repro.exec.plan import DEFAULT_BATCH_BUCKETS
+
+
+class DeadlineExpired(TimeoutError):
+    """The request's deadline passed while it waited in the queue."""
+
+
+class SchedulerOverloadError(RuntimeError):
+    """The bounded request queue is full; the request was shed."""
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_queue: int = 1024         # bounded admission: beyond this, shed
+    max_wait_ms: float = 2.0      # batch-formation coalescing window
+    # cap on the number of requests per formed batch; None = top bucket
+    max_batch: int | None = None
+    # padded-batch bucket ladder; None = the engine's configured ladder,
+    # falling back to exec.plan.DEFAULT_BATCH_BUCKETS
+    batch_buckets: tuple | None = None
+
+
+@dataclasses.dataclass(eq=False)
+class _Item:
+    request: object
+    future: Future
+    t_submit: float
+    deadline: float | None        # absolute perf_counter second, or None
+
+
+class RequestScheduler:
+    """Future-based async front door over a :class:`DiscoveryEngine`.
+
+    One worker thread drives the engine; any number of threads submit.
+    The engine's ``query_batch`` stays callable directly (it is
+    reentrant) — the scheduler only owns arrival coalescing, batch
+    formation, deadlines, and admission control.
+    """
+
+    def __init__(self, engine, config: SchedulerConfig | None = None):
+        self.engine = engine
+        self.config = config or SchedulerConfig()
+        ladder = (self.config.batch_buckets
+                  or engine.config.batch_buckets
+                  or DEFAULT_BATCH_BUCKETS)
+        self.buckets = tuple(sorted(int(b) for b in ladder))
+        self._bucket_set = frozenset(self.buckets)
+        if self.buckets[0] < 1:
+            raise ValueError(f"batch buckets must be >= 1; got {ladder!r}")
+        # install the ladder on the engine so ITS padding (and therefore
+        # the planner's per-bucket grid choice + compile cache) snaps to
+        # the same sizes the scheduler forms.  Deliberately persistent:
+        # direct query_batch callers keep snapping to the same shapes
+        # after this scheduler closes (padding up is result-transparent —
+        # padded rows are sliced off — and shape reuse is the point)
+        engine.config.batch_buckets = self.buckets
+        engine.planner.config.batch_buckets = self.buckets
+        self.max_batch = (int(self.config.max_batch)
+                          if self.config.max_batch is not None
+                          else self.buckets[-1])
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1; "
+                             f"got {self.config.max_batch!r}")
+
+        self._heap: list[tuple[int, int, _Item]] = []
+        self._seq = itertools.count()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._stop = False
+        self._counters = {"submitted": 0, "completed": 0, "failed": 0,
+                          "shed": 0, "expired": 0, "batches": 0,
+                          "bucket_hits": 0, "bucket_misses": 0,
+                          "max_queue_depth": 0}
+        self._batch_hist: dict[int, int] = {}
+        engine.attach_scheduler(self)
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="freyja-scheduler")
+        self._worker.start()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, request, *, deadline_ms: float | None = None,
+               priority: int = 0, block: bool = False) -> Future:
+        """Enqueue ``request``; returns a future for its response.
+
+        ``deadline_ms`` — relative deadline; once passed, the request is
+        expired at batch-formation time and the future raises
+        :class:`DeadlineExpired`.  ``priority`` — higher runs first
+        (FIFO within a priority).  ``block=True`` turns a full queue
+        into backpressure (wait for space) instead of an immediate
+        :class:`SchedulerOverloadError`.
+        """
+        with self._cv:
+            # cheap pre-check so a shed (or closed-scheduler) request
+            # never pays the profiling below; the authoritative check
+            # re-runs under the lock at enqueue time
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if len(self._heap) >= self.config.max_queue and not block:
+                self._counters["shed"] += 1
+                raise SchedulerOverloadError(
+                    f"request queue full ({self.config.max_queue} "
+                    f"waiting); request {request.name!r} shed")
+        # the clock starts BEFORE profiling: upload profiling is part of
+        # the request's end-to-end latency and of its deadline budget
+        now = time.perf_counter()
+        if getattr(request, "values", None) is not None:
+            # profile the uploaded column HERE, in the submitter's
+            # thread: the worker's formed-batch path never pays the
+            # per-request device profiling
+            self.engine.profile_request(request)
+        item = _Item(request=request, future=Future(), t_submit=now,
+                     deadline=(now + deadline_ms / 1e3
+                               if deadline_ms is not None else None))
+        with self._cv:
+            while True:
+                if self._closed:
+                    raise RuntimeError("scheduler is closed")
+                if len(self._heap) < self.config.max_queue:
+                    break
+                if not block:
+                    self._counters["shed"] += 1
+                    raise SchedulerOverloadError(
+                        f"request queue full ({self.config.max_queue} "
+                        f"waiting); request {request.name!r} shed")
+                self._cv.wait()
+            heapq.heappush(self._heap,
+                           (-int(priority), next(self._seq), item))
+            self._counters["submitted"] += 1
+            self._counters["max_queue_depth"] = max(
+                self._counters["max_queue_depth"], len(self._heap))
+            self._cv.notify_all()
+        return item.future
+
+    # -- worker -------------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            items = self._next_batch()
+            if items is None:
+                return
+            if items:
+                self._run_batch(items)
+
+    def _next_batch(self) -> list[_Item] | None:
+        """Block for arrivals, coalesce within the wait window, then pop
+        up to ``max_batch`` items in priority order.  None = shut down."""
+        with self._cv:
+            while not self._heap and not self._stop:
+                self._cv.wait()
+            if not self._heap:
+                return None                      # stopped and drained
+            if self.config.max_wait_ms > 0 and not self._stop:
+                t_end = time.perf_counter() + self.config.max_wait_ms / 1e3
+                while len(self._heap) < self.max_batch and not self._stop:
+                    left = t_end - time.perf_counter()
+                    if left <= 0:
+                        break
+                    self._cv.wait(timeout=left)
+            # partition as we pop so expired requests never consume live
+            # batch slots: keep drawing from the queue until max_batch
+            # UNEXPIRED items are staged (or it drains) — a backlog of
+            # dead heads must not shrink the batch the live tail gets
+            now = time.perf_counter()
+            staged, dead = [], []
+            while self._heap and len(staged) < self.max_batch:
+                it = heapq.heappop(self._heap)[2]
+                if it.deadline is not None and now > it.deadline:
+                    dead.append(it)
+                else:
+                    staged.append(it)
+            self._cv.notify_all()                # wake blocked submitters
+        # future mutations happen OUTSIDE the lock (done-callbacks may
+        # re-enter submit); set_running first — set_exception on a
+        # caller-cancelled future would raise and kill the worker
+        live = []
+        for it in dead:
+            if it.future.set_running_or_notify_cancel():
+                self._counters["expired"] += 1
+                it.future.set_exception(DeadlineExpired(
+                    f"request {it.request.name!r} expired after "
+                    f"{(now - it.t_submit) * 1e3:.1f}ms in queue"))
+        for it in staged:
+            if it.future.set_running_or_notify_cancel():
+                live.append(it)
+        return live
+
+    def _run_batch(self, items: list[_Item]) -> None:
+        t_start = time.perf_counter()
+        n = len(items)
+        self._counters["batches"] += 1
+        self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
+        if n in self._bucket_set:
+            self._counters["bucket_hits"] += 1
+        else:
+            self._counters["bucket_misses"] += 1
+        try:
+            responses = self.engine.query_batch(
+                [it.request for it in items])
+        except BaseException as e:
+            self._counters["failed"] += n
+            for it in items:
+                it.future.set_exception(e)
+            return
+        for it, r in zip(items, responses):
+            r.queue_ms = (t_start - it.t_submit) * 1e3
+            r.latency_ms = r.queue_ms + r.compute_ms
+            self._counters["completed"] += 1
+            it.future.set_result(r)
+
+    # -- lifecycle / observability ------------------------------------------
+
+    def close(self, drain: bool = True) -> None:
+        """Stop accepting submissions and shut the worker down.  With
+        ``drain=True`` (default) queued requests are still served; with
+        ``drain=False`` they fail fast with a ``RuntimeError``."""
+        with self._cv:
+            if self._closed and self._stop:
+                return
+            self._closed = True
+            self._stop = True
+            if not drain:
+                while self._heap:
+                    _, _, it = heapq.heappop(self._heap)
+                    if it.future.set_running_or_notify_cancel():
+                        it.future.set_exception(RuntimeError(
+                            "scheduler closed before the request was "
+                            "served"))
+            self._cv.notify_all()
+        self._worker.join()
+
+    def __enter__(self) -> "RequestScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def queue_depth(self) -> int:
+        with self._cv:
+            return len(self._heap)
+
+    def stats(self) -> dict:
+        """Scheduler counters: queue depth (current/max), formed-batch
+        size histogram, bucket hit/miss counts, expirations, sheds."""
+        with self._cv:
+            depth = len(self._heap)
+            c = dict(self._counters)
+            hist = dict(sorted(self._batch_hist.items()))
+            closed = self._closed
+        return {
+            "queue_depth": depth,
+            "max_queue": self.config.max_queue,
+            "max_batch": self.max_batch,
+            "buckets": list(self.buckets),
+            "batch_size_hist": hist,
+            "closed": closed,
+            **c,
+        }

@@ -500,6 +500,130 @@ def test_engine_empty_catalog_still_answers(tmp_path):
     assert r.matches == []
 
 
+def test_scheduler_submitters_race_catalog_refresh(tmp_path, model):
+    """Concurrent submitters drive the continuous-batching scheduler while
+    a writer publishes new versions and the engine refreshes onto them:
+    every future resolves to its own request's response, no batch is torn
+    by a swap, and the engine retires old versions cleanly."""
+    from repro.service import RequestScheduler, SchedulerConfig
+
+    store = CatalogStore(str(tmp_path), n_perm=64)
+    store.add_table("base0", _cols("base0"))
+    store.add_table("base1", _cols("base1"))
+    engine = DiscoveryEngine.from_catalog(
+        store, model, EngineConfig(k=3, mode="full", cache_entries=0))
+    n0 = engine.n_columns
+    errors: list[Exception] = []
+    results: list[tuple[str, object]] = []
+    start = threading.Barrier(3)
+
+    def submitter(tag, scheduler):
+        try:
+            start.wait()
+            futs = []
+            for i in range(24):
+                name = f"{tag}{i}"
+                futs.append((name, scheduler.submit(
+                    DiscoveryRequest(name=name, column_id=i % n0))))
+            results.extend(futs)
+        except Exception as e:              # pragma: no cover
+            errors.append(e)
+
+    def refresher():
+        try:
+            start.wait()
+            for i in range(4):
+                store.add_table(f"extra{i}", _cols(f"extra{i}"))
+                engine.refresh(store.snapshot())
+        except Exception as e:              # pragma: no cover
+            errors.append(e)
+
+    with RequestScheduler(engine,
+                          SchedulerConfig(max_wait_ms=0.5)) as scheduler:
+        threads = [threading.Thread(target=submitter,
+                                    args=(t, scheduler)) for t in "ab"]
+        threads.append(threading.Thread(target=refresher))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        for name, fut in results:
+            r = fut.result(timeout=60)
+            assert r.name == name           # futures never cross wires
+    s = engine.stats()
+    assert s["queries"] >= 48
+    assert s["snapshot"]["refreshes"] >= 5  # initial + 4 concurrent swaps
+    assert s["snapshot"]["live_states"] == 1    # retired states released
+    assert s["scheduler"]["completed"] == 48
+
+
+def test_reader_poll_stat_cache_fast_path(tmp_path):
+    """Idle polls are a single pointer stat (no JSON read); a publish
+    moves the pointer and the next poll goes deep and observes it."""
+    root = str(tmp_path)
+    store = CatalogStore(root, n_perm=64)
+    reader = CatalogReader(root)
+    for _ in range(6):
+        assert reader.poll() == []
+    assert reader.stats["fast_polls"] >= 5
+    assert reader.stats["deep_polls"] <= 1
+
+    store.add_table("t0", _cols("t0"))
+    assert reader.poll() == [1]            # pointer moved -> deep probe
+    deep_after_add = reader.stats["deep_polls"]
+    assert deep_after_add >= 1
+    assert reader.poll() == []             # idle again: back on the stat
+    assert reader.stats["fast_polls"] >= 6
+
+    # the hint is best-effort: even with the pointer frozen (crashed
+    # writer), the periodic deep probe still observes the new version
+    lazy = CatalogReader(root, deep_poll_every=3)
+    real_stat = lazy._stat_pointer()
+    lazy._stat_pointer = lambda: real_stat
+    store.add_table("t1", _cols("t1"))
+    observed = []
+    for _ in range(3):
+        observed.extend(lazy.poll())
+    assert observed == [2]
+
+
+def test_compact_retention_window_keeps_recent_versions(tmp_path):
+    """compact(retain_versions=N) defers deletion of replaced segments so
+    the last N manifest versions stay materializable; a later compaction
+    GCs segments past the window."""
+    root = str(tmp_path)
+    store = CatalogStore(root, n_perm=64)
+    store.add_table("t0", _cols("t0"))     # v1
+    store.add_table("t1", _cols("t1"))     # v2
+    segs_v2 = set(store.manifest["segments"])
+
+    store.compact(retain_versions=2)       # v3: replaced segments retained
+    for s in segs_v2:
+        assert os.path.isdir(os.path.join(root, s))
+    assert store.manifest["retired"] == [[3, s] for s in sorted(segs_v2)] \
+        or {s for _, s in store.manifest["retired"]} == segs_v2
+    # a FRESH follower can still materialize the pre-compaction version
+    assert CatalogReader(root).snapshot(2).n_columns == 2
+
+    store.add_table("t2", _cols("t2"))     # v4
+    store.add_table("t3", _cols("t3"))     # v5
+    store.compact(retain_versions=2)       # v6: v3's retirees are past the
+    for s in segs_v2:                      # window -> deleted
+        assert not os.path.exists(os.path.join(root, s))
+    with pytest.raises(KeyError, match="compacted away"):
+        CatalogReader(root).snapshot(2)
+    # versions inside the window stay readable
+    assert CatalogReader(root).snapshot(5).n_columns == 4
+    assert CatalogReader(root).snapshot(6).n_columns == 4
+
+    # retain_versions=0 (default) purges any remaining window
+    store.compact()
+    assert store.manifest["retired"] == []
+    segs = [d for d in os.listdir(root) if d.startswith("seg-")]
+    assert len(segs) == 1
+
+
 def test_legacy_single_manifest_catalog_upgrades(tmp_path):
     """A pre-CAS catalog (pointer file only, no chain) opens, serves, and
     joins the chain on the first write."""
