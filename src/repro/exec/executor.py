@@ -27,6 +27,8 @@ actually scored per query (psum-ed over the data axes on a mesh).
 """
 from __future__ import annotations
 
+import threading
+import time
 from functools import partial
 
 import jax
@@ -104,7 +106,7 @@ class Executor:
     def __init__(self, z: np.ndarray, w: np.ndarray, gbdt_tuple,
                  *, table_ids: np.ndarray | None = None,
                  band_keys: np.ndarray | None = None, mesh=None,
-                 score_block: int = 4096):
+                 score_block: int = 4096, events=None):
         self.n_columns = int(z.shape[0])
         self._z_np = np.asarray(z, np.float32)
         self._w_np = np.asarray(w)
@@ -128,6 +130,14 @@ class Executor:
         self._pipelines: dict[tuple, object] = {}
         self._grid_meshes: dict[tuple, Mesh] = {}
         self._closed = False
+        # observability: duck-typed event sink (anything with
+        # .publish(type, **payload) — service.events.EventBus; exec stays
+        # dependency-free) + first-contact tracking so the compile spike
+        # a (plan kind, grid, batch shape) pays on its first execution is
+        # a visible event, not a mystery p99 outlier
+        self._events = events
+        self._seen_shapes: set[tuple] = set()
+        self._tls = threading.local()
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -233,14 +243,39 @@ class Executor:
                                  f"but this executor has none")
             if qkeys is None:
                 raise ValueError(f"plan {plan.kind!r} needs query band keys")
+        if plan.sharded and self.mesh is None:
+            raise ValueError(f"plan {plan.kind!r} needs a mesh")
+        # first contact with this (kind, k, budget, grid, batch shape)
+        # pays the jit trace+compile inside the dispatch below — surface
+        # it as a compile_begin/end event pair and stash the wall in a
+        # thread-local the engine folds into the request trace
+        shape_key = (plan.kind, plan.k, plan.budget, plan.grid, q)
+        first = shape_key not in self._seen_shapes
+        self._seen_shapes.add(shape_key)
+        self._tls.compile_ms = None
+        if first and self._events is not None:
+            self._events.publish("compile_begin", plan=plan.kind,
+                                 grid=list(plan.grid), n_queries=q, k=plan.k)
+        t0 = time.perf_counter()
         if plan.sharded:
-            if self.mesh is None:
-                raise ValueError(f"plan {plan.kind!r} needs a mesh")
             sc, ids, n = self._execute_sharded(plan, zq, wq, tq, qid, qkeys)
         else:
             sc, ids, n = self._execute_local(plan, zq, wq, tq, qid, qkeys)
         sc, ids = pad_topk(np.asarray(sc), np.asarray(ids), plan.k)
-        return sc, ids, np.asarray(n)
+        n = np.asarray(n)               # block until ready before timing
+        if first:
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            self._tls.compile_ms = wall_ms
+            if self._events is not None:
+                self._events.publish("compile_end", plan=plan.kind,
+                                     grid=list(plan.grid), n_queries=q,
+                                     k=plan.k, ms=wall_ms)
+        return sc, ids, n
+
+    def last_compile_ms(self) -> float | None:
+        """First-contact compile+execute wall of this thread's most recent
+        ``execute`` call, or None when the shape was already warm."""
+        return getattr(self._tls, "compile_ms", None)
 
     # -- internals ----------------------------------------------------------
 

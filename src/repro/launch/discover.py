@@ -102,7 +102,15 @@ def serve_mode(args, lake, model):
         ColumnCatalog(args.catalog), model,
         EngineConfig(k=args.k, mode=args.mode,
                      lsh=LSHConfig(n_bands=args.lsh_bands),
-                     cost_fn=cost_fn, grid=grid), mesh=mesh)
+                     cost_fn=cost_fn, grid=grid,
+                     metrics=args.metrics_port is not None), mesh=mesh)
+    metrics_server = None
+    if args.metrics_port is not None:
+        from repro.service import MetricsServer
+        metrics_server = MetricsServer(engine.metrics,
+                                       port=args.metrics_port)
+        print(f"metrics: serving Prometheus exposition at "
+              f"{metrics_server.url}")
     if args.follow:
         # follower mode: the engine tails the manifest chain, picking up
         # versions published by any concurrent writer before each batch
@@ -136,6 +144,12 @@ def serve_mode(args, lake, model):
     if args.open_loop:
         closed_qps = len(responses) / max(dt, 1e-9)
         open_loop_mode(args, engine, qids, closed_qps)
+
+    if metrics_server is not None:
+        scrape = engine.metrics.collect()
+        admitted = scrape["requests_admitted_total"]["values"].get("", 0)
+        print(f"metrics: {int(admitted)} requests admitted; endpoint "
+              f"{metrics_server.url} stays up until exit")
 
     if args.follow:
         # demonstrate replication: a writer publishes a delta segment and
@@ -232,6 +246,11 @@ def main():
                     help="per-request deadline for the open-loop run")
     ap.add_argument("--open-loop-duration", type=float, default=2.0,
                     help="seconds of Poisson arrivals to offer")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="enable the observability plane (event bus + "
+                         "metrics registry) and serve the Prometheus text "
+                         "exposition on http://127.0.0.1:PORT/metrics "
+                         "(0 = ephemeral port, printed at startup)")
     args = ap.parse_args()
 
     t0 = time.perf_counter()

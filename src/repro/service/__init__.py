@@ -24,7 +24,15 @@ Layers (bottom-up):
   arrivals into bucket-snapped micro-batches, expires past-deadline
   requests, and sheds load via bounded-queue admission;
 * ``api``       — request/response dataclasses and the ``serve_discovery``
-  compatibility adapter (request-order draining over the scheduler).
+  compatibility adapter (request-order draining over the scheduler);
+* ``events``    — the observability spine: a bounded multi-consumer
+  :class:`EventBus` every serving component publishes typed events into
+  (non-blocking publish, drop-oldest overflow, per-consumer dropped
+  accounting) plus ``mint_trace_id`` for the per-request trace ids;
+* ``metrics``   — Prometheus-style :class:`MetricsRegistry`,
+  :class:`ServiceMetrics` (the standard counters/gauges/histograms fed
+  by an event-bus consumer + direct latency instrumentation), and
+  :class:`MetricsServer` (stdlib ``GET /metrics`` endpoint).
 """
 from repro.service.api import (ColumnMatch, DiscoveryRequest,
                                DiscoveryResponse, serve_discovery)
@@ -33,7 +41,10 @@ from repro.service.catalog import (CatalogReader, CatalogSnapshot,
                                    LeaseHeldError, WriterLease, add_lake)
 from repro.service.compactor import BackgroundCompactor
 from repro.service.engine import DiscoveryEngine, EngineConfig, measure_recall
+from repro.service.events import Event, EventBus, EventCursor, mint_trace_id
 from repro.service.lsh import LSHConfig, LSHIndex, band_keys
+from repro.service.metrics import (MetricsRegistry, MetricsServer,
+                                   ServiceMetrics, parse_exposition)
 from repro.service.scheduler import (DeadlineExpired, RequestScheduler,
                                      SchedulerConfig, SchedulerOverloadError)
 
@@ -43,7 +54,9 @@ __all__ = [
     "LeaseHeldError", "WriterLease", "add_lake",
     "BackgroundCompactor",
     "DiscoveryEngine", "EngineConfig", "measure_recall",
+    "Event", "EventBus", "EventCursor", "mint_trace_id",
     "LSHConfig", "LSHIndex", "band_keys",
+    "MetricsRegistry", "MetricsServer", "ServiceMetrics", "parse_exposition",
     "DeadlineExpired", "RequestScheduler", "SchedulerConfig",
     "SchedulerOverloadError",
 ]

@@ -34,6 +34,12 @@ class DiscoveryRequest:
     column_id: int | None = None
     values: Sequence[str] | None = None
     k: int | None = None            # trim below the engine's k if smaller
+    # caller-supplied trace id; None lets the scheduler (or the engine,
+    # for direct calls) mint one at submit.  Carried through every event
+    # and span this request generates.  NOTE: load drivers reuse request
+    # objects, so the scheduler's per-submission id lives on the queue
+    # item — this field only seeds it
+    trace_id: str | None = None
     # stashed (geometry, numeric, words, sigs) profile of an uploaded
     # column — written by DiscoveryEngine.profile_request (the scheduler
     # calls it at submit time, in the submitter's thread) so the formed
@@ -64,6 +70,14 @@ class DiscoveryResponse:
     queue_ms: float = 0.0           # submit -> batch formation (scheduler)
     compute_ms: float = 0.0         # engine resolve+plan+execute share
     latency_ms: float = 0.0         # queue_ms + compute_ms
+    trace_id: str | None = None     # minted at submit, threaded end-to-end
+    # per-phase spans [{"phase": str, "ms": float, ...}, ...] partitioning
+    # latency_ms exactly: the scheduler contributes profile/queue, the
+    # engine contributes pin/resolve/plan/candidates/execute/finalize
+    # (batch-level walls divided by batch size, same normalization as
+    # compute_ms; an execute span carries "compile_ms" when its bucket/
+    # grid paid first contact).  sum(ms) == latency_ms to float precision
+    trace: list = dataclasses.field(default_factory=list)
 
 
 def serve_discovery(engine, requests: Iterable[DiscoveryRequest],

@@ -351,10 +351,15 @@ class CatalogStore:
     head; reads that must be fresh go through :meth:`_refresh`.
     """
 
-    def __init__(self, root: str, *, n_perm: int = 128, minhash_seed: int = 0):
+    def __init__(self, root: str, *, n_perm: int = 128, minhash_seed: int = 0,
+                 events=None):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._mlock = threading.Lock()
+        # optional event sink (any object with .publish(type, **payload),
+        # e.g. service.events.EventBus): every successful CAS advance
+        # publishes manifest_advanced
+        self.events = events
         self.stats = {"cas_retries": 0, "publishes": 0, "compactions": 0}
         m = read_latest_manifest(root)
         if m is None:
@@ -411,6 +416,11 @@ class CatalogStore:
             os.unlink(tmp)
         self.stats["publishes"] += 1
         self._update_pointer(m)
+        if self.events is not None:
+            self.events.publish("manifest_advanced",
+                                version=int(m["version"]),
+                                n_segments=len(m.get("segments", ())),
+                                follower=False)
         return True
 
     def _update_pointer(self, m: dict) -> None:
@@ -792,8 +802,12 @@ class CatalogReader:
     """
 
     def __init__(self, root: str, *, max_cached_snapshots: int = 4,
-                 deep_poll_every: int = 128):
+                 deep_poll_every: int = 128, events=None):
         self.root = root
+        # optional event sink; DiscoveryEngine.follow() injects its bus
+        # here so follower-observed manifest_advanced events (follower=
+        # True) land on the serving engine's stream
+        self.events = events
         # stat the pointer BEFORE resolving the head: a publish landing in
         # between moves the pointer afterwards, so the next poll goes deep
         self._ptr_stat = self._stat_pointer()
@@ -858,6 +872,10 @@ class CatalogReader:
                 if len(self._manifests) <= 64:
                     break
                 del self._manifests[old]
+        if self.events is not None:       # publish outside the poll lock
+            for v_ in new:
+                self.events.publish("manifest_advanced", version=v_,
+                                    follower=True)
         return new
 
     def manifest(self, version: int | None = None) -> dict:

@@ -33,9 +33,14 @@ class BackgroundCompactor:
     head the running swap is about to replace would be wasted work).
     """
 
-    def __init__(self, store: CatalogStore, *, min_segments: int = 8):
+    def __init__(self, store: CatalogStore, *, min_segments: int = 8,
+                 events=None):
         self.store = store
         self.min_segments = int(min_segments)
+        # event sink: explicit, else the store's (so compaction lifecycle
+        # events land on the same stream as its manifest advances)
+        self.events = events if events is not None \
+            else getattr(store, "events", None)
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="freyja-compact")
         self._lock = threading.Lock()
@@ -53,8 +58,21 @@ class BackgroundCompactor:
             if self._inflight is not None and not self._inflight.done():
                 return self._inflight
             self._inflight = self._pool.submit(
-                self.store.compact, **compact_kw)
+                self._run_compaction, compact_kw)
             return self._inflight
+
+    def _run_compaction(self, compact_kw: dict):
+        """Worker-thread body: the store's compact() bracketed by
+        lifecycle events (compaction_published carries the new head
+        version; a no-op or lost-race compact publishes started only)."""
+        if self.events is not None:
+            self.events.publish("compaction_started",
+                                version=self.store.version)
+        out = self.store.compact(**compact_kw)
+        if self.events is not None:
+            self.events.publish("compaction_published",
+                                version=self.store.version)
+        return out
 
     def maybe_compact(self, min_segments: int | None = None,
                       **compact_kw) -> Future | None:

@@ -64,6 +64,7 @@ from repro.core import features as FT
 from repro.core.ingest import ingest_string_columns
 from repro.core.predictor import JoinQualityModel
 from repro.exec import MODES, Executor, Planner, PlannerConfig, pad_rows
+from repro.service import events as EV
 from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
 from repro.service.catalog import (CatalogSnapshot, CatalogStore,
                                    profile_and_sign)
@@ -92,6 +93,13 @@ class EngineConfig:
     # planner pick the factorization per micro-batch from the batch size,
     # lake size, and cost model (large batches shard the query axis too)
     grid: tuple | None = None
+    # observability: True stands up an EventBus (engine.events) + the
+    # standard ServiceMetrics registry (engine.metrics) — every serving
+    # component publishes into it and `discover --metrics-port` / a
+    # MetricsServer can export it.  False (default) keeps the hot path
+    # event-free; per-request phase traces are recorded either way
+    metrics: bool = False
+    event_capacity: int = 8192
 
 
 @dataclasses.dataclass(eq=False)
@@ -147,6 +155,15 @@ class DiscoveryEngine:
         self._live: set[_VersionState] = set()
         self._reader = None
         self._scheduler = None
+        # observability plane: events/metrics exist only when configured
+        # (publish sites guard on None so the disabled hot path pays one
+        # attribute read, nothing else)
+        self.events = None
+        self.metrics = None
+        if config.metrics:
+            from repro.service.metrics import ServiceMetrics
+            self.events = EV.EventBus(capacity=config.event_capacity)
+            self.metrics = ServiceMetrics(self.events)
         self.refresh(snapshot)
 
     @classmethod
@@ -178,6 +195,10 @@ class DiscoveryEngine:
         query batch first tails the manifest chain and refreshes onto the
         newest published version."""
         self._reader = reader
+        # adopt the follower into this engine's observability plane so
+        # its manifest_advanced events land on the same bus
+        if self.events is not None and getattr(reader, "events", None) is None:
+            reader.events = self.events
         self._maybe_follow()
 
     def attach_scheduler(self, scheduler) -> None:
@@ -203,7 +224,7 @@ class DiscoveryEngine:
         executor = Executor(
             z, w, self.model.gbdt.astuple(),
             table_ids=snapshot.table_ids, band_keys=lsh.keys,
-            mesh=self.mesh)
+            mesh=self.mesh, events=self.events)
         return _VersionState(snapshot=snapshot, z=z, w=w, lsh=lsh,
                              executor=executor)
 
@@ -211,7 +232,10 @@ class DiscoveryEngine:
         with self._slock:
             st = self._head
             st.refs += 1
-            return st
+        if self.events is not None:      # publish outside the lock
+            self.events.publish(EV.SNAPSHOT_PINNED, version=st.version,
+                                refs=st.refs)
+        return st
 
     def _release(self, st: _VersionState) -> None:
         with self._slock:
@@ -221,6 +245,8 @@ class DiscoveryEngine:
                 self._live.discard(st)
         if dead:
             st.executor.close()
+            if self.events is not None:
+                self.events.publish(EV.SNAPSHOT_RETIRED, version=st.version)
 
     # -- compat surface (head-state views) ----------------------------------
 
@@ -261,7 +287,8 @@ class DiscoveryEngine:
     def query(self, request: DiscoveryRequest) -> DiscoveryResponse:
         return self.query_batch([request])[0]
 
-    def query_batch(self, requests: list[DiscoveryRequest]
+    def query_batch(self, requests: list[DiscoveryRequest], *,
+                    trace_ids: list[str] | None = None
                     ) -> list[DiscoveryResponse]:
         """Serve one micro-batch against one pinned snapshot version.
 
@@ -270,21 +297,30 @@ class DiscoveryEngine:
         pins its own version end-to-end and the result cache/counters
         are lock-guarded.  ``compute_ms`` on each response is this
         call's per-query share; ``queue_ms`` stays 0 unless a scheduler
-        delivered the batch."""
+        delivered the batch.  ``trace_ids`` threads the scheduler's
+        per-submission ids through; direct callers get fresh ids (or the
+        request's own ``trace_id``) and a trace whose spans sum to
+        ``compute_ms``."""
         t0 = time.perf_counter()
+        if trace_ids is None:
+            trace_ids = [r.trace_id or EV.mint_trace_id() for r in requests]
         self._maybe_follow()
         st = self._pin()
         try:
-            return self._query_pinned(st, requests, t0)
+            return self._query_pinned(st, requests, t0, trace_ids)
         finally:
             self._release(st)
 
     def _query_pinned(self, st: _VersionState,
-                      requests: list[DiscoveryRequest],
-                      t0: float) -> list[DiscoveryResponse]:
+                      requests: list[DiscoveryRequest], t0: float,
+                      trace_ids: list[str]) -> list[DiscoveryResponse]:
         if st.snapshot.n_columns == 0:
-            return [DiscoveryResponse(name=r.name, matches=[], n_candidates=0)
-                    for r in requests]
+            return [DiscoveryResponse(name=r.name, matches=[],
+                                      n_candidates=0, trace_id=tid)
+                    for r, tid in zip(requests, trace_ids)]
+        # contiguous phase marks: (phase, t) pairs partition [t0, t_end]
+        # so the per-query span shares sum EXACTLY to compute_ms
+        marks: list[tuple[str, float]] = [("pin", time.perf_counter())]
         zq, wq, sigq, tq, qid = self._resolve(requests, st)
         keys = [self._cache_key(st, zq[i], wq[i], sigq[i], requests[i])
                 for i in range(len(requests))]
@@ -298,13 +334,17 @@ class DiscoveryEngine:
                 responses[i] = DiscoveryResponse(
                     name=requests[i].name,
                     matches=self._trim(hit, requests[i]),
-                    n_candidates=0, cached=True)
+                    n_candidates=0, cached=True, trace_id=trace_ids[i])
             else:
                 todo.append(i)
+        marks.append(("resolve", time.perf_counter()))
 
+        compile_ms = None
         if todo:
             scores, ids, ncand, plan = self._rank_rows(
-                zq[todo], wq[todo], sigq[todo], tq[todo], qid[todo], st)
+                zq[todo], wq[todo], sigq[todo], tq[todo], qid[todo], st,
+                marks=marks)
+            compile_ms = st.executor.last_compile_ms()
             # the plan's cost was modeled for the PADDED batch — normalize
             # by that count, not len(todo), or a lone miss looks batch_pad×
             # costlier than the same query served in a full batch
@@ -316,7 +356,7 @@ class DiscoveryEngine:
                 responses[i] = DiscoveryResponse(
                     name=requests[i].name,
                     matches=self._trim(matches, requests[i]),
-                    n_candidates=int(ncand[row]))
+                    n_candidates=int(ncand[row]), trace_id=trace_ids[i])
                 scored += int(ncand[row])
 
         with self._slock:                  # one locked fold per batch
@@ -327,10 +367,32 @@ class DiscoveryEngine:
             self._counters["scored_columns"] += scored
             self._counters["scan_columns"] += \
                 len(todo) * st.snapshot.n_columns
-        dt_ms = (time.perf_counter() - t0) * 1e3 / max(len(requests), 1)
+        if self.events is not None:
+            hits = [trace_ids[i] for i in range(len(requests))
+                    if i not in set(todo)]
+            if hits:
+                self.events.publish(EV.CACHE_HIT, n=len(hits),
+                                    trace_ids=hits, version=st.version)
+            if todo:
+                self.events.publish(EV.CACHE_MISS, n=len(todo),
+                                    trace_ids=[trace_ids[i] for i in todo],
+                                    version=st.version)
+        t_end = time.perf_counter()
+        n = max(len(requests), 1)
+        dt_ms = (t_end - t0) * 1e3 / n
+        spans = []
+        prev = t0
+        for phase, t in marks + [("finalize", t_end)]:
+            spans.append({"phase": phase, "ms": (t - prev) * 1e3 / n})
+            prev = t
+        if compile_ms is not None:
+            for s in spans:                # annotate, never add a span —
+                if s["phase"] == "execute":  # the sum must stay exact
+                    s["compile_ms"] = compile_ms
         for r in responses:
             r.compute_ms = dt_ms
             r.latency_ms = r.queue_ms + dt_ms
+            r.trace = r.trace + [dict(s) for s in spans]
         return responses
 
     # -- observability ------------------------------------------------------
@@ -343,10 +405,19 @@ class DiscoveryEngine:
         its modeled cost, and — when a :class:`RequestScheduler` is
         attached — the scheduler's counters (queue depth, formed-batch
         size histogram, bucket hits, expirations, sheds)."""
-        c = dict(self._counters)
+        # one consistent snapshot: counters, cache occupancy, plan
+        # histogram and version lifecycle are all read under the same
+        # locks that guard their writers (lock order _slock -> _cache_lock
+        # matches refresh()), so a stats() racing a batch fold or a cache
+        # admission can never see a torn view (e.g. hits+misses != queries)
         with self._slock:
+            plans = dict(self._plan_counts)
             version = self._head.version
+            n_columns = self._head.snapshot.n_columns
             live = len(self._live)
+            with self._cache_lock:     # admission counters live under it
+                c = dict(self._counters)
+                cache_size = len(self._cache)
         out = {
             "queries": c["queries"], "batches": c["batches"],
             "scored_columns": c["scored_columns"],
@@ -356,11 +427,11 @@ class DiscoveryEngine:
                 "admitted": c["cache_admitted"],
                 "rejected": c["cache_rejected"],
                 "evicted": c["cache_evicted"],
-                "size": len(self._cache),
+                "size": cache_size,
                 "capacity": self.config.cache_entries,
             },
-            "plans": dict(self._plan_counts),
-            "n_columns": self.n_columns,
+            "plans": plans,
+            "n_columns": n_columns,
             "snapshot": {"version": version, "refreshes": c["refreshes"],
                          "live_states": live},
         }
@@ -386,8 +457,12 @@ class DiscoveryEngine:
         return -(-max(int(n_queries), 1) // bp) * bp
 
     def _rank_rows(self, zq, wq, sigq, tq, qid,
-                   st: _VersionState | None = None):
-        """Plan + execute one padded micro-batch through ``repro.exec``."""
+                   st: _VersionState | None = None, marks=None):
+        """Plan + execute one padded micro-batch through ``repro.exec``.
+
+        ``marks`` (optional) collects contiguous ``(phase, t)`` trace
+        marks — plan / candidates / execute — for the caller's span
+        accounting."""
         st = st if st is not None else self._head
         (zq, wq, sigq, tq, qid), q = pad_rows(
             (zq, wq, sigq, tq, qid),
@@ -397,10 +472,16 @@ class DiscoveryEngine:
         plan = self.planner.plan(n_columns=st.snapshot.n_columns,
                                  n_queries=pad, mode=self.config.mode,
                                  mesh=self.mesh, grid=self.config.grid)
+        if marks is not None:
+            marks.append(("plan", time.perf_counter()))
         qkeys = (st.lsh.query_keys(sigq) if plan.candidates != "all"
                  else None)
+        if marks is not None:
+            marks.append(("candidates", time.perf_counter()))
         sc, ids, ncand = st.executor.execute(plan, zq, wq, tq, qid,
                                              qkeys=qkeys)
+        if marks is not None:
+            marks.append(("execute", time.perf_counter()))
         self.last_plan = plan
         with self._slock:
             self._plan_counts[plan.kind] = \

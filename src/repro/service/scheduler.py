@@ -57,6 +57,7 @@ import time
 from concurrent.futures import Future
 
 from repro.exec.plan import DEFAULT_BATCH_BUCKETS
+from repro.service import events as EV
 
 
 class DeadlineExpired(TimeoutError):
@@ -84,6 +85,10 @@ class _Item:
     future: Future
     t_submit: float
     deadline: float | None        # absolute perf_counter second, or None
+    # per-SUBMISSION identity: load drivers reuse request objects, so the
+    # trace id lives on the queue item, not the request
+    trace_id: str = ""
+    profile_ms: float = 0.0       # submit-time upload profiling wall
 
 
 class RequestScheduler:
@@ -130,6 +135,13 @@ class RequestScheduler:
                           "bucket_hits": 0, "bucket_misses": 0,
                           "max_queue_depth": 0}
         self._batch_hist: dict[int, int] = {}
+        # observability plane: adopt the engine's bus/metrics when it has
+        # one (EngineConfig.metrics=True); every publish site guards on
+        # None so the disabled path stays event-free
+        self.events = getattr(engine, "events", None)
+        self.metrics = getattr(engine, "metrics", None)
+        if self.metrics is not None:
+            self.metrics.bind_scheduler(self)
         engine.attach_scheduler(self)
         self._worker = threading.Thread(target=self._loop, daemon=True,
                                         name="freyja-scheduler")
@@ -156,20 +168,29 @@ class RequestScheduler:
                 raise RuntimeError("scheduler is closed")
             if len(self._heap) >= self.config.max_queue and not block:
                 self._counters["shed"] += 1
+                self._publish(EV.REQUEST_SHED, name=request.name,
+                              queued=len(self._heap))
                 raise SchedulerOverloadError(
                     f"request queue full ({self.config.max_queue} "
                     f"waiting); request {request.name!r} shed")
+        # per-submission trace id: minted HERE (or seeded by the caller
+        # via request.trace_id) and threaded through every event and span
+        # this submission generates
+        trace_id = getattr(request, "trace_id", None) or EV.mint_trace_id()
         # the clock starts BEFORE profiling: upload profiling is part of
         # the request's end-to-end latency and of its deadline budget
         now = time.perf_counter()
+        profile_ms = 0.0
         if getattr(request, "values", None) is not None:
             # profile the uploaded column HERE, in the submitter's
             # thread: the worker's formed-batch path never pays the
             # per-request device profiling
             self.engine.profile_request(request)
+            profile_ms = (time.perf_counter() - now) * 1e3
         item = _Item(request=request, future=Future(), t_submit=now,
                      deadline=(now + deadline_ms / 1e3
-                               if deadline_ms is not None else None))
+                               if deadline_ms is not None else None),
+                     trace_id=trace_id, profile_ms=profile_ms)
         with self._cv:
             while True:
                 if self._closed:
@@ -178,6 +199,9 @@ class RequestScheduler:
                     break
                 if not block:
                     self._counters["shed"] += 1
+                    self._publish(EV.REQUEST_SHED, name=request.name,
+                                  trace_id=trace_id,
+                                  queued=len(self._heap))
                     raise SchedulerOverloadError(
                         f"request queue full ({self.config.max_queue} "
                         f"waiting); request {request.name!r} shed")
@@ -188,7 +212,14 @@ class RequestScheduler:
             self._counters["max_queue_depth"] = max(
                 self._counters["max_queue_depth"], len(self._heap))
             self._cv.notify_all()
+        self._publish(EV.REQUEST_ADMITTED, trace_id=trace_id,
+                      name=request.name, priority=int(priority),
+                      deadline_ms=deadline_ms, profile_ms=profile_ms)
         return item.future
+
+    def _publish(self, type: str, **payload) -> None:
+        if self.events is not None:
+            self.events.publish(type, **payload)
 
     # -- worker -------------------------------------------------------------
 
@@ -235,6 +266,9 @@ class RequestScheduler:
         for it in dead:
             if it.future.set_running_or_notify_cancel():
                 self._counters["expired"] += 1
+                self._publish(EV.REQUEST_EXPIRED, trace_id=it.trace_id,
+                              name=it.request.name,
+                              waited_ms=(now - it.t_submit) * 1e3)
                 it.future.set_exception(DeadlineExpired(
                     f"request {it.request.name!r} expired after "
                     f"{(now - it.t_submit) * 1e3:.1f}ms in queue"))
@@ -252,9 +286,12 @@ class RequestScheduler:
             self._counters["bucket_hits"] += 1
         else:
             self._counters["bucket_misses"] += 1
+        self._publish(EV.BATCH_FORMED, n=n,
+                      trace_ids=[it.trace_id for it in items])
         try:
             responses = self.engine.query_batch(
-                [it.request for it in items])
+                [it.request for it in items],
+                trace_ids=[it.trace_id for it in items])
         except BaseException as e:
             self._counters["failed"] += n
             for it in items:
@@ -263,8 +300,23 @@ class RequestScheduler:
         for it, r in zip(items, responses):
             r.queue_ms = (t_start - it.t_submit) * 1e3
             r.latency_ms = r.queue_ms + r.compute_ms
+            # prepend the scheduler-side spans: profile (measured at
+            # submit) and queue (the remainder of queue_ms), so the full
+            # trace still sums EXACTLY to latency_ms
+            r.trace = ([{"phase": "profile", "ms": it.profile_ms},
+                        {"phase": "queue",
+                         "ms": r.queue_ms - it.profile_ms}]
+                       + r.trace)
             self._counters["completed"] += 1
+            if self.metrics is not None:
+                self.metrics.observe_response(r)
             it.future.set_result(r)
+        if self.metrics is not None:
+            # fold this batch's events into the registry now, so the
+            # metrics cursor tails the ring closely (zero-drop guarantee
+            # at any load the worker keeps up with) and a scrape between
+            # batches sees current counters
+            self.metrics.drain()
 
     # -- lifecycle / observability ------------------------------------------
 

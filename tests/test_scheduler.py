@@ -50,11 +50,11 @@ class _Gate:
         self.calls: list[list[str]] = []
         real = engine.query_batch
 
-        def wrapped(reqs):
+        def wrapped(reqs, **kw):
             self.calls.append([r.name for r in reqs])
             self.entered.set()
             assert self.release.wait(30)
-            return real(reqs)
+            return real(reqs, **kw)
 
         engine.query_batch = wrapped
 
