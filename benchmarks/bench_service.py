@@ -34,6 +34,17 @@ land under ``open_loop`` in the JSON.  ``--open-loop --smoke`` runs only
 the low-load point and **fails (exit 1) on any deadline expiration or
 shed** — the CI gate for the async runtime.
 
+``--scale-sweep`` measures the **tiered candidate path** on synthetic
+lakes with planted joinability tiers at 10^3 / 10^4 / 10^5 columns:
+bulk single-segment ingest, lazy (memmap) vs eager snapshot-open wall
+time and RSS delta, then sustained QPS + recall@10 + coarse survivor
+fraction for ``mode="tiered"`` against the single-tier full-lake probe
+(``mode="lsh"``).  Results land under ``scale_sweep`` in the JSON.
+``--scale-sweep --smoke`` runs one 2x10^4-column lake and **fails
+(exit 1)** when tiered recall@10 drops below 0.9, the coarse survivor
+fraction exceeds 20% of the lake, or the lazy open's peak RSS exceeds
+25% of the materialized profile matrices — the large-lake CI gate.
+
 The open-loop runs drive a **metrics-enabled** engine (event bus +
 Prometheus registry + live HTTP endpoint) and record the registry
 snapshot plus per-phase trace percentiles under ``observability``.
@@ -75,6 +86,15 @@ SWEEP_BLOCK_N = (128, 256, 512)            # fused_score corpus tile
 BATCH_SWEEP_SIZES = (8, 16, 32, 64, 128, 256)
 BATCH_SWEEP_TABLES = 90
 BATCH_SWEEP_REPEATS = 9
+
+# --scale-sweep: tiered-vs-hybrid candidate generation at growing lake
+# sizes (planted-joinability scaled lakes, bulk-ingested as one segment)
+SCALE_SIZES = (1_000, 10_000, 100_000)
+SCALE_SMOKE_SIZES = (20_000,)
+SCALE_N_QUERIES = 16
+SCALE_RECALL_GATE = 0.9           # tiered recall@10 vs the full scan
+SCALE_SURVIVOR_GATE = 0.2         # coarse survivor fraction of the lake
+SCALE_RSS_GATE = 0.25             # lazy-open RSS vs materialized matrices
 
 # --open-loop: Poisson-arrival serving through the scheduler
 OPEN_LOOP_TABLES = 90
@@ -279,6 +299,112 @@ def batch_sweep(n_tables: int = BATCH_SWEEP_TABLES,
             crossover = out["batches"][i]["batch"]
             break
     out["crossover_batch"] = crossover
+    return out
+
+
+def _rss_kb() -> int:
+    """Resident set size (KB) via /proc (no psutil in the image)."""
+    with open("/proc/self/statm") as f:
+        return int(f.read().split()[1]) * os.sysconf("SC_PAGE_SIZE") // 1024
+
+
+def scale_sweep(smoke: bool = False) -> dict:
+    """Tiered vs single-tier candidate generation on 10^3-10^5-column
+    lakes with planted joinability, plus lazy-vs-eager snapshot open cost.
+
+    Per lake size: bulk-ingest a :func:`generate_scaled_lake` lake as one
+    segment (``CatalogStore.add_batch``), measure the snapshot open wall
+    time and RSS delta for the lazy memmap path vs the eager copy, then
+    serve the same planted queries through ``mode="tiered"`` (coarse
+    super-band digest -> gathered fine probe) and ``mode="lsh"`` (the
+    single-tier full-lake probe baseline), recording sustained QPS,
+    recall@10 against the exact full scan, and the coarse survivor
+    fraction.  ``smoke`` runs one 2x10^4 lake and gates on tiered recall,
+    survivor fraction, and the lazy-open RSS ratio.
+    """
+    from repro.core import (ScaledLakeSpec, generate_scaled_lake,
+                            select_scaled_queries)
+    from repro.service import (CatalogReader, ColumnCatalog,
+                               DiscoveryEngine, DiscoveryRequest,
+                               EngineConfig, LSHConfig, measure_recall)
+
+    model = bench_model()
+    sizes = SCALE_SMOKE_SIZES if smoke else SCALE_SIZES
+    out = {"smoke": smoke, "n_queries": SCALE_N_QUERIES, "lakes": []}
+    for n in sizes:
+        lake = generate_scaled_lake(ScaledLakeSpec(n_columns=n, seed=5))
+        qids = select_scaled_queries(lake, SCALE_N_QUERIES, seed=2)
+        root = tempfile.mkdtemp(prefix=f"freyja_scale_{n}_")
+        try:
+            cat = ColumnCatalog(root, n_perm=128)
+            with Timer() as t_ingest:
+                cat.add_batch(lake.batch,
+                              [f"t{i}" for i in
+                               range(int(lake.table.max()) + 1)])
+            reader = CatalogReader(root)
+            r0 = _rss_kb()
+            with Timer() as t_lazy:
+                snap_lazy = reader.snapshot(lazy=True)
+            rss_lazy = max(_rss_kb() - r0, 0)
+            r0 = _rss_kb()
+            with Timer() as t_eager:
+                snapshot = reader.snapshot(lazy=False)
+            rss_eager = max(_rss_kb() - r0, 0)
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+        mat_kb = (snapshot.profiles.numeric.nbytes
+                  + snapshot.profiles.words.nbytes
+                  + snapshot.signatures.nbytes) // 1024
+        entry = {
+            "n_columns": int(snapshot.n_columns),
+            "ingest_s": t_ingest.s,
+            "open": {
+                "lazy_ms": t_lazy.s * 1e3, "eager_ms": t_eager.s * 1e3,
+                "lazy_rss_kb": rss_lazy, "eager_rss_kb": rss_eager,
+                "materialized_kb": int(mat_kb),
+                "lazy_was_lazy": bool(snap_lazy.lazy),
+                "lazy_rss_frac": rss_lazy / max(mat_kb, 1),
+            },
+            "modes": {},
+        }
+        reqs = [DiscoveryRequest(name=f"s{int(q)}", column_id=int(q))
+                for q in qids]
+        for mode in ("tiered", "lsh"):
+            # the tiered engine also carries the int8 sidecar (the
+            # memory-bound large-lake configuration); the exact fp32
+            # re-rank keeps its results fp32-identical, so recall@10
+            # still measures the candidate tiers, not the quantizer
+            engine = DiscoveryEngine(
+                snapshot, model,
+                EngineConfig(k=10, mode=mode,
+                             profile_dtype=("int8" if mode == "tiered"
+                                            else "fp32"),
+                             lsh=LSHConfig(n_bands=64, n_coarse_bands=16),
+                             candidate_frac=0.2, cache_entries=0,
+                             metrics=(mode == "tiered")))
+            engine.query_batch(reqs)           # compile warm-up
+            best = np.inf
+            for _ in range(3):
+                with Timer() as t:
+                    engine.query_batch(reqs)
+                best = min(best, t.s)
+            stats = {"qps": len(reqs) / max(best, 1e-9),
+                     "batch_ms_per_query": best / len(reqs) * 1e3,
+                     "plan": engine.stats()["last_plan"]["kind"],
+                     "profile_dtype": engine.config.profile_dtype}
+            rec = measure_recall(engine, qids, k=10)
+            stats["recall_at_10"] = rec["recall"]
+            stats["scored_fraction"] = rec["scored_fraction"]
+            if mode == "tiered":
+                sf = engine.metrics.collect()[
+                    "coarse_survivor_fraction"]["values"]
+                stats["survivor_fraction"] = (sf["sum"]
+                                              / max(sf["count"], 1))
+            entry["modes"][mode] = stats
+        entry["speedup_tiered_over_lsh"] = (
+            entry["modes"]["tiered"]["qps"]
+            / max(entry["modes"]["lsh"]["qps"], 1e-9))
+        out["lakes"].append(entry)
     return out
 
 
@@ -502,7 +628,8 @@ def open_loop_bench(record: dict | None = None, smoke: bool = False) -> dict:
 
 
 def run(smoke: bool = False, sweep_blocks: bool = False,
-        batch_sweep_flag: bool = False, open_loop_flag: bool = False):
+        batch_sweep_flag: bool = False, open_loop_flag: bool = False,
+        scale_sweep_flag: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
@@ -512,7 +639,10 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     # sweep (the recall gate has its own CI hook) and drive only the
     # low-load open-loop point
     open_loop_gate = smoke and open_loop_flag
-    table_sizes = (() if open_loop_gate else
+    # --scale-sweep --smoke is the large-lake CI gate: like the open-loop
+    # gate it skips the small-lake sweep (which has its own hook)
+    scale_gate = smoke and scale_sweep_flag
+    table_sizes = (() if (open_loop_gate or scale_gate) else
                    SMOKE_TABLE_SIZES if smoke else TABLE_SIZES)
     n_queries = SMOKE_N_QUERIES if smoke else N_QUERIES
     model = bench_model()
@@ -526,7 +656,7 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     try:
         with open(OUT_JSON) as f:
             record = json.load(f)
-        if not open_loop_gate:
+        if not (open_loop_gate or scale_gate):
             record["lakes"] = []
             record["smoke"] = smoke
     except (FileNotFoundError, json.JSONDecodeError):
@@ -668,6 +798,48 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
                     f"TRACE REGRESSION: max |sum(spans) - latency| = "
                     f"{err} ms (gate: <= 1.0, non-None)")
 
+    if scale_sweep_flag:
+        sc = scale_sweep(smoke=smoke)
+        record["scale_sweep" if not scale_gate else
+               "scale_sweep_smoke"] = sc
+        for e in sc["lakes"]:
+            ti, ls = e["modes"]["tiered"], e["modes"]["lsh"]
+            rows.append((
+                f"service/scale/C{e['n_columns']}", 0.0,
+                f"tiered {ti['qps']:.1f} QPS "
+                f"recall={ti['recall_at_10']:.3f} "
+                f"survivors={100*ti['survivor_fraction']:.1f}% vs lsh "
+                f"{ls['qps']:.1f} QPS recall={ls['recall_at_10']:.3f} -> "
+                f"{e['speedup_tiered_over_lsh']:.2f}x"))
+            op = e["open"]
+            rows.append((
+                f"service/scale/open/C{e['n_columns']}", 0.0,
+                f"lazy {op['lazy_ms']:.1f}ms +{op['lazy_rss_kb']}KB vs "
+                f"eager {op['eager_ms']:.1f}ms +{op['eager_rss_kb']}KB "
+                f"(matrices {op['materialized_kb']}KB, lazy rss "
+                f"{100*op['lazy_rss_frac']:.1f}%)"))
+            if smoke:
+                if ti["recall_at_10"] < SCALE_RECALL_GATE:
+                    gate_failures.append(
+                        f"SCALE RECALL REGRESSION: tiered recall@10 "
+                        f"{ti['recall_at_10']:.3f} < {SCALE_RECALL_GATE} "
+                        f"at C={e['n_columns']}")
+                if ti["survivor_fraction"] > SCALE_SURVIVOR_GATE:
+                    gate_failures.append(
+                        f"SCALE SURVIVOR REGRESSION: coarse survivor "
+                        f"fraction {ti['survivor_fraction']:.3f} > "
+                        f"{SCALE_SURVIVOR_GATE} at C={e['n_columns']}")
+                if (not op["lazy_was_lazy"]
+                        or op["lazy_rss_frac"] > SCALE_RSS_GATE):
+                    gate_failures.append(
+                        f"SCALE RSS REGRESSION: lazy open rss "
+                        f"{op['lazy_rss_kb']}KB = "
+                        f"{100*op['lazy_rss_frac']:.1f}% of materialized "
+                        f"{op['materialized_kb']}KB (gate "
+                        f"{100*SCALE_RSS_GATE:.0f}%, "
+                        f"lazy={op['lazy_was_lazy']}) "
+                        f"at C={e['n_columns']}")
+
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
     rows.append(("service/json", 0.0, os.path.abspath(OUT_JSON)))
@@ -710,8 +882,15 @@ if __name__ == "__main__":
                          "queue wait, shed rate) vs per-request dispatch; "
                          "with --smoke, gate on zero expirations/sheds at "
                          "low offered load")
+    ap.add_argument("--scale-sweep", action="store_true",
+                    help="tiered vs single-tier candidate generation on "
+                         "10^3-10^5-column planted lakes (QPS, recall@10, "
+                         "coarse survivor fraction, lazy-vs-eager snapshot "
+                         "open RSS); with --smoke, one 2e4-column lake "
+                         "gated on recall/survivors/RSS")
     args = ap.parse_args()
     for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks,
                  batch_sweep_flag=args.batch_sweep,
-                 open_loop_flag=args.open_loop):
+                 open_loop_flag=args.open_loop,
+                 scale_sweep_flag=args.scale_sweep):
         print(",".join(map(str, r)))

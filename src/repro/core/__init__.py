@@ -3,7 +3,9 @@ from repro.core import features
 from repro.core.discovery import DiscoveryIndex, rank, rank_sharded
 from repro.core.gbdt import GBDTConfig, GBDTParams, fit_gbdt
 from repro.core.ingest import ColumnBatch, ColumnSketch, ingest_string_columns
-from repro.core.lakegen import Lake, LakeSpec, generate_lake, select_queries
+from repro.core.lakegen import (Lake, LakeSpec, ScaledLake, ScaledLakeSpec,
+                                generate_lake, generate_scaled_lake,
+                                select_queries, select_scaled_queries)
 from repro.core.predictor import (JoinQualityModel, build_training_set,
                                   train_quality_model)
 from repro.core.profiles import LakeProfiles, profile_lake
@@ -14,8 +16,10 @@ from repro.core.quality import (cardinality_proportion, containment,
 __all__ = [
     "features", "DiscoveryIndex", "rank", "rank_sharded", "GBDTConfig",
     "GBDTParams", "fit_gbdt", "ColumnBatch", "ColumnSketch",
-    "ingest_string_columns", "Lake", "LakeSpec", "generate_lake",
-    "select_queries", "JoinQualityModel", "build_training_set",
+    "ingest_string_columns", "Lake", "LakeSpec", "ScaledLake",
+    "ScaledLakeSpec", "generate_lake", "generate_scaled_lake",
+    "select_queries", "select_scaled_queries",
+    "JoinQualityModel", "build_training_set",
     "train_quality_model", "LakeProfiles", "profile_lake",
     "cardinality_proportion", "containment", "continuous_quality",
     "discrete_quality", "multiset_jaccard", "set_jaccard",

@@ -28,7 +28,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.ingest import ColumnBatch, ColumnSketch, pack_columns
+from repro.core.ingest import ColumnBatch, ColumnSketch, fold32, pack_columns
 from repro.core.sketches import PackedSketches, pack_sketches
 
 
@@ -202,6 +202,157 @@ def generate_lake(spec: LakeSpec) -> Lake:
     return Lake(spec=spec, batch=batch, sketches=sketches, packed=packed,
                 domain=np.asarray(dom_l, np.int32), gran=np.asarray(gran_l, np.int32),
                 table=np.asarray(tab_l, np.int32), raw_bytes=raw_bytes)
+
+
+# ---------------------------------------------------------------------------
+# scaled lakes (10^5+ columns)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScaledLakeSpec:
+    """Generator spec for very large lakes with *planted* joinability.
+
+    The per-row sampling of :func:`generate_lake` is a faithful model but
+    tops out around 10^3-10^4 columns (a Python loop per column).  Scale
+    benchmarks need 10^5-10^6, so this spec drives a fully vectorized
+    generator that builds the :class:`~repro.core.ingest.ColumnBatch`
+    arrays directly: a ``joinable_frac`` of the columns is organized into
+    join groups of ``group_size`` members whose pairwise Jaccard is
+    controlled per group by cycling through ``jaccard_tiers`` (high =
+    easy candidates, low = the tail a coarse pass must not lose); the
+    rest are pairwise-disjoint noise.  Group members are striped across
+    tables so same-table exclusion never hides a planted partner.
+    """
+
+    n_columns: int = 100_000
+    row_budget: int = 256          # rows per column (small: profiles+sigs
+    group_size: int = 16           # only ever see the value *set*)
+    cols_per_table: int = 8
+    joinable_frac: float = 0.12
+    jaccard_tiers: tuple[float, ...] = (0.8, 0.4, 0.2)
+    vocab_size: int = 160          # shared value pool per join group
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ScaledLake:
+    """A generated scale lake: the packed batch plus planted ground truth
+    (``group``/``tier`` are -1 for noise columns)."""
+
+    spec: ScaledLakeSpec
+    batch: ColumnBatch
+    group: np.ndarray       # (C,) int32 join-group id, -1 = noise
+    tier: np.ndarray        # (C,) int32 index into spec.jaccard_tiers
+    table: np.ndarray       # (C,) int32
+
+    @property
+    def n_columns(self) -> int:
+        return self.batch.n_columns
+
+    def partners(self, q: int) -> np.ndarray:
+        """Planted join partners of column ``q`` (empty for noise)."""
+        g = int(self.group[q])
+        if g < 0:
+            return np.zeros((0,), np.int64)
+        out = np.flatnonzero(self.group == g)
+        return out[out != q]
+
+
+def generate_scaled_lake(spec: ScaledLakeSpec) -> ScaledLake:
+    """Vectorized 10^5+-column lake with controlled joinability tiers.
+
+    Each join group owns a ``vocab_size`` value pool; a member's support
+    is a uniform ``s``-subset with ``s/V = 2J/(1+J)``, which makes the
+    expected pairwise Jaccard of two members exactly ``J`` (the group's
+    tier).  Every support value appears in at least one row, so the
+    realized value *set* is the support itself and the tier holds for
+    the MinHash signatures, not just in expectation over sampling.
+    """
+    rng = np.random.default_rng(spec.seed)
+    c, r, v = spec.n_columns, spec.row_budget, spec.vocab_size
+    if r < v:
+        raise ValueError(f"row_budget ({r}) must be >= vocab_size ({v}) "
+                         f"so a support always fits its rows")
+    tiers = tuple(float(j) for j in spec.jaccard_tiers)
+    n_groups = (int(c * spec.joinable_frac) // max(spec.group_size, 2)
+                if tiers else 0)
+    n_planted = n_groups * spec.group_size
+
+    # planted columns occupy indices [0, n_planted) in a strided layout:
+    # column p belongs to group p % n_groups (member p // n_groups), so
+    # members sit n_groups columns apart — different tables whenever
+    # n_groups >= cols_per_table
+    group = np.full((c,), -1, np.int32)
+    tier = np.full((c,), -1, np.int32)
+    if n_groups:
+        p = np.arange(n_planted)
+        group[:n_planted] = (p % n_groups).astype(np.int32)
+        tier[:n_planted] = (group[:n_planted] % len(tiers)).astype(np.int32)
+
+    vids = np.empty((c, r), np.uint64)
+    for t, j in enumerate(tiers):
+        idx = np.flatnonzero(tier == t)
+        if idx.size == 0:
+            continue
+        q = 2.0 * j / (1.0 + j)            # support fraction for Jaccard j
+        s = int(np.clip(round(q * v), 2, v))
+        perms = rng.permuted(
+            np.broadcast_to(np.arange(v, dtype=np.uint64),
+                            (idx.size, v)).copy(), axis=1)
+        sup = perms[:, :s] + group[idx, None].astype(np.uint64) * v + 1
+        extra = np.take_along_axis(
+            sup, rng.integers(0, s, size=(idx.size, r - s)), axis=1)
+        vids[idx] = np.concatenate([sup, extra], axis=1)
+
+    # noise columns: private disjoint id ranges — no cross-column overlap
+    noise = np.flatnonzero(group < 0)
+    base = np.uint64(n_groups) * np.uint64(v) + np.uint64(1)
+    for i in range(0, noise.size, 8192):
+        blk = noise[i:i + 8192]
+        vids[blk] = (base + blk[:, None].astype(np.uint64) * np.uint64(r)
+                     + np.arange(r, dtype=np.uint64)[None, :])
+
+    h = splitmix64(vids)
+    values32 = fold32(h)
+    # per-OWNER string style (owner = join group for planted columns, the
+    # column itself for noise): every value belongs to exactly one owner,
+    # so the style is consistent wherever a value appears — group members
+    # share syntactic profiles while unrelated columns differ, which is
+    # what lets a profile-distance model separate them
+    owner = np.where(group >= 0, group.astype(np.int64),
+                     np.int64(n_groups) + np.arange(c))
+    st = splitmix64(owner.astype(np.uint64) + np.uint64(0x51AB))
+    base_len = (4 + st % np.uint64(13))[:, None]
+    spread = (2 + (st >> np.uint64(8)) % np.uint64(9))[:, None]
+    wmax = (1 + (st >> np.uint64(16)) % np.uint64(4))[:, None]
+    char_len = (base_len + h % spread).astype(np.float32)
+    word_cnt = (1 + h % wmax).astype(np.float32)
+    table = (np.arange(c) // spec.cols_per_table).astype(np.int32)
+    batch = ColumnBatch(values32=values32, char_len=char_len,
+                        word_cnt=word_cnt,
+                        n_rows=np.full((c,), r, np.int32),
+                        names=[f"c{i}" for i in range(c)],
+                        table_ids=table)
+    return ScaledLake(spec=spec, batch=batch, group=group, tier=tier,
+                      table=table)
+
+
+def select_scaled_queries(lake: ScaledLake, n_queries: int,
+                          seed: int = 1) -> np.ndarray:
+    """Planted columns to query, balanced across joinability tiers (every
+    query has ``group_size - 1`` genuine partners in the lake)."""
+    rng = np.random.default_rng(seed)
+    out: list[np.ndarray] = []
+    tiers = np.unique(lake.tier[lake.tier >= 0])
+    if tiers.size == 0:
+        raise ValueError("lake has no planted join groups to query")
+    per = -(-n_queries // tiers.size)
+    for t in tiers:
+        idx = np.flatnonzero(lake.tier == t)
+        out.append(rng.choice(idx, size=min(per, idx.size), replace=False))
+    sel = np.concatenate(out)
+    rng.shuffle(sel)
+    return np.sort(sel[:n_queries]).astype(np.int32)
 
 
 def select_queries(lake: Lake, n_queries: int, min_semantic: int = 3,

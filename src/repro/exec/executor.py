@@ -24,6 +24,12 @@ The returned contract is uniform: ``(scores (Q, k), global ids (Q, k),
 n_scored (Q,))`` as numpy, padded with -inf / -1 when fewer than k columns
 are rankable, with ``n_scored`` the *global* number of columns the GBDT
 actually scored per query (psum-ed over the data axes on a mesh).
+
+With a quantized ``profile_dtype`` (int8/fp16 sidecar + per-feature
+dequant scale) the scan streams the small sidecar, over-fetches
+``RESCORE_MULT × k`` candidates, and an exact fp32 re-rank of that tiny
+gathered set restores the fp32 top-k ordering — returned scores are
+always fp32-exact regardless of the resident dtype.
 """
 from __future__ import annotations
 
@@ -39,10 +45,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.exec import stages
 from repro.exec.plan import QueryPlan
 from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
+from repro.kernels.profile_distance import dequantize, quantize_profiles
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# quantized scans over-fetch this multiple of k, then an exact fp32
+# re-rank of the over-fetched set restores the fp32 top-k ordering —
+# GBDT scores are threshold-discontinuous, so even fp16's ~5e-4 profile
+# error flips near-boundary ranks that no finer quantizer would fix
+RESCORE_MULT = 4
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _rescore_exact(zq, wq, zg, wg, gbdt_tuple, sc_scan, ids, k: int):
+    """Re-rank an over-fetched (Q, R) candidate set with exact fp32
+    profiles; invalid scan slots (non-finite score) stay excluded."""
+    s = stages.score_columns(zq, wq, zg, wg, gbdt_tuple)
+    s = jnp.where(jnp.isfinite(sc_scan), s, -jnp.inf)
+    sc, pos = jax.lax.top_k(s, min(k, s.shape[1]))
+    return sc, jnp.where(jnp.isfinite(sc),
+                         jnp.take_along_axis(ids, pos, axis=1), -1)
 
 
 def pad_rows(arrays, multiple: int):
@@ -74,9 +99,10 @@ def pad_topk(scores: np.ndarray, ids: np.ndarray, k: int):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("k", "block"))
-def _local_all(zq, wq, tq, qid, z, w, cids, tids, gbdt_tuple,
+def _local_all(zq, wq, tq, qid, z, zscale, w, cids, tids, gbdt_tuple,
                k: int, block: int):
-    s = stages.score_streamed(zq, wq, z, w, gbdt_tuple, block=block)
+    s = stages.score_streamed(zq, wq, dequantize(z, zscale), w, gbdt_tuple,
+                              block=block)
     s = jnp.where(stages.exclusion_mask(cids, tids, tq, qid), -jnp.inf, s)
     sc, ids = stages.merge_topk(s, cids, k)
     n = jnp.full((zq.shape[0],), z.shape[0], jnp.int32)
@@ -84,16 +110,48 @@ def _local_all(zq, wq, tq, qid, z, w, cids, tids, gbdt_tuple,
 
 
 @partial(jax.jit, static_argnames=("kind", "k", "budget", "interpret"))
-def _local_pruned(zq, wq, qkeys, tq, qid, z, w, ckeys, cids, tids,
+def _local_pruned(zq, wq, qkeys, tq, qid, z, zscale, w, ckeys, cids, tids,
                   gbdt_tuple, kind: str, k: int, budget: int,
                   interpret: bool):
-    prio = stages.candidate_priorities(kind, zq, qkeys, z, ckeys, cids,
+    zf = dequantize(z, zscale)
+    prio = stages.candidate_priorities(kind, zq, qkeys, zf, ckeys, cids,
                                        tids, tq, qid, interpret=interpret)
     pos, valid = stages.gather_candidates(prio, budget)
-    s = stages.score_columns(zq, wq, z[pos], w[pos], gbdt_tuple)
+    s = stages.score_columns(zq, wq, zf[pos], w[pos], gbdt_tuple)
     s = jnp.where(valid, s, -jnp.inf)
     sc, ids = stages.merge_topk(s, cids[pos], k)
     return sc, ids, valid.sum(axis=1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k", "budget", "survivor_budget",
+                                   "block_c", "interpret"))
+def _local_tiered(zq, wq, qkeys, qcoarse, tq, qid, z, zscale, w, ckeys,
+                  coarse, cids, tids, gbdt_tuple, k: int, budget: int,
+                  survivor_budget: int, block_c: int, interpret: bool):
+    """Two-tier candidate pipeline: coarse digest scan over the full lake,
+    then fine probe + proxy + GBDT only over the gathered survivors.  The
+    full-lake pass touches the (C, S) digest plus one proxy matmul over
+    the resident (quantized) sidecar, which fills budget slots the digest
+    left empty with profile-nearest columns — without the fill, the exact
+    top-k's profile-similar-but-non-overlapping columns are unreachable
+    and large-lake recall trails the single-tier hybrid probe."""
+    zf = dequantize(z, zscale)
+    # -||zq - z||² up to a per-query constant, fused over the sidecar
+    fill = 2.0 * zq @ zf.T - jnp.sum(zf * zf, axis=1)[None]
+    pos, valid, n_hits, n_surv = stages.tiered_survivors(
+        qcoarse, coarse, cids, tids, tq, qid,
+        survivor_budget=survivor_budget, block_c=block_c, proxy=fill,
+        interpret=interpret)
+    zg = dequantize(z[pos], zscale)                      # (Q, M', F_NUM)
+    prio = stages.tiered_priorities(zq, qkeys, zg, ckeys[pos], valid,
+                                    interpret=interpret)
+    pos2, valid2 = stages.gather_candidates(prio, budget)
+    gpos = jnp.take_along_axis(pos, pos2, axis=1)        # (Q, M) global cols
+    s = stages.score_columns(zq, wq, dequantize(z[gpos], zscale), w[gpos],
+                             gbdt_tuple)
+    s = jnp.where(valid2, s, -jnp.inf)
+    sc, ids = stages.merge_topk(s, cids[gpos], k)
+    return sc, ids, valid2.sum(axis=1).astype(jnp.int32), n_hits, n_surv
 
 
 # ---------------------------------------------------------------------------
@@ -105,26 +163,52 @@ class Executor:
 
     def __init__(self, z: np.ndarray, w: np.ndarray, gbdt_tuple,
                  *, table_ids: np.ndarray | None = None,
-                 band_keys: np.ndarray | None = None, mesh=None,
-                 score_block: int = 4096, events=None):
+                 band_keys: np.ndarray | None = None,
+                 coarse_keys: np.ndarray | None = None,
+                 profile_dtype: str = "fp32", z_scale=None,
+                 survivor_block: int = 32,
+                 mesh=None, score_block: int = 4096, events=None):
         self.n_columns = int(z.shape[0])
-        self._z_np = np.asarray(z, np.float32)
+        self.profile_dtype = str(profile_dtype)
+        self.survivor_block = int(survivor_block)
+        # the resident profile matrix: quantized sidecar + per-feature
+        # dequant scale ("fp32" keeps the identity scale, so every
+        # pipeline treats the three dtypes uniformly).  A caller that
+        # already quantized (e.g. the engine streaming a memmapped
+        # snapshot in chunks) passes the sidecar + its scale directly.
+        if z_scale is not None:
+            self._z_np = np.asarray(z)
+            self._zscale_np = np.asarray(z_scale, np.float32)
+            self._zf_np = None        # pre-quantized caller: no fp32 source
+        else:
+            self._z_np, self._zscale_np = quantize_profiles(
+                z, self.profile_dtype)
+            # keep the fp32 source (host-side only) when the resident
+            # matrix is quantized: quantized scans over-fetch and the
+            # exact re-rank gathers these few rows back
+            self._zf_np = (None if self.profile_dtype == "fp32"
+                           else np.asarray(z, np.float32))
         self._w_np = np.asarray(w)
         self._tids_np = (np.asarray(table_ids, np.int32)
                          if table_ids is not None
                          else np.zeros((self.n_columns,), np.int32))
         self._ckeys_np = (np.asarray(band_keys, np.uint32)
                           if band_keys is not None else None)
+        self._coarse_np = (np.asarray(coarse_keys, np.uint32)
+                           if coarse_keys is not None else None)
         self._gbdt = tuple(map(jnp.asarray, gbdt_tuple))
         self.mesh = mesh
         self.score_block = int(score_block)
         # device-resident copies for the local pipelines
         self._z = jnp.asarray(self._z_np)
+        self._zscale = jnp.asarray(self._zscale_np)
         self._w = jnp.asarray(self._w_np)
         self._cids = jnp.arange(self.n_columns, dtype=jnp.int32)
         self._tids = jnp.asarray(self._tids_np)
         self._ckeys = (jnp.asarray(self._ckeys_np)
                        if self._ckeys_np is not None else None)
+        self._coarse = (jnp.asarray(self._coarse_np)
+                        if self._coarse_np is not None else None)
         # sharded state, built lazily per placement (shard_axes / grid)
         self._placed: dict[tuple, dict] = {}
         self._pipelines: dict[tuple, object] = {}
@@ -156,6 +240,7 @@ class Executor:
         self._pipelines.clear()
         self._grid_meshes.clear()
         self._z = self._w = self._cids = self._tids = self._ckeys = None
+        self._zscale = self._coarse = None
 
     @property
     def closed(self) -> bool:
@@ -199,8 +284,14 @@ class Executor:
         mesh, axes, qaxes = self._plan_mesh_axes(plan)
         key = (plan.grid if qaxes else (), axes)
         if key not in self._placed:
+            # sharded pipelines run on f32 shards: a quantized sidecar is
+            # dequantized once at placement (the per-device shard is what
+            # stays resident, so the transient full matrix is host-only)
+            z = self._z_np
+            if z.dtype != np.float32:
+                z = np.asarray(z, np.float32) * self._zscale_np
             self._placed[key] = place_sharded_corpus(
-                mesh, axes, self._z_np, self._w_np,
+                mesh, axes, z, self._w_np,
                 table_ids=self._tids_np, band_keys=self._ckeys_np)
         return self._placed[key]
 
@@ -220,13 +311,15 @@ class Executor:
 
     # -- entry point --------------------------------------------------------
 
-    def execute(self, plan: QueryPlan, zq, wq, tq, qid, qkeys=None):
+    def execute(self, plan: QueryPlan, zq, wq, tq, qid, qkeys=None,
+                qcoarse=None):
         """Run ``plan`` for a query batch.
 
         ``zq`` (Q, F_NUM) float32, ``wq`` (Q, F_WORDS) uint32; ``tq`` (Q,)
         table ids to exclude (-1 disables); ``qid`` (Q,) global column id
         of resident queries (-1 for external); ``qkeys`` (Q, B) LSH band
-        keys, required by pruned plans. Returns numpy
+        keys, required by pruned plans; ``qcoarse`` (Q, S) super-band
+        digest keys, required by tiered plans. Returns numpy
         ``(scores (Q, k), ids (Q, k), n_scored (Q,))``.
         """
         if self._closed:
@@ -243,6 +336,14 @@ class Executor:
                                  f"but this executor has none")
             if qkeys is None:
                 raise ValueError(f"plan {plan.kind!r} needs query band keys")
+        if plan.candidates == "tiered":
+            if plan.sharded:
+                raise ValueError("tiered plans are local-only")
+            if self._coarse_np is None:
+                raise ValueError("plan 'tiered' needs a coarse super-band "
+                                 "digest, but this executor has none")
+            if qcoarse is None:
+                raise ValueError("plan 'tiered' needs coarse query keys")
         if plan.sharded and self.mesh is None:
             raise ValueError(f"plan {plan.kind!r} needs a mesh")
         # first contact with this (kind, k, budget, grid, batch shape)
@@ -257,10 +358,18 @@ class Executor:
             self._events.publish("compile_begin", plan=plan.kind,
                                  grid=list(plan.grid), n_queries=q, k=plan.k)
         t0 = time.perf_counter()
+        self._tls.tier_stats = None
         if plan.sharded:
             sc, ids, n = self._execute_sharded(plan, zq, wq, tq, qid, qkeys)
         else:
-            sc, ids, n = self._execute_local(plan, zq, wq, tq, qid, qkeys)
+            sc, ids, n = self._execute_local(plan, zq, wq, tq, qid, qkeys,
+                                             qcoarse)
+        if self._zf_np is not None:
+            # exact fp32 re-rank of the quantized scan's top set (local
+            # scans over-fetched RESCORE_MULT × k above; sharded scans
+            # re-rank their returned k — ordering repaired, no recovery
+            # of ids the quantized scan dropped)
+            sc, ids = self._rescore(zq, wq, sc, ids, plan.k)
         sc, ids = pad_topk(np.asarray(sc), np.asarray(ids), plan.k)
         n = np.asarray(n)               # block until ready before timing
         if first:
@@ -270,6 +379,20 @@ class Executor:
                 self._events.publish("compile_end", plan=plan.kind,
                                      grid=list(plan.grid), n_queries=q,
                                      k=plan.k, ms=wall_ms)
+        tier = getattr(self._tls, "tier_stats", None)
+        if tier is not None and self._events is not None:
+            n_hits, n_surv = tier
+            frac = float(n_surv.mean()) / max(self.n_columns, 1)
+            self._events.publish(
+                "coarse_pass", n_queries=q, n_columns=self.n_columns,
+                survivor_budget=plan.survivor_budget,
+                hits_mean=float(n_hits.mean()),
+                survivors_mean=float(n_surv.mean()),
+                survivors_max=int(n_surv.max()), survivor_fraction=frac)
+            self._events.publish(
+                "fine_probe", n_queries=q, budget=plan.budget,
+                survivor_budget=plan.survivor_budget,
+                scored_mean=float(n.mean()))
         return sc, ids, n
 
     def last_compile_ms(self) -> float | None:
@@ -279,19 +402,44 @@ class Executor:
 
     # -- internals ----------------------------------------------------------
 
-    def _execute_local(self, plan, zq, wq, tq, qid, qkeys):
+    def _rescore(self, zq, wq, sc, ids, k: int):
+        """Gather the scan's candidate rows from the host fp32 source and
+        re-rank them exactly.  The gather is (Q, R, F) with R a small
+        multiple of k, so the cost is independent of the lake size."""
+        ids_np = np.asarray(ids)
+        safe = np.clip(ids_np, 0, self.n_columns - 1)
+        return _rescore_exact(
+            jnp.asarray(zq, jnp.float32), jnp.asarray(wq),
+            jnp.asarray(self._zf_np[safe]), jnp.asarray(self._w_np[safe]),
+            self._gbdt, jnp.asarray(np.asarray(sc)),
+            jnp.asarray(ids_np), k)
+
+    def _execute_local(self, plan, zq, wq, tq, qid, qkeys, qcoarse=None):
         zq, wq = jnp.asarray(zq, jnp.float32), jnp.asarray(wq)
         tq = jnp.asarray(tq, jnp.int32)
         qid = jnp.asarray(qid, jnp.int32)
+        # quantized scans hand an over-fetched top set to the exact fp32
+        # re-rank in execute(); fp32 scans keep k as-is
+        k = (plan.k if self._zf_np is None
+             else max(plan.k, RESCORE_MULT * plan.k))
         if plan.candidates == "all":
-            return _local_all(zq, wq, tq, qid, self._z, self._w, self._cids,
-                              self._tids, self._gbdt, plan.k,
-                              self.score_block)
+            return _local_all(zq, wq, tq, qid, self._z, self._zscale,
+                              self._w, self._cids, self._tids, self._gbdt,
+                              min(k, self.n_columns), self.score_block)
         budget = min(plan.budget, self.n_columns)
+        if plan.candidates == "tiered":
+            surv = min(max(plan.survivor_budget, budget), self.n_columns)
+            sc, ids, n, n_hits, n_surv = _local_tiered(
+                zq, wq, jnp.asarray(qkeys), jnp.asarray(qcoarse), tq, qid,
+                self._z, self._zscale, self._w, self._ckeys, self._coarse,
+                self._cids, self._tids, self._gbdt, min(k, budget, surv),
+                min(budget, surv), surv, self.survivor_block, _interpret())
+            self._tls.tier_stats = (np.asarray(n_hits), np.asarray(n_surv))
+            return sc, ids, n
         return _local_pruned(zq, wq, jnp.asarray(qkeys), tq, qid, self._z,
-                             self._w, self._ckeys, self._cids, self._tids,
-                             self._gbdt, plan.candidates, plan.k,
-                             budget, _interpret())
+                             self._zscale, self._w, self._ckeys, self._cids,
+                             self._tids, self._gbdt, plan.candidates,
+                             min(k, budget), budget, _interpret())
 
     def _execute_sharded(self, plan, zq, wq, tq, qid, qkeys):
         corpus = self._corpus(plan)

@@ -5,7 +5,9 @@ A :class:`QueryPlan` names one choice per pipeline stage:
 =============  =========================  ==============================
 stage          choices                    picked by
 =============  =========================  ==============================
-candidates     all | lsh | hybrid         mode, or cost model on "auto"
+candidates     all | lsh | hybrid |       mode, or cost model on "auto"
+               tiered (coarse digest →
+               survivor gather → fine)
 score          local | (q × d) grid       mesh availability + lake size
 merge          top_k | 2-phase gather     follows the score placement
 =============  =========================  ==============================
@@ -53,7 +55,7 @@ from typing import Callable
 
 from repro.exec.stages import CANDIDATE_KINDS
 
-MODES = ("auto", "lsh", "full", "sharded")
+MODES = ("auto", "lsh", "full", "sharded", "tiered")
 
 # Padded-batch bucket ladder the continuous-batching runtime snaps formed
 # micro-batches to.  Powers of two so every (q_shards, d_shards) mesh
@@ -69,13 +71,14 @@ DEFAULT_BATCH_BUCKETS = (8, 16, 32, 64, 128, 256)
 class QueryPlan:
     """One fully-resolved execution plan for a query micro-batch."""
 
-    candidates: str                 # "all" | "lsh" | "hybrid"
+    candidates: str                 # "all" | "lsh" | "hybrid" | "tiered"
     sharded: bool                   # score per grid tile, 2-phase merge
     budget: int                     # GLOBAL candidate budget (n for "all")
     k: int
     n_shards: int = 1               # data-axis shards (= grid[1])
     grid: tuple = (1, 1)            # (q_shards, d_shards) device grid
     shard_axes: tuple = ("data",)
+    survivor_budget: int = 0        # tiered only: coarse-pass gather width C'
     cost: dict = dataclasses.field(default_factory=dict, compare=False)
 
     def __post_init__(self):
@@ -127,6 +130,18 @@ class PlannerConfig:
     # batch up to the smallest bucket that fits so compiled executables
     # and per-bucket grid choices are reused across batch sizes
     batch_buckets: tuple = ()
+    # ---- tiered candidate stage knobs ----
+    n_coarse_bands: int = 16        # super-band digest width S
+    survivor_block: int = 32        # coarse survivor-block granularity
+    survivor_frac: float = 0.05     # survivor budget as a fraction of the lake
+    min_survivors: int = 512        # survivor budget floor
+    # the survivor width is also the GBDT scoring width (tiered plans cap
+    # budget at the survivor count), and scoring dominates the per-batch
+    # wall once the probes are one fused compare each — measured at 10^5
+    # columns, widening 2048 -> 4096 costs ~1.6x QPS for zero recall gain
+    # (the digest+proxy fill's recall plateaus by ~2k: 0.912 at both),
+    # so the cap is a scoring-width guard, not a recall knob
+    max_survivors: int = 2048       # survivor budget cap
 
 
 class Planner:
@@ -154,6 +169,20 @@ class Planner:
         cfg = self.config
         want = max(cfg.k, int(n_columns * cfg.candidate_frac))
         return max(1, min(want, cfg.max_candidates, n_columns))
+
+    def survivor_budget(self, n_columns: int, budget: int) -> int:
+        """Coarse-pass gather width C' for a tiered plan: a small fraction
+        of the lake (coarse survivors track the truly-similar population,
+        not the lake size), floored by ``min_survivors`` so tiny lakes keep
+        slack, capped by ``max_survivors`` (the measured point where the
+        per-query gathered fine probe stops being cheaper than the shared
+        full-lake probe), never beyond the lake, and rounded up to the
+        survivor block so gathers stay aligned."""
+        cfg = self.config
+        want = max(int(n_columns * cfg.survivor_frac), cfg.min_survivors)
+        want = min(want, cfg.max_survivors, max(n_columns, 1))
+        blk = max(int(cfg.survivor_block), 1)
+        return min(max(n_columns, 1), -(-want // blk) * blk)
 
     def snap_batch(self, n_queries: int) -> int:
         """Padded batch size for ``n_queries``: the smallest configured
@@ -184,11 +213,20 @@ class Planner:
         return n
 
     def _cost(self, candidates: str, n_queries: int, n_columns: int,
-              budget: int, n_shards: int, q_shards: int = 1) -> dict:
+              budget: int, n_shards: int, q_shards: int = 1,
+              survivor_budget: int = 0) -> dict:
+        kw = {}
+        if candidates == "tiered":
+            # only the tiered stage carries the extra geometry, and only
+            # then do we pass it — injected cost_fns predating the tier
+            # keep their old signature for every other kind
+            kw = dict(survivor_budget=survivor_budget or
+                      self.survivor_budget(n_columns, budget),
+                      n_coarse_bands=self.config.n_coarse_bands)
         return self.cost_fn(n_queries, n_columns, budget=budget,
                             candidates=candidates, k=self.config.k,
                             n_bands=self.config.n_bands, n_shards=n_shards,
-                            q_shards=q_shards)
+                            q_shards=q_shards, **kw)
 
     # -- grid placement -----------------------------------------------------
 
@@ -270,6 +308,10 @@ class Planner:
             cand, sharded = "all", True
         elif mode == "full":
             cand, sharded = "all", False
+        elif mode == "tiered":
+            # coarse digest -> survivor gather -> fine probe; local only
+            # (the tier exists to keep one host sublinear in the lake)
+            cand, sharded = "tiered", False
         elif mode == "lsh":
             # an explicit mesh is operator intent: shard whenever one exists
             cand, sharded = "hybrid", n_dev > 1
@@ -301,16 +343,35 @@ class Planner:
             # the analytic default only has flops
             pick = lambda c: c.get("total_cost", c["total_flops"])
             cand = "hybrid" if pick(c_pruned) < pick(c_full) else "all"
+            if not sharded and cfg.n_coarse_bands > 0:
+                # the tiered stage is a local-plan contender (only when a
+                # coarse digest exists to scan): coarse digest scan +
+                # skinny fine pass beats the full-lake hybrid probe
+                # exactly when the lake dwarfs the survivor budget; it must
+                # win strictly, so existing all/hybrid picks are unchanged
+                c_tier = self._cost("tiered", n_queries, n_columns,
+                                    budget, 1, 1)
+                if pick(c_tier) < min(pick(c_pruned), pick(c_full)):
+                    cand = "tiered"
 
         if cand == "all":
             budget = n_columns
+        surv = (self.survivor_budget(n_columns, budget)
+                if cand == "tiered" else 0)
+        if cand == "tiered":
+            # the fine tier can't score more columns than the coarse pass
+            # gathered — capping the budget here keeps the scorer's gather
+            # (and its compiled shape) as skinny as the survivor set
+            budget = min(budget, surv)
         if sharded:
             g = self._resolve_grid(grid, n_dev, n_queries, n_columns,
                                    cand, budget)
         else:
             g = (1, 1)
         cost = self._cost(cand, n_queries, max(n_columns, 1),
-                          max(budget, 1), max(g[1], 1), g[0])
+                          max(budget, 1), max(g[1], 1), g[0],
+                          survivor_budget=surv)
         return QueryPlan(candidates=cand, sharded=sharded, budget=budget,
                          k=cfg.k, n_shards=g[1], grid=g,
-                         shard_axes=tuple(cfg.shard_axes), cost=cost)
+                         shard_axes=tuple(cfg.shard_axes),
+                         survivor_budget=surv, cost=cost)

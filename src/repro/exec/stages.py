@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.predictor import distance_features_ref, gbdt_predict_ref
-from repro.kernels.lsh_probe import lsh_probe_tile
+from repro.kernels.lsh_probe import lsh_probe_gathered_tile, lsh_probe_tile
 
-CANDIDATE_KINDS = ("all", "lsh", "hybrid")
+CANDIDATE_KINDS = ("all", "lsh", "hybrid", "tiered")
 
 # LSH hits outrank every profile-proximity score: the proxy is squashed
 # into (-1, 1), so any offset > 2 keeps the two bands disjoint.
@@ -74,6 +74,69 @@ def candidate_priorities(kind: str, zq, qkeys, z, ckeys, cids, tids, tq, qid,
         raise ValueError(f"unknown candidate kind {kind!r}; "
                          f"want one of {CANDIDATE_KINDS}")
     return jnp.where(excl, -jnp.inf, prio)
+
+
+def tiered_survivors(qcoarse, coarse, cids, tids, tq, qid, *,
+                     survivor_budget: int, block_c: int = 32,
+                     proxy=None, interpret: bool = True):
+    """Coarse pass of the tiered candidate stage: pick survivor blocks.
+
+    Probes the small (C, S) super-band digest with the (Q, S) coarse query
+    keys, expands column hits to *blocks* of ``block_c`` contiguous
+    columns (so the downstream gather reads aligned runs, not scattered
+    singletons), and keeps up to ``survivor_budget`` columns per query —
+    direct coarse hits ranked above their block-mates.
+
+    ``proxy`` (Q, C), when given, fills survivor-budget slots the digest
+    left empty with the proxy-nearest columns (ranked strictly below every
+    digest hit, mirroring the ``hybrid`` construction).  The digest only
+    sees *value overlap*; the exact GBDT top-k also contains columns that
+    are merely profile-similar, and at 10^5 columns the digest's hit set
+    is far smaller than the budget — without the fill those slots are
+    wasted and tiered recall trails the single-tier hybrid probe.
+
+    Returns ``(pos, valid, n_hits, n_survivors)``: gather positions
+    (Q, M') into the local corpus, their validity mask, and per-query
+    counts of direct coarse hits and digest-eligible survivor columns (the
+    numbers the ``coarse_pass`` event reports — proxy fill does not count
+    as a digest survivor).
+    """
+    c = coarse.shape[0]
+    hit = lsh_probe_tile(qcoarse, coarse, interpret=interpret)   # (Q, C)
+    pad_c = (-c) % block_c
+    hp = jnp.pad(hit, ((0, 0), (0, pad_c)))
+    nb = hp.shape[1] // block_c
+    block_hit = jnp.any(hp.reshape(hit.shape[0], nb, block_c) > 0, axis=-1)
+    block_hit = jnp.repeat(block_hit, block_c, axis=1)[:, :c]     # (Q, C)
+    excl = exclusion_mask(cids, tids, tq, qid)
+    if proxy is None:
+        prio = jnp.where(block_hit, 1.0, -jnp.inf) + hit.astype(jnp.float32)
+    else:
+        # squashed proxy lives in (-1, 1); the boost keeps every digest
+        # hit (and its block-mates) strictly above every proxy-only fill
+        prio = (jnp.where(block_hit, _LSH_PRIORITY_BOOST, 0.0)
+                + hit.astype(jnp.float32)
+                + proxy / (1.0 + jnp.abs(proxy)))
+    prio = jnp.where(excl, -jnp.inf, prio)
+    pos, valid = gather_candidates(prio, survivor_budget)
+    n_hits = jnp.sum((hit > 0) & ~excl, axis=1)
+    n_survivors = jnp.sum(block_hit & ~excl, axis=1)
+    return pos, valid, n_hits, n_survivors
+
+
+def tiered_priorities(zq, qkeys, zg, keys_g, valid, *, interpret: bool = True):
+    """Fine pass of the tiered stage over gathered survivors.
+
+    ``zg`` (Q, M', F_NUM) and ``keys_g`` (Q, M', B) are the survivors'
+    profiles and fine band keys gathered per query; the skinny-geometry
+    probe kernel plus the per-query proxy replace the full-lake hybrid
+    pass. Returns (Q, M') priorities with invalid slots at -inf.
+    """
+    hit = lsh_probe_gathered_tile(qkeys, keys_g, interpret=interpret)
+    proxy = 2.0 * jnp.einsum("qf,qmf->qm", zq, zg) - jnp.sum(zg * zg, axis=-1)
+    proxy = proxy / (1.0 + jnp.abs(proxy))
+    prio = hit.astype(jnp.float32) * _LSH_PRIORITY_BOOST + proxy
+    return jnp.where(valid, prio, -jnp.inf)
 
 
 def gather_candidates(prio, budget: int):

@@ -19,6 +19,16 @@ Tiling mirrors ``minhash.py``: the grid walks (Q, C) tiles, each program
 loads a (Qb, B) and a (Cb, B) key block into VMEM and emits the (Qb, Cb)
 int32 hit block. VMEM working set with the defaults (8 × 512 × 64 × 4 B
 intermediate) is ~1 MB.
+
+Dispatch: ``interpret=True`` means "no TPU here" (the CPU fallback every
+serving path takes in this container), and interpret-mode ``pallas_call``
+re-enters the Pallas interpreter once per grid step — at full-lake grids
+(hundreds of tiles for 10^5 columns) that overhead outweighs the actual
+uint32 compare stream by 30-100×.  The tile entry points therefore lower
+to the jnp reference oracle when ``interpret`` is requested: identical
+math, one fused XLA op.  ``lsh_probe_pallas`` / ``lsh_probe_gathered_pallas``
+keep running the real interpreter so the parity suites still exercise the
+kernel bodies.
 """
 from __future__ import annotations
 
@@ -28,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
 
 # Padding keys: queries and corpus pad with *different* sentinels so padded
 # rows never match anything (including each other).
@@ -77,8 +89,73 @@ def lsh_probe_tile(qkeys, ckeys, *, block_q: int = 8, block_c: int = 512,
     q-sharded probe doesn't pad every tiny shard up to the global default
     tile; shapes are static inside ``jit``/``shard_map``, so the clamp
     costs nothing at trace time.
+
+    With ``interpret=True`` (no TPU) the probe lowers to the jnp reference
+    instead of the per-tile Pallas interpreter — see the module docstring.
     """
+    if interpret:
+        return _ref.lsh_probe_ref(qkeys, ckeys)
     bq = max(1, min(int(block_q), int(qkeys.shape[0]) or 1))
     bc = max(1, min(int(block_c), int(ckeys.shape[0]) or 1))
     return lsh_probe_pallas(qkeys, ckeys, block_q=bq, block_c=bc,
                             interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Skinny-survivor geometry: per-query gathered corpora (tiered fine pass)
+# ---------------------------------------------------------------------------
+
+def _gathered_kernel(qk_ref, ck_ref, out_ref):
+    q = qk_ref[...]                                     # (Qb, B) u32
+    c = ck_ref[...]                                     # (Qb, Cb, B) u32
+    eq = q[:, None, :] == c                             # (Qb, Cb, B)
+    out_ref[...] = jnp.any(eq, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_c", "interpret"))
+def lsh_probe_gathered_pallas(qkeys, ckeys, *, block_q: int = 8,
+                              block_c: int = 256, interpret: bool = True):
+    """Fine probe over per-query gathered survivors.
+
+    ``qkeys`` (Q, B) u32 against ``ckeys`` (Q, C', B) u32 — each query
+    brings its *own* gathered key rows (the coarse pass's survivors,
+    padded with ``PAD_CORPUS`` up to the static survivor budget C').
+    Returns the (Q, C') int32 hit mask.
+
+    The tiered geometry is skinny: C' is a few hundred to a few thousand
+    where the full-lake probe sees 10^5+, so the corpus tile defaults much
+    smaller (256) and is clamped to C' — one program often covers a whole
+    query row's survivors.
+    """
+    q, b = qkeys.shape
+    cprime = ckeys.shape[1]
+    bq = max(1, min(int(block_q), q or 1))
+    bc = max(1, min(int(block_c), cprime or 1))
+    qp = -(-q // bq) * bq
+    cp = -(-cprime // bc) * bc
+    qk = jnp.pad(qkeys, ((0, qp - q), (0, 0)), constant_values=PAD_QUERY)
+    ck = jnp.pad(ckeys, ((0, qp - q), (0, cp - cprime), (0, 0)),
+                 constant_values=PAD_CORPUS)
+    out = pl.pallas_call(
+        _gathered_kernel,
+        grid=(qp // bq, cp // bc),
+        in_specs=[
+            pl.BlockSpec((bq, b), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bc, b), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp, cp), jnp.int32),
+        interpret=interpret,
+    )(qk, ck)
+    return out[:q, :cprime]
+
+
+def lsh_probe_gathered_tile(qkeys, ckeys, *, block_q: int = 8,
+                            block_c: int = 256, interpret: bool = True):
+    """Dispatching entry point for the gathered fine probe: jnp reference
+    when ``interpret`` is requested (CPU fallback), the Pallas kernel when
+    compiling natively — same contract as ``lsh_probe_tile``."""
+    if interpret:
+        return _ref.lsh_probe_gathered_ref(qkeys, ckeys)
+    return lsh_probe_gathered_pallas(qkeys, ckeys, block_q=block_q,
+                                     block_c=block_c, interpret=interpret)

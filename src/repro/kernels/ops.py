@@ -11,11 +11,18 @@ import jax.numpy as jnp
 
 from repro.core.gbdt import GBDTParams
 from repro.kernels.gbdt_infer import gbdt_infer_pallas
-from repro.kernels.lsh_probe import lsh_probe_pallas
+from repro.kernels.lsh_probe import (lsh_probe_gathered_pallas,
+                                     lsh_probe_pallas)
 from repro.kernels.minhash import make_permutations, minhash_pallas
 from repro.kernels.profile_distance import (fused_score_pallas,
-                                            profile_distance_pallas)
+                                            fused_score_q_pallas,
+                                            profile_distance_pallas,
+                                            quantize_profiles)
 from repro.kernels.quality_cdf import quality_cdf_pallas
+
+__all__ = ["gbdt_infer", "profile_distance", "fused_score", "fused_score_q",
+           "minhash", "lsh_probe", "lsh_probe_gathered", "quality_cdf",
+           "quantize_profiles"]
 
 
 def _interpret() -> bool:
@@ -48,6 +55,18 @@ def fused_score(zq, wq, zc, wc, params: GBDTParams, *, block_q: int = 8,
                               interpret=_interpret())
 
 
+def fused_score_q(zq, wq, zc, scale, wc, params: GBDTParams, *,
+                  block_q: int = 8, block_n: int = 256):
+    """Fused scoring over a quantized (int8/fp16) corpus sidecar."""
+    feats, thrs, leaves, base = params.astuple()
+    return fused_score_q_pallas(jnp.asarray(zq), jnp.asarray(wq),
+                                jnp.asarray(zc), jnp.asarray(scale),
+                                jnp.asarray(wc), jnp.asarray(feats),
+                                jnp.asarray(thrs), jnp.asarray(leaves),
+                                base=float(base), block_q=block_q,
+                                block_n=block_n, interpret=_interpret())
+
+
 def minhash(values, *, n_perm: int = 128, seed: int = 0,
             block_c: int = 8, block_r: int = 256):
     a, b = make_permutations(n_perm, seed)
@@ -59,6 +78,13 @@ def lsh_probe(qkeys, ckeys, *, block_q: int = 8, block_c: int = 512):
     return lsh_probe_pallas(jnp.asarray(qkeys), jnp.asarray(ckeys),
                             block_q=block_q, block_c=block_c,
                             interpret=_interpret())
+
+
+def lsh_probe_gathered(qkeys, ckeys, *, block_q: int = 8, block_c: int = 256):
+    """Fine probe over per-query gathered survivor keys (Q, C', B)."""
+    return lsh_probe_gathered_pallas(jnp.asarray(qkeys), jnp.asarray(ckeys),
+                                     block_q=block_q, block_c=block_c,
+                                     interpret=_interpret())
 
 
 def quality_cdf(j, k, *, strictness: float = 0.25, block: int = 4096):

@@ -69,6 +69,13 @@ def lsh_probe_ref(qkeys, ckeys):
     return jnp.any(eq, axis=-1).astype(jnp.int32)
 
 
+def lsh_probe_gathered_ref(qkeys, ckeys):
+    """Gathered-survivor probe. qkeys (Q, B) u32 against per-query key rows
+    ckeys (Q, C', B) u32 -> (Q, C') int32 hit mask."""
+    eq = qkeys[:, None, :] == ckeys
+    return jnp.any(eq, axis=-1).astype(jnp.int32)
+
+
 def minhash_jaccard_ref(sig_a, sig_b):
     """Estimated *set* Jaccard from signatures (the MinHash baseline)."""
     return jnp.mean((sig_a == sig_b).astype(jnp.float32), axis=-1)

@@ -220,7 +220,8 @@ def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
                           candidates: str = "hybrid", k: int = 10,
                           n_bands: int = 64, n_trees: int = 30,
                           tree_depth: int = 4, n_shards: int = 1,
-                          q_shards: int = 1) -> dict:
+                          q_shards: int = 1, survivor_budget: int = 0,
+                          n_coarse_bands: int = 16) -> dict:
     """Analytic per-device cost of one discovery micro-batch, per stage.
 
     The planner's default cost hook (``repro.exec.Planner``): flops / HBM
@@ -259,6 +260,22 @@ def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
     if candidates == "all":
         m = cl
         stg["candidates"] = {"flops": 0.0, "hbm_bytes": 0.0}
+    elif candidates == "tiered":
+        # coarse digest over ALL local columns (S << B uint32 lanes, no
+        # proxy matmul), then the fine probe + proxy + gather only over the
+        # C' gathered survivors — the full-lake terms shrink from
+        # (B + 2·F_NUM) per column to S per column
+        m = min(-(-max(int(budget), 1) // shards), cl)
+        surv = min(max(int(survivor_budget), 1), cl)
+        s_bands = max(int(n_coarse_bands), 1)
+        coarse = q * cl * s_bands + q * cl              # probe + selection
+        fine = q * surv * (n_bands + 2.0 * FT.F_NUM + 1)
+        gather = q * surv * (FT.F_NUM + n_bands)        # per-query gathers
+        stg["candidates"] = {
+            "flops": coarse + fine + gather,
+            "hbm_bytes": (q + cl) * s_bands * 4 + q * cl * F4
+            + q * surv * (n_bands * 4 + FT.F_NUM * F4),
+        }
     else:
         m = min(-(-max(int(budget), 1) // shards), cl)
         probe = q * cl * n_bands                        # uint32 equality
@@ -294,6 +311,8 @@ def discovery_stage_costs(n_queries: int, n_columns: int, *, budget: int,
         "q_shards": q_sh,
         "grid": [q_sh, shards],
         "scored_per_device": int(m),
+        "survivor_budget": int(min(max(int(survivor_budget), 1), cl))
+        if candidates == "tiered" else 0,
     }
 
 
@@ -331,11 +350,14 @@ def calibrate_stage_costs(bench="BENCH_service.json", *, k: int = 10,
         c = int(lake["n_columns"])
         for stats in lake.get("modes", {}).values():
             kind = stats.get("plan") or ""
-            cand = ("hybrid" if kind.endswith("hybrid") else
+            cand = ("tiered" if kind.endswith("tiered") else
+                    "hybrid" if kind.endswith("hybrid") else
                     "lsh" if kind.endswith("lsh") else "all")
             budget = int(stats.get("plan_budget") or c)
+            surv = int(stats.get("plan_survivor_budget") or 4 * budget)
             stg = discovery_stage_costs(1, c, budget=budget, candidates=cand,
-                                        k=k, n_bands=n_bands)["stages"]
+                                        k=k, n_bands=n_bands,
+                                        survivor_budget=surv)["stages"]
             rows_x.append([stg["candidates"]["flops"], stg["score"]["flops"],
                            stg["merge"]["flops"], 1.0])
             rows_y.append(float(stats["batch_ms_per_query"]) * 1e-3)
@@ -401,12 +423,15 @@ def make_calibrated_cost_fn(constants: dict):
     def cost_fn(n_queries: int, n_columns: int, *, budget: int,
                 candidates: str = "hybrid", k: int = 10, n_bands: int = 64,
                 n_trees: int = 30, tree_depth: int = 4,
-                n_shards: int = 1, q_shards: int = 1) -> dict:
+                n_shards: int = 1, q_shards: int = 1,
+                survivor_budget: int = 0, n_coarse_bands: int = 16) -> dict:
         c = discovery_stage_costs(n_queries, n_columns, budget=budget,
                                   candidates=candidates, k=k,
                                   n_bands=n_bands, n_trees=n_trees,
                                   tree_depth=tree_depth, n_shards=n_shards,
-                                  q_shards=q_shards)
+                                  q_shards=q_shards,
+                                  survivor_budget=survivor_budget,
+                                  n_coarse_bands=n_coarse_bands)
         stg = c["stages"]
         # per-device stage flops × fitted s/flop: the critical-path device
         # (dispatch overhead is per-batch, so the fixed term stays global)

@@ -38,11 +38,13 @@ from repro.service.api import (ColumnMatch, DiscoveryRequest,
                                DiscoveryResponse, serve_discovery)
 from repro.service.catalog import (CatalogReader, CatalogSnapshot,
                                    CatalogStore, ColumnCatalog,
-                                   LeaseHeldError, WriterLease, add_lake)
+                                   LeaseHeldError, WriterLease, add_lake,
+                                   materialize_snapshot)
 from repro.service.compactor import BackgroundCompactor
 from repro.service.engine import DiscoveryEngine, EngineConfig, measure_recall
 from repro.service.events import Event, EventBus, EventCursor, mint_trace_id
-from repro.service.lsh import LSHConfig, LSHIndex, band_keys
+from repro.service.lsh import (LSHConfig, LSHIndex, band_keys,
+                               coarse_band_keys)
 from repro.service.metrics import (MetricsRegistry, MetricsServer,
                                    ServiceMetrics, parse_exposition)
 from repro.service.scheduler import (DeadlineExpired, RequestScheduler,
@@ -51,11 +53,11 @@ from repro.service.scheduler import (DeadlineExpired, RequestScheduler,
 __all__ = [
     "ColumnMatch", "DiscoveryRequest", "DiscoveryResponse", "serve_discovery",
     "CatalogReader", "CatalogSnapshot", "CatalogStore", "ColumnCatalog",
-    "LeaseHeldError", "WriterLease", "add_lake",
+    "LeaseHeldError", "WriterLease", "add_lake", "materialize_snapshot",
     "BackgroundCompactor",
     "DiscoveryEngine", "EngineConfig", "measure_recall",
     "Event", "EventBus", "EventCursor", "mint_trace_id",
-    "LSHConfig", "LSHIndex", "band_keys",
+    "LSHConfig", "LSHIndex", "band_keys", "coarse_band_keys",
     "MetricsRegistry", "MetricsServer", "ServiceMetrics", "parse_exposition",
     "DeadlineExpired", "RequestScheduler", "SchedulerConfig",
     "SchedulerOverloadError",

@@ -27,7 +27,15 @@ without reprofiling:
   (``poll()`` — a single ``os.stat`` of the pointer hint when nothing
   changed) and materializes immutable :class:`CatalogSnapshot`\\ s
   keyed by version, so read replicas observe every version in order and
-  queries can pin one version for their whole pipeline.
+  queries can pin one version for their whole pipeline;
+* **lazy snapshots** (``snapshot(lazy=True)``) keep the segment arrays as
+  read-only ``np.memmap`` views instead of copying them, and recover the
+  lake-wide z-score stats from per-segment **moments** stored in each
+  segment's ``meta.json`` — opening a compacted million-column catalog is
+  O(manifest), not O(lake), and resident memory grows only with the bytes
+  a query actually touches.  POSIX unlink semantics keep a pinned lazy
+  snapshot valid across a concurrent compaction that deletes its segment
+  files: the mapping holds the data alive until the last reader drops it.
 
 Layout::
 
@@ -111,9 +119,14 @@ def _slice_batch(batch: ColumnBatch, idx: np.ndarray) -> ColumnBatch:
 class CatalogSnapshot:
     """Materialized live view of the catalog at one manifest version.
 
-    Immutable once built (all arrays are copies off the segment mmaps), so
-    a query pipeline that pins a snapshot is isolated from every concurrent
-    add / drop / compaction — including segment deletion after a swap.
+    Immutable once built.  Eager snapshots copy every array off the
+    segment mmaps; **lazy** snapshots (``lazy=True``) keep the read-only
+    memmap views and recover the z-score stats from stored per-segment
+    moments — O(manifest) open cost.  Both isolate a pinned query
+    pipeline from every concurrent add / drop / compaction, including
+    segment deletion after a swap: a copy trivially, a memmap because
+    POSIX unlink leaves the mapped bytes readable until the mapping is
+    dropped.
     """
 
     profiles: LakeProfiles          # zscored lazily via lake-wide mean/std
@@ -123,6 +136,7 @@ class CatalogSnapshot:
     table_names: dict[int, str]     # table id -> name
     version: int                    # manifest version (engine cache epoch)
     minhash_seed: int = 0           # permutation seed for external queries
+    lazy: bool = False              # arrays are segment memmaps, not copies
 
     @property
     def n_columns(self) -> int:
@@ -190,15 +204,69 @@ def _load_segment(root: str, seg: str) -> dict:
         meta = json.load(f)
     out["names"] = meta["names"]
     out["tables"] = meta["tables"]
+    out["moments"] = meta.get("moments")   # absent in pre-lazy segments
     return out
 
 
-def materialize_snapshot(root: str, manifest: dict) -> CatalogSnapshot:
+def _numeric_moments(numeric: np.ndarray) -> dict:
+    """Per-segment z-score moments stored in ``meta.json`` so a lazy open
+    recovers the lake-wide mean/std without reading the profile bytes."""
+    x = np.asarray(numeric, np.float64)
+    return {"count": int(x.shape[0]),
+            "sum": x.sum(axis=0).tolist() if x.shape[0] else
+            [0.0] * x.shape[1],
+            "sumsq": (x * x).sum(axis=0).tolist() if x.shape[0] else
+            [0.0] * x.shape[1]}
+
+
+def _stats_from_moments(moments: Iterable[dict]):
+    """Combine per-segment moments -> lake-wide (mean, std)."""
+    n = 0
+    s = np.zeros((FT.F_NUM,), np.float64)
+    s2 = np.zeros((FT.F_NUM,), np.float64)
+    for m in moments:
+        n += int(m["count"])
+        s += np.asarray(m["sum"], np.float64)
+        s2 += np.asarray(m["sumsq"], np.float64)
+    if n == 0:
+        return (np.zeros((FT.F_NUM,), np.float32),
+                np.ones((FT.F_NUM,), np.float32))
+    mean = s / n
+    var = np.maximum(s2 / n - mean * mean, 0.0)
+    std = np.sqrt(var)
+    std = np.where(std < 1e-6, 1.0, std)
+    return mean.astype(np.float32), std.astype(np.float32)
+
+
+def materialize_snapshot(root: str, manifest: dict, *,
+                         lazy: bool = False) -> CatalogSnapshot:
     """Materialize the live columns of ``manifest`` into an immutable
     :class:`CatalogSnapshot` (segment arrays are read with ``mmap_mode`` so
-    this touches only the bytes it concatenates)."""
+    this touches only the bytes it concatenates).
+
+    ``lazy=True`` requests the zero-copy fast path: when the manifest is a
+    single segment with no pending tombstones and stored moments (the
+    steady state after a compaction), the snapshot keeps the read-only
+    memmaps and the combined moments — no profile byte is read at open.
+    A manifest that still needs filtering or concatenation falls back to
+    the eager copy (``snapshot.lazy`` reports which path was taken)."""
     dropped = set(manifest["dropped_ids"])
     parts = [_load_segment(root, s) for s in manifest["segments"]]
+
+    if (lazy and len(parts) == 1 and not dropped
+            and parts[0]["moments"] is not None):
+        part = parts[0]
+        mean, std = _stats_from_moments([part["moments"]])
+        profiles = LakeProfiles(numeric=part["numeric"],
+                                words=part["words"],
+                                n_rows=part["n_rows"],
+                                mean=mean, std=std)
+        return CatalogSnapshot(
+            profiles=profiles, signatures=part["sigs"],
+            table_ids=part["table_ids"], names=list(part["names"]),
+            table_names={i: t for t, i in part["tables"].items()},
+            version=int(manifest["version"]),
+            minhash_seed=int(manifest["minhash_seed"]), lazy=True)
     acc = {k: [] for k in ("numeric", "words", "n_rows", "sigs",
                            "table_ids")}
     names: list[str] = []
@@ -486,8 +554,10 @@ class CatalogStore:
                     seg = (f"seg-{int(m['next_segment']):08d}-"
                            f"{os.urandom(3).hex()}")
                     seg_dir = os.path.join(self.root, seg)
-                    self._write_segment(seg_dir, batch, numeric, words,
-                                        sigs, tid, name)
+                    self._write_segment(
+                        seg_dir, batch, numeric, words, sigs,
+                        np.full((batch.n_columns,), tid, np.int32),
+                        {name: tid})
                     seg_tid, seg_geom = tid, geom
                 else:
                     if geom != seg_geom:    # concurrent re-sign compaction
@@ -499,7 +569,9 @@ class CatalogStore:
                         with open(os.path.join(seg_dir, "meta.json"),
                                   "w") as f:
                             json.dump({"names": list(batch.names),
-                                       "tables": {name: tid}}, f)
+                                       "tables": {name: tid},
+                                       "moments":
+                                           _numeric_moments(numeric)}, f)
                         seg_tid = tid
 
                 m["tables"][name] = tid
@@ -518,7 +590,8 @@ class CatalogStore:
 
     @staticmethod
     def _write_segment(seg_dir: str, batch: ColumnBatch, numeric, words,
-                       sigs, tid: int, name: str) -> None:
+                       sigs, table_ids: np.ndarray,
+                       tables: dict[str, int]) -> None:
         os.makedirs(seg_dir, exist_ok=True)
         np.save(os.path.join(seg_dir, "numeric.npy"), numeric)
         np.save(os.path.join(seg_dir, "words.npy"), words)
@@ -528,10 +601,97 @@ class CatalogStore:
         # the re-sign source for signature maintenance at compact()
         np.save(os.path.join(seg_dir, "values.npy"), batch.values32)
         np.save(os.path.join(seg_dir, "table_ids.npy"),
-                np.full((batch.n_columns,), tid, np.int32))
+                np.asarray(table_ids, np.int32))
         with open(os.path.join(seg_dir, "meta.json"), "w") as f:
-            json.dump({"names": list(batch.names),
-                       "tables": {name: tid}}, f)
+            json.dump({"names": list(batch.names), "tables": tables,
+                       "moments": _numeric_moments(numeric)}, f)
+
+    def add_batch(self, batch: ColumnBatch,
+                  table_names: Sequence[str], *,
+                  profile_chunk: int = 8192) -> dict[str, int]:
+        """Bulk-register many tables from one packed batch as **one**
+        delta segment (the segment format already carries per-column
+        table ids and a multi-table name map).
+
+        ``batch.table_ids`` hold *local* ids indexing ``table_names``;
+        they are remapped onto catalog-assigned ids at publish time.
+        This is the scale ingest path: a 10^5-column synthetic lake lands
+        in one segment + one manifest CAS instead of one of each per
+        table — and leaves the catalog in the single-segment steady state
+        the lazy snapshot fast path wants.  Profiling/MinHashing runs in
+        ``profile_chunk``-column slices to bound device memory.  Returns
+        ``{table name: assigned id}``."""
+        if batch.n_columns == 0:
+            raise ValueError("batch has no columns")
+        local = np.asarray(batch.table_ids, np.int64)
+        if local.min() < 0 or local.max() >= len(table_names):
+            raise ValueError(
+                f"batch table_ids must index table_names "
+                f"(0..{len(table_names) - 1}); got range "
+                f"[{int(local.min())}, {int(local.max())}]")
+        if len(set(table_names)) != len(table_names):
+            raise ValueError("duplicate names in table_names")
+
+        def _sign(geom):
+            outs = ([], [], [])
+            for i in range(0, batch.n_columns, profile_chunk):
+                idx = np.arange(i, min(i + profile_chunk, batch.n_columns))
+                for acc, arr in zip(outs, profile_and_sign(
+                        _slice_batch(batch, idx), *geom)):
+                    acc.append(arr)
+            return tuple(np.concatenate(a) for a in outs)
+
+        signed: dict[tuple[int, int], tuple] = {}
+        seg = seg_dir = None
+        seg_base = seg_geom = None
+        try:
+            while True:
+                m = copy.deepcopy(self._refresh())
+                taken = [t for t in table_names if t in m["tables"]]
+                if taken:
+                    raise ValueError(f"table(s) {taken!r} already in "
+                                     f"catalog")
+                geom = (int(m["n_perm"]), int(m["minhash_seed"]))
+                if geom not in signed:
+                    signed[geom] = _sign(geom)
+                numeric, words, sigs = signed[geom]
+                base = int(m["next_table_id"])
+                tids = (base + local).astype(np.int32)
+                tables = {t: base + i for i, t in enumerate(table_names)}
+                if seg is None:
+                    seg = (f"seg-{int(m['next_segment']):08d}-"
+                           f"{os.urandom(3).hex()}")
+                    seg_dir = os.path.join(self.root, seg)
+                    self._write_segment(seg_dir, batch, numeric, words,
+                                        sigs, tids, tables)
+                    seg_base, seg_geom = base, geom
+                else:
+                    if geom != seg_geom:
+                        np.save(os.path.join(seg_dir, "sigs.npy"), sigs)
+                        seg_geom = geom
+                    if base != seg_base:
+                        np.save(os.path.join(seg_dir, "table_ids.npy"),
+                                tids)
+                        with open(os.path.join(seg_dir, "meta.json"),
+                                  "w") as f:
+                            json.dump({"names": list(batch.names),
+                                       "tables": tables,
+                                       "moments":
+                                           _numeric_moments(numeric)}, f)
+                        seg_base = base
+                m["tables"].update(tables)
+                m["next_table_id"] = base + len(table_names)
+                m["next_segment"] = int(m["next_segment"]) + 1
+                m["segments"].append(seg)
+                m["version"] = int(m["version"]) + 1
+                if self._publish(m):
+                    self._set_manifest(m)
+                    return tables
+                self.stats["cas_retries"] += 1
+        except BaseException:
+            if seg_dir is not None:
+                shutil.rmtree(seg_dir, ignore_errors=True)
+            raise
 
     def drop_table(self, name: str) -> None:
         """Tombstone a table; its columns disappear from snapshots and its
@@ -700,7 +860,8 @@ class CatalogStore:
         if not values_valid.all():         # all-True is implied when absent
             np.save(os.path.join(seg_dir, "values_valid.npy"), values_valid)
         with open(os.path.join(seg_dir, "meta.json"), "w") as f:
-            json.dump({"names": names, "tables": tables}, f)
+            json.dump({"names": names, "tables": tables,
+                       "moments": _numeric_moments(cat["numeric"])}, f)
 
         return {"seg": seg, "replaced": old_segs,
                 "applied_drops": set(pinned["dropped_ids"]),
@@ -774,9 +935,11 @@ class CatalogStore:
 
     # -- reads --------------------------------------------------------------
 
-    def snapshot(self) -> CatalogSnapshot:
-        """Materialize the current head (writers see their own writes)."""
-        return materialize_snapshot(self.root, self._refresh())
+    def snapshot(self, *, lazy: bool = False) -> CatalogSnapshot:
+        """Materialize the current head (writers see their own writes).
+        ``lazy=True`` requests the zero-copy memmap fast path (see
+        :func:`materialize_snapshot`)."""
+        return materialize_snapshot(self.root, self._refresh(), lazy=lazy)
 
 
 # Back-compat alias: the pre-MVCC single-writer class name.
@@ -798,12 +961,18 @@ class CatalogReader:
 
     Old versions stay materializable only until a compaction deletes their
     segments; snapshots already materialized (cached or held by an engine)
-    are plain numpy copies and remain valid forever.
+    remain valid forever — eager ones are plain numpy copies, lazy ones
+    hold open memmaps whose bytes POSIX unlink cannot reclaim while the
+    mapping lives.
     """
 
     def __init__(self, root: str, *, max_cached_snapshots: int = 4,
-                 deep_poll_every: int = 128, events=None):
+                 deep_poll_every: int = 128, events=None,
+                 lazy: bool = False):
         self.root = root
+        # default materialization mode for snapshot(); lazy=True serves
+        # zero-copy memmap snapshots whenever the manifest allows it
+        self.lazy = bool(lazy)
         # optional event sink; DiscoveryEngine.follow() injects its bus
         # here so follower-observed manifest_advanced events (follower=
         # True) land on the serving engine's stream
@@ -818,7 +987,7 @@ class CatalogReader:
         self._deep_every = max(int(deep_poll_every), 1)
         self._manifests: dict[int, dict] = {int(m["version"]): m}
         self._version = int(m["version"])
-        self._snaps: "dict[int, CatalogSnapshot]" = {}
+        self._snaps: "dict[tuple[int, bool], CatalogSnapshot]" = {}
         self._lock = threading.Lock()
         self.stats = {"polls": 0, "fast_polls": 0, "deep_polls": 0}
 
@@ -889,9 +1058,11 @@ class CatalogReader:
                            f"{self.root!r}")
         return m
 
-    def snapshot(self, version: int | None = None) -> CatalogSnapshot:
+    def snapshot(self, version: int | None = None, *,
+                 lazy: bool | None = None) -> CatalogSnapshot:
         """Immutable snapshot at ``version`` (default: latest, after an
-        implicit :meth:`poll`).
+        implicit :meth:`poll`).  ``lazy`` overrides the reader's default
+        materialization mode for this call.
 
         The latest-snapshot path is race-proof against compaction: if a
         swap publishes and deletes our target's segments between the poll
@@ -900,9 +1071,10 @@ class CatalogReader:
         *explicitly* pinned historical version whose segments were
         compacted away raises ``KeyError`` instead — the caller asked for
         that version, not whatever is newest."""
+        lazy = self.lazy if lazy is None else bool(lazy)
         if version is not None:
             try:
-                return self._snapshot_at(int(version))
+                return self._snapshot_at(int(version), lazy)
             except FileNotFoundError as e:
                 raise KeyError(
                     f"catalog version {int(version)} is no longer "
@@ -913,18 +1085,20 @@ class CatalogReader:
         while True:
             head = self._version
             try:
-                return self._snapshot_at(head)
+                return self._snapshot_at(head, lazy)
             except FileNotFoundError:
                 if not self.poll():     # head did not move: a real error
                     raise
 
-    def _snapshot_at(self, version: int) -> CatalogSnapshot:
+    def _snapshot_at(self, version: int, lazy: bool) -> CatalogSnapshot:
+        key = (version, lazy)
         with self._lock:
-            if version in self._snaps:
-                return self._snaps[version]
-        snap = materialize_snapshot(self.root, self.manifest(version))
+            if key in self._snaps:
+                return self._snaps[key]
+        snap = materialize_snapshot(self.root, self.manifest(version),
+                                    lazy=lazy)
         with self._lock:
-            self._snaps[version] = snap
+            self._snaps[key] = snap
             while len(self._snaps) > self._max_cached:
                 del self._snaps[min(self._snaps)]
         return snap

@@ -74,10 +74,14 @@ from repro.service.lsh import LSHConfig, LSHIndex
 @dataclasses.dataclass
 class EngineConfig:
     k: int = 10
-    mode: str = "lsh"                  # "lsh" | "full" | "sharded" | "auto"
+    mode: str = "lsh"          # "lsh" | "full" | "sharded" | "auto" | "tiered"
     lsh: LSHConfig = dataclasses.field(default_factory=LSHConfig)
     candidate_frac: float = 0.2        # LSH budget as a fraction of the lake
     max_candidates: int = 4096         # absolute cap on that budget
+    # resident profile-matrix dtype: "fp32" | "fp16" | "int8" — quantized
+    # sidecars shrink the corpus stream (dequant happens after the gather /
+    # in-kernel); parity vs fp32 top-k is test-gated
+    profile_dtype: str = "fp32"
     batch_pad: int = 8                 # pad micro-batches to this multiple
     # padded-batch bucket ladder: when set, micro-batches snap UP to the
     # smallest bucket that fits instead of the next batch_pad multiple, so
@@ -137,6 +141,7 @@ class DiscoveryEngine:
             k=config.k, candidate_frac=config.candidate_frac,
             max_candidates=config.max_candidates,
             n_bands=config.lsh.n_bands,
+            n_coarse_bands=config.lsh.n_coarse_bands,
             shard_axes=tuple(config.shard_axes),
             batch_buckets=tuple(config.batch_buckets or ())),
             cost_fn=config.cost_fn)
@@ -224,6 +229,8 @@ class DiscoveryEngine:
         executor = Executor(
             z, w, self.model.gbdt.astuple(),
             table_ids=snapshot.table_ids, band_keys=lsh.keys,
+            coarse_keys=lsh.coarse,
+            profile_dtype=self.config.profile_dtype,
             mesh=self.mesh, events=self.events)
         return _VersionState(snapshot=snapshot, z=z, w=w, lsh=lsh,
                              executor=executor)
@@ -476,10 +483,12 @@ class DiscoveryEngine:
             marks.append(("plan", time.perf_counter()))
         qkeys = (st.lsh.query_keys(sigq) if plan.candidates != "all"
                  else None)
+        qcoarse = (st.lsh.coarse_query_keys(sigq)
+                   if plan.candidates == "tiered" else None)
         if marks is not None:
             marks.append(("candidates", time.perf_counter()))
         sc, ids, ncand = st.executor.execute(plan, zq, wq, tq, qid,
-                                             qkeys=qkeys)
+                                             qkeys=qkeys, qcoarse=qcoarse)
         if marks is not None:
             marks.append(("execute", time.perf_counter()))
         self.last_plan = plan

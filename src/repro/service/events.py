@@ -30,6 +30,10 @@ Event taxonomy (the ``type`` strings components publish):
 ``snapshot_retired``        last reference released; executor closed
 ``compaction_started`` / ``compaction_published``  background compactor
 ``manifest_advanced``       catalog manifest chain grew a version
+``coarse_pass``             tiered candidate stage: super-band digest swept
+                            the lake (survivor counts + fraction)
+``fine_probe``              tiered candidate stage: banded probe + scoring
+                            ran on the gathered survivors
 ==========================  =================================================
 
 Payloads are free-form keyword dicts; the constants below are the
@@ -57,12 +61,15 @@ SNAPSHOT_RETIRED = "snapshot_retired"
 COMPACTION_STARTED = "compaction_started"
 COMPACTION_PUBLISHED = "compaction_published"
 MANIFEST_ADVANCED = "manifest_advanced"
+COARSE_PASS = "coarse_pass"
+FINE_PROBE = "fine_probe"
 
 EVENT_TYPES = (
     REQUEST_ADMITTED, REQUEST_SHED, REQUEST_EXPIRED, BATCH_FORMED,
     CACHE_HIT, CACHE_MISS, COMPILE_BEGIN, COMPILE_END,
     SNAPSHOT_PINNED, SNAPSHOT_RETIRED,
     COMPACTION_STARTED, COMPACTION_PUBLISHED, MANIFEST_ADVANCED,
+    COARSE_PASS, FINE_PROBE,
 )
 
 # trace ids: cheap, process-unique, monotonic within a session — NOT

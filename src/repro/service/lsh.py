@@ -20,6 +20,7 @@ candidate stage scales with the lake alongside the scorer.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,10 +31,15 @@ from repro.kernels.lsh_probe import PAD_CORPUS, PAD_QUERY
 _FNV_OFFSET = np.uint64(0xCBF29CE484222325)
 _FNV_PRIME = np.uint64(0x100000001B3)
 
+# geometries we have already warned about (``(n_perm, n_bands)`` pairs
+# where the signature width does not divide evenly into bands)
+_REMAINDER_WARNED: set[tuple[int, int]] = set()
+
 
 @dataclasses.dataclass(frozen=True)
 class LSHConfig:
-    n_bands: int = 64          # bands; rows per band = n_perm // n_bands
+    n_bands: int = 64          # fine bands; rows per band = n_perm // n_bands
+    n_coarse_bands: int = 16   # single-row super-bands for the coarse tier
 
     def rows_per_band(self, n_perm: int) -> int:
         r = n_perm // self.n_bands
@@ -43,34 +49,84 @@ class LSHConfig:
         return r
 
 
-def band_keys(signatures: np.ndarray, n_bands: int) -> np.ndarray:
-    """(C, P) uint32 MinHash signatures -> (C, B) uint32 bucket keys.
-
-    FNV-1a over the r rows of each band, folded to 32 bits; keys are kept
-    clear of the probe-kernel padding sentinels.
-    """
-    c, p = signatures.shape
-    cfg = LSHConfig(n_bands=n_bands)
-    r = cfg.rows_per_band(p)
-    s = signatures[:, :n_bands * r].reshape(c, n_bands, r).astype(np.uint64)
-    h = np.full((c, n_bands), _FNV_OFFSET, np.uint64)
-    for i in range(r):
-        h = (h ^ s[:, :, i]) * _FNV_PRIME
+def _fold32(h: np.ndarray) -> np.ndarray:
     k = ((h >> np.uint64(32)) ^ (h & np.uint64(0xFFFFFFFF))).astype(np.uint32)
     return np.where(k >= PAD_CORPUS, k - np.uint32(7), k)
 
 
+def band_keys(signatures: np.ndarray, n_bands: int) -> np.ndarray:
+    """(C, P) uint32 MinHash signatures -> (C, B) uint32 bucket keys.
+
+    FNV-1a over the r rows of each band, folded to 32 bits; keys are kept
+    clear of the probe-kernel padding sentinels.  When ``P % B != 0`` the
+    ``P - B*r`` trailing permutation rows are folded into the *last* band
+    (with a one-time warning) rather than silently discarded, so every
+    signature bit contributes to some bucket.
+    """
+    c, p = signatures.shape
+    cfg = LSHConfig(n_bands=n_bands)
+    r = cfg.rows_per_band(p)
+    used = n_bands * r
+    s = signatures[:, :used].reshape(c, n_bands, r).astype(np.uint64)
+    h = np.full((c, n_bands), _FNV_OFFSET, np.uint64)
+    for i in range(r):
+        h = (h ^ s[:, :, i]) * _FNV_PRIME
+    if p != used:
+        key = (p, n_bands)
+        if key not in _REMAINDER_WARNED:
+            _REMAINDER_WARNED.add(key)
+            warnings.warn(
+                f"band_keys: signature width {p} does not divide into "
+                f"{n_bands} bands of {r} rows; folding the {p - used} "
+                f"trailing permutation rows into the last band",
+                RuntimeWarning, stacklevel=2)
+        tail = signatures[:, used:].astype(np.uint64)    # (C, p-used)
+        for i in range(p - used):
+            h[:, -1] = (h[:, -1] ^ tail[:, i]) * _FNV_PRIME
+    return _fold32(h)
+
+
+def coarse_band_keys(signatures: np.ndarray, n_coarse_bands: int) -> np.ndarray:
+    """(C, P) signatures -> (C, S) single-row *super-band* digest keys.
+
+    The coarse tier samples S evenly-spaced permutation rows and hashes
+    each on its own (rows-per-band = 1).  A single-row band collides with
+    probability J (the raw Jaccard) — far more permissive per band than a
+    multi-row fine band's J^r — so a small S already catches essentially
+    every pair the fine tier would keep, while probing only S uint32
+    lanes per column instead of B fine keys plus the proxy matmul.
+    """
+    c, p = signatures.shape
+    if n_coarse_bands > p:
+        raise ValueError(
+            f"n_coarse_bands={n_coarse_bands} exceeds signature width {p}")
+    rows = (np.arange(n_coarse_bands) * p) // n_coarse_bands
+    s = signatures[:, rows].astype(np.uint64)            # (C, S)
+    h = (_FNV_OFFSET ^ s) * _FNV_PRIME
+    return _fold32(h)
+
+
 @dataclasses.dataclass
 class LSHIndex:
-    """Bucket keys for the resident catalog + the device probe."""
+    """Bucket keys for the resident catalog + the device probe.
+
+    Two tiers live side by side: the fine (C, B) band keys the classic
+    probe uses, and a small (C, S) coarse super-band digest the tiered
+    candidate path scans first to pick survivor blocks.
+    """
 
     config: LSHConfig
-    keys: np.ndarray               # (C, B) uint32
+    keys: np.ndarray               # (C, B) uint32 fine band keys
+    coarse: np.ndarray | None = None   # (C, S) uint32 super-band digest
 
     @classmethod
     def build(cls, signatures: np.ndarray, config: LSHConfig = LSHConfig()):
+        coarse = None
+        if 0 < config.n_coarse_bands <= signatures.shape[1]:
+            coarse = coarse_band_keys(signatures, config.n_coarse_bands)
         return cls(config=config,
-                   keys=band_keys(signatures, config.n_bands))
+                   keys=band_keys(signatures, config.n_bands),
+                   coarse=coarse)
 
     @property
     def n_columns(self) -> int:
@@ -79,13 +135,30 @@ class LSHIndex:
     def query_keys(self, signatures_q: np.ndarray) -> np.ndarray:
         return band_keys(signatures_q, self.config.n_bands)
 
+    def coarse_query_keys(self, signatures_q: np.ndarray) -> np.ndarray:
+        """(Q, P) query signatures -> (Q, S) super-band digest keys."""
+        if self.coarse is None:
+            raise ValueError("index was built without a coarse digest")
+        return coarse_band_keys(signatures_q, self.config.n_coarse_bands)
+
     def hit_mask(self, qkeys: np.ndarray) -> jnp.ndarray:
         """(Q, B) query keys -> (Q, C) int32 candidate mask (device)."""
         return ops.lsh_probe(qkeys, self.keys)
 
+    def coarse_hit_mask(self, qkeys_coarse: np.ndarray) -> jnp.ndarray:
+        """(Q, S) coarse keys -> (Q, C) int32 survivor mask (device)."""
+        if self.coarse is None:
+            raise ValueError("index was built without a coarse digest")
+        return ops.lsh_probe(qkeys_coarse, self.coarse)
+
     def candidate_fraction(self, qkeys: np.ndarray) -> float:
         """Mean fraction of the lake a query's candidate set covers."""
         m = np.asarray(self.hit_mask(qkeys))
+        return float(m.mean()) if m.size else 0.0
+
+    def coarse_fraction(self, qkeys_coarse: np.ndarray) -> float:
+        """Mean fraction of the lake surviving the coarse pass."""
+        m = np.asarray(self.coarse_hit_mask(qkeys_coarse))
         return float(m.mean()) if m.size else 0.0
 
 

@@ -36,6 +36,7 @@ DEFAULT_LATENCY_BUCKETS_MS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0,
 BATCH_SIZE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 COMPILE_BUCKETS_MS = (10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
                       5000.0, 10000.0, 30000.0)
+SURVIVOR_FRACTION_BUCKETS = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0)
 
 
 def _fmt(v: float) -> str:
@@ -282,6 +283,16 @@ class ServiceMetrics:
         self.events_dropped = r.gauge(
             "event_bus_dropped_total",
             "events a consumer missed to ring overflow")
+        self.coarse_passes = r.counter(
+            "coarse_passes_total",
+            "tiered candidate stage coarse digest sweeps")
+        self.fine_probes = r.counter(
+            "fine_probes_total",
+            "tiered candidate stage fine probes over gathered survivors")
+        self.survivor_fraction = r.histogram(
+            "coarse_survivor_fraction",
+            "fraction of the lake surviving the coarse digest pass",
+            buckets=SURVIVOR_FRACTION_BUCKETS)
         self.queue_ms = r.histogram(
             "request_queue_ms", "submit -> batch formation wait (ms)")
         self.compute_ms = r.histogram(
@@ -346,6 +357,13 @@ class ServiceMetrics:
             elif ev.type == EV.COMPILE_END:
                 self.compiles.inc()
                 self.compile_ms.observe(ev.payload.get("ms", 0.0))
+            elif ev.type == EV.COARSE_PASS:
+                self.coarse_passes.inc()
+                frac = ev.payload.get("survivor_fraction")
+                if frac is not None:
+                    self.survivor_fraction.observe(frac)
+            elif ev.type == EV.FINE_PROBE:
+                self.fine_probes.inc()
             elif ev.type == EV.MANIFEST_ADVANCED:
                 v = ev.payload.get("version")
                 if v is not None:

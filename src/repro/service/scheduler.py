@@ -26,7 +26,11 @@ module replaces it with an asynchronous scheduler:
 * **deadline-aware admission**: a request submitted with ``deadline_ms=``
   is dropped at batch-formation time once its deadline has passed (its
   future raises :class:`DeadlineExpired`) — a queue that fell behind
-  sheds dead work instead of computing answers nobody is waiting for;
+  sheds dead work instead of computing answers nobody is waiting for.
+  The coalescing window also **shrinks** to the earliest queued
+  deadline: the worker never idles past a moment that would expire a
+  request it could still serve (``stats()["window_shrunk"]`` counts the
+  cut windows);
 * **bounded-queue load shedding**: when ``max_queue`` requests are
   already waiting, ``submit`` raises :class:`SchedulerOverloadError`
   (or blocks for backpressure with ``block=True`` — what the
@@ -133,7 +137,7 @@ class RequestScheduler:
         self._counters = {"submitted": 0, "completed": 0, "failed": 0,
                           "shed": 0, "expired": 0, "batches": 0,
                           "bucket_hits": 0, "bucket_misses": 0,
-                          "max_queue_depth": 0}
+                          "window_shrunk": 0, "max_queue_depth": 0}
         self._batch_hist: dict[int, int] = {}
         # observability plane: adopt the engine's bus/metrics when it has
         # one (EngineConfig.metrics=True); every publish site guards on
@@ -242,8 +246,19 @@ class RequestScheduler:
             if self.config.max_wait_ms > 0 and not self._stop:
                 t_end = time.perf_counter() + self.config.max_wait_ms / 1e3
                 while len(self._heap) < self.max_batch and not self._stop:
-                    left = t_end - time.perf_counter()
+                    # deadline-aware shrink: waiting past the earliest
+                    # queued deadline converts a live request into an
+                    # expiration, so the window is cut to that deadline —
+                    # the batch forms smaller but every admitted request
+                    # that can still make it, makes it
+                    bound = t_end
+                    for _, _, it in self._heap:
+                        if it.deadline is not None and it.deadline < bound:
+                            bound = it.deadline
+                    left = bound - time.perf_counter()
                     if left <= 0:
+                        if bound < t_end:
+                            self._counters["window_shrunk"] += 1
                         break
                     self._cv.wait(timeout=left)
             # partition as we pop so expired requests never consume live
@@ -352,7 +367,8 @@ class RequestScheduler:
 
     def stats(self) -> dict:
         """Scheduler counters: queue depth (current/max), formed-batch
-        size histogram, bucket hit/miss counts, expirations, sheds."""
+        size histogram, bucket hit/miss counts, expirations, sheds,
+        deadline-shrunk coalescing windows."""
         with self._cv:
             depth = len(self._heap)
             c = dict(self._counters)

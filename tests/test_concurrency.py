@@ -384,11 +384,11 @@ def test_reader_snapshot_survives_compaction_race(tmp_path, monkeypatch):
     real = cat.materialize_snapshot
     fired = []
 
-    def racing(root_, manifest):
+    def racing(root_, manifest, **kw):
         if not fired:                      # compaction lands mid-materialize
             fired.append(True)
             store.compact()
-        return real(root_, manifest)
+        return real(root_, manifest, **kw)
 
     monkeypatch.setattr(cat, "materialize_snapshot", racing)
     snap = reader.snapshot()               # must retry at the head, not die

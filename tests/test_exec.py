@@ -42,15 +42,22 @@ def test_plan_mode_mapping():
 
 def test_plan_auto_lake_size_threshold():
     """Tiny lakes: probe+proxy overhead exceeds the pruning savings, the
-    cost model must fall back to the brute scan; big lakes must prune."""
+    cost model must fall back to the brute scan; big lakes must prune
+    (hybrid probe or, once the lake dwarfs the survivor budget, the
+    tiered coarse-digest pipeline)."""
     p = Planner(PlannerConfig(k=10))
+    pruned = ("hybrid", "tiered")
     assert p.plan(n_columns=12, mode="auto").candidates == "all"
-    assert p.plan(n_columns=4096, mode="auto").candidates == "hybrid"
+    assert p.plan(n_columns=4096, mode="auto").candidates in pruned
     # the crossover is monotone: once pruning wins it keeps winning
     kinds = [p.plan(n_columns=n, mode="auto").candidates
              for n in (8, 64, 512, 4096, 32768)]
-    first_hybrid = kinds.index("hybrid")
-    assert all(c == "hybrid" for c in kinds[first_hybrid:]), kinds
+    first_pruned = next(i for i, c in enumerate(kinds) if c in pruned)
+    assert all(c in pruned for c in kinds[first_pruned:]), kinds
+    # without a coarse digest the tier is not a contender
+    p0 = Planner(PlannerConfig(k=10, n_coarse_bands=0))
+    for n in (8, 64, 512, 4096, 32768):
+        assert p0.plan(n_columns=n, mode="auto").candidates != "tiered"
 
 
 def test_plan_auto_mesh_threshold():
@@ -166,10 +173,12 @@ def test_calibrate_recovers_planted_constants(tmp_path):
     assert "total_flops" in c            # still a superset of the analytic
 
     # end-to-end: the planner decides on the measured crossover — on this
-    # host pruning wins, but a probe-hostile measurement flips the same
-    # lake to the brute scan (the analytic flops alone never would)
+    # host pruning wins (hybrid, or tiered once the coarse digest beats
+    # the full-lake probe), but a probe-hostile measurement flips the
+    # same lake to the brute scan (the analytic flops alone never would)
     p = Planner(PlannerConfig(k=10), cost_fn=cost_fn)
-    assert p.plan(n_columns=50_000, mode="auto").candidates == "hybrid"
+    assert p.plan(n_columns=50_000, mode="auto").candidates in \
+        ("hybrid", "tiered")
     _, hostile = calibrate_stage_costs(
         _synthetic_bench_record(cand_s_per_flop=1e-7))
     p2 = Planner(PlannerConfig(k=10), cost_fn=hostile)
