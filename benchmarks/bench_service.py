@@ -45,6 +45,14 @@ fraction for ``mode="tiered"`` against the single-tier full-lake probe
 fraction exceeds 20% of the lake, or the lazy open's peak RSS exceeds
 25% of the materialized profile matrices — the large-lake CI gate.
 
+``--warmstart`` measures the **AOT bucket-ladder warmup** and the
+persistent executable cache: the legacy first-request-per-bucket compile
+spikes, then a warmed engine (``EngineConfig.warmup="serve"``) gated to
+serve every bucket with zero compile events and zero ``compile_ms``
+trace attribution, then a warm restart over the populated cache gated to
+warm ≥ 5× faster than the cold compile pass.  Results land under
+``warmstart`` in the JSON; ``--warmstart --smoke`` is the CI gate.
+
 The open-loop runs drive a **metrics-enabled** engine (event bus +
 Prometheus registry + live HTTP endpoint) and record the registry
 snapshot plus per-phase trace percentiles under ``observability``.
@@ -95,6 +103,12 @@ SCALE_N_QUERIES = 16
 SCALE_RECALL_GATE = 0.9           # tiered recall@10 vs the full scan
 SCALE_SURVIVOR_GATE = 0.2         # coarse survivor fraction of the lake
 SCALE_RSS_GATE = 0.25             # lazy-open RSS vs materialized matrices
+
+# --warmstart: AOT bucket-ladder warmup + persistent executable cache
+WARMSTART_TABLES = 45
+WARMSTART_BUCKETS = (8, 16, 32)
+WARMSTART_SMOKE_BUCKETS = (8, 16)
+WARMSTART_SPEEDUP_GATE = 5.0      # warm restart vs cold warmup wall
 
 # --open-loop: Poisson-arrival serving through the scheduler
 OPEN_LOOP_TABLES = 90
@@ -408,6 +422,108 @@ def scale_sweep(smoke: bool = False) -> dict:
     return out
 
 
+def warmstart_bench(smoke: bool = False) -> dict:
+    """Cold vs warm start of the AOT bucket-ladder warmup.
+
+    Three engine starts over one catalog snapshot:
+
+    * **unwarmed** — the legacy baseline: the ladder is installed but
+      nothing is pre-compiled, so the first request at every bucket pays
+      its jit compile on the serving path (recorded per bucket, with the
+      executor's ``compile_ms`` attribution);
+    * **cold warmup** — ``EngineConfig.warmup="serve"`` against an empty
+      executable cache: the full trace+compile wall moves off the serving
+      path into ``warmup()``, and every bucket's first request is then
+      gated to carry **zero** compile events and zero ``compile_ms``
+      trace attribution;
+    * **warm restart** — a fresh engine over the now-populated cache:
+      every executable deserializes instead of compiling.  The gate is
+      ``cold_wall / warm_wall >= {gate}x``.
+    """.format(gate=WARMSTART_SPEEDUP_GATE)
+    from repro.service import (ColumnCatalog, DiscoveryEngine,
+                               DiscoveryRequest, EngineConfig, LSHConfig,
+                               add_lake)
+
+    buckets = WARMSTART_SMOKE_BUCKETS if smoke else WARMSTART_BUCKETS
+    lake = bench_lake(seed=1, n_tables=WARMSTART_TABLES)
+    model = bench_model()
+    root = tempfile.mkdtemp(prefix="freyja_wstart_")
+    try:
+        add_lake(ColumnCatalog(root, n_perm=128), lake)
+        snapshot = ColumnCatalog(root).snapshot()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    c = snapshot.n_columns
+    rng = np.random.default_rng(3)
+    pool = [DiscoveryRequest(name=f"ws{i}", column_id=int(col))
+            for i, col in enumerate(rng.integers(0, c, size=buckets[-1]))]
+
+    def make_engine(warmup, cache_dir):
+        return DiscoveryEngine(
+            snapshot, model,
+            EngineConfig(k=10, mode="lsh", lsh=LSHConfig(n_bands=64),
+                         candidate_frac=0.2, cache_entries=0,
+                         batch_buckets=buckets, metrics=True,
+                         warmup=warmup, executable_cache_dir=cache_dir))
+
+    def first_request_ms(engine):
+        """First ``query_batch`` wall + compile attribution per bucket."""
+        per_bucket = {}
+        for b in buckets:
+            with Timer() as t:
+                rs = engine.query_batch(pool[:b])
+            comp = [s["compile_ms"] for r in rs for s in r.trace
+                    if "compile_ms" in s]
+            per_bucket[str(b)] = {"first_ms": t.s * 1e3,
+                                  "compile_ms": max(comp) if comp else 0.0}
+        walls = [e["first_ms"] for e in per_bucket.values()]
+        return per_bucket, float(np.percentile(walls, 99))
+
+    out = {"smoke": smoke, "n_columns": c, "buckets": list(buckets),
+           "gate_speedup": WARMSTART_SPEEDUP_GATE}
+
+    # 1) legacy baseline: first request per bucket compiles on the path
+    unwarmed = make_engine(False, None)
+    out["unwarmed_first_request"], out["unwarmed_first_p99_ms"] = \
+        first_request_ms(unwarmed)
+
+    cache_dir = tempfile.mkdtemp(prefix="freyja_wcache_")
+    try:
+        # 2) cold warmup: empty cache, full trace+compile wall off-path
+        cold = make_engine("serve", cache_dir)
+        rep = cold.warmup_report
+        out["cold"] = {k: rep[k] for k in
+                       ("n_plans", "n_executables", "cache_hits",
+                        "cache_misses", "compile_ms", "wall_ms")}
+        cursor = cold.events.subscribe("warmstart_gate")
+        out["warmed_first_request"], out["warmed_first_p99_ms"] = \
+            first_request_ms(cold)
+        compile_events = [ev.type for ev in cursor.poll()
+                          if ev.type in ("compile_begin", "compile_end")]
+        attributed = [b for b, e in out["warmed_first_request"].items()
+                      if e["compile_ms"] > 0.0]
+        out["zero_compile_after_warmup"] = (not compile_events
+                                            and not attributed)
+        out["post_warmup_compile_events"] = len(compile_events)
+        out["post_warmup_attributed_buckets"] = attributed
+        out["dispatch"] = cold.warmup_report and \
+            dict(cold._executor.dispatch_stats())
+
+        # 3) warm restart: same cache dir, everything deserializes
+        warm = make_engine("serve", cache_dir)
+        wrep = warm.warmup_report
+        out["warm"] = {k: wrep[k] for k in
+                       ("n_executables", "cache_hits", "cache_misses",
+                        "wall_ms")}
+        out["restart_speedup"] = (rep["wall_ms"]
+                                  / max(wrep["wall_ms"], 1e-9))
+        out["restart_first_request"], out["restart_first_p99_ms"] = \
+            first_request_ms(warm)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    return out
+
+
 def _strip_completions(r: dict) -> dict:
     """Drop the per-request completion log from a loadgen result before it
     lands in the bench JSON (the aggregates — latency_hist, trace_phases,
@@ -629,7 +745,7 @@ def open_loop_bench(record: dict | None = None, smoke: bool = False) -> dict:
 
 def run(smoke: bool = False, sweep_blocks: bool = False,
         batch_sweep_flag: bool = False, open_loop_flag: bool = False,
-        scale_sweep_flag: bool = False):
+        scale_sweep_flag: bool = False, warmstart_flag: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
@@ -642,8 +758,10 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     # --scale-sweep --smoke is the large-lake CI gate: like the open-loop
     # gate it skips the small-lake sweep (which has its own hook)
     scale_gate = smoke and scale_sweep_flag
-    table_sizes = (() if (open_loop_gate or scale_gate) else
-                   SMOKE_TABLE_SIZES if smoke else TABLE_SIZES)
+    # --warmstart --smoke is the zero-compile-serving CI gate; same skip
+    warmstart_gate = smoke and warmstart_flag
+    table_sizes = (() if (open_loop_gate or scale_gate or warmstart_gate)
+                   else SMOKE_TABLE_SIZES if smoke else TABLE_SIZES)
     n_queries = SMOKE_N_QUERIES if smoke else N_QUERIES
     model = bench_model()
     rows = []
@@ -656,7 +774,7 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     try:
         with open(OUT_JSON) as f:
             record = json.load(f)
-        if not (open_loop_gate or scale_gate):
+        if not (open_loop_gate or scale_gate or warmstart_gate):
             record["lakes"] = []
             record["smoke"] = smoke
     except (FileNotFoundError, json.JSONDecodeError):
@@ -798,6 +916,43 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
                     f"TRACE REGRESSION: max |sum(spans) - latency| = "
                     f"{err} ms (gate: <= 1.0, non-None)")
 
+    if warmstart_flag:
+        ws = warmstart_bench(smoke=smoke)
+        record["warmstart"] = ws
+        rows.append((
+            "service/warmstart/unwarmed", 0.0,
+            f"first-request p99 {ws['unwarmed_first_p99_ms']:.1f}ms "
+            f"(compile on the serving path)"))
+        rows.append((
+            "service/warmstart/cold", ws["cold"]["wall_ms"] * 1e3,
+            f"warmup {ws['cold']['n_executables']} executables in "
+            f"{ws['cold']['wall_ms']:.0f}ms; first-request p99 "
+            f"{ws['warmed_first_p99_ms']:.1f}ms, zero_compile="
+            f"{ws['zero_compile_after_warmup']}"))
+        rows.append((
+            "service/warmstart/warm", ws["warm"]["wall_ms"] * 1e3,
+            f"restart warmed {ws['warm']['cache_hits']}/"
+            f"{ws['warm']['n_executables']} from cache in "
+            f"{ws['warm']['wall_ms']:.0f}ms -> "
+            f"{ws['restart_speedup']:.1f}x faster than cold "
+            f"(gate >= {WARMSTART_SPEEDUP_GATE}x); first-request p99 "
+            f"{ws['restart_first_p99_ms']:.1f}ms"))
+        if not ws["zero_compile_after_warmup"]:
+            gate_failures.append(
+                f"WARMSTART REGRESSION: compile work on the serving path "
+                f"after warmup ({ws['post_warmup_compile_events']} compile "
+                f"events, compile_ms attributed at buckets "
+                f"{ws['post_warmup_attributed_buckets']})")
+        if ws["warm"]["cache_misses"]:
+            gate_failures.append(
+                f"WARMSTART REGRESSION: {ws['warm']['cache_misses']} cache "
+                f"misses on a warm restart (expected 0)")
+        if ws["restart_speedup"] < WARMSTART_SPEEDUP_GATE:
+            gate_failures.append(
+                f"WARMSTART REGRESSION: warm restart only "
+                f"{ws['restart_speedup']:.2f}x faster than cold warmup "
+                f"(gate >= {WARMSTART_SPEEDUP_GATE}x)")
+
     if scale_sweep_flag:
         sc = scale_sweep(smoke=smoke)
         record["scale_sweep" if not scale_gate else
@@ -888,9 +1043,18 @@ if __name__ == "__main__":
                          "coarse survivor fraction, lazy-vs-eager snapshot "
                          "open RSS); with --smoke, one 2e4-column lake "
                          "gated on recall/survivors/RSS")
+    ap.add_argument("--warmstart", action="store_true",
+                    help="measure AOT bucket-ladder warmup: unwarmed "
+                         "first-request compiles vs a warmed engine "
+                         "(gated to zero compile attribution) vs a warm "
+                         "restart from the persistent executable cache "
+                         "(gated to >= "
+                         f"{WARMSTART_SPEEDUP_GATE:.0f}x faster than the "
+                         "cold warmup)")
     args = ap.parse_args()
     for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks,
                  batch_sweep_flag=args.batch_sweep,
                  open_loop_flag=args.open_loop,
-                 scale_sweep_flag=args.scale_sweep):
+                 scale_sweep_flag=args.scale_sweep,
+                 warmstart_flag=args.warmstart):
         print(",".join(map(str, r)))

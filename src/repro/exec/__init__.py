@@ -20,7 +20,13 @@ candidate budget) into a :class:`QueryPlan` — including the
 per-stage cost model in ``launch.costmodel`` (injectable), and the
 :class:`Executor` runs any plan against one corpus view, caching corpus
 placements per grid geometry.
+
+AOT warmup (``Planner.plan_set`` → ``Executor.aot_compile``) pre-compiles
+the admissible (bucket × grid × plan kind) executable set before traffic,
+backed by the persistent on-disk :class:`ExecutableCache` so a restarted
+engine warms from serialized executables instead of re-tracing.
 """
+from repro.exec.aot import ExecutableCache, environment_signature
 from repro.exec.executor import Executor, pad_rows, pad_topk
 from repro.exec.plan import (DEFAULT_BATCH_BUCKETS, MODES, Planner,
                              PlannerConfig, QueryPlan)
@@ -31,5 +37,5 @@ __all__ = [
     "Executor", "pad_rows", "pad_topk",
     "DEFAULT_BATCH_BUCKETS", "MODES", "Planner", "PlannerConfig", "QueryPlan",
     "build_sharded_pipeline", "place_sharded_corpus",
-    "CANDIDATE_KINDS",
+    "CANDIDATE_KINDS", "ExecutableCache", "environment_signature",
 ]

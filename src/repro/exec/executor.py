@@ -43,6 +43,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.exec import stages
+from repro.exec.aot import tree_aval_descriptors
 from repro.exec.plan import QueryPlan
 from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
 from repro.kernels.profile_distance import dequantize, quantize_profiles
@@ -166,8 +167,9 @@ class Executor:
                  band_keys: np.ndarray | None = None,
                  coarse_keys: np.ndarray | None = None,
                  profile_dtype: str = "fp32", z_scale=None,
-                 survivor_block: int = 32,
-                 mesh=None, score_block: int = 4096, events=None):
+                 fp32_rows=None, survivor_block: int = 32,
+                 mesh=None, score_block: int = 4096, events=None,
+                 exec_cache=None):
         self.n_columns = int(z.shape[0])
         self.profile_dtype = str(profile_dtype)
         self.survivor_block = int(survivor_block)
@@ -188,6 +190,17 @@ class Executor:
             # exact re-rank gathers these few rows back
             self._zf_np = (None if self.profile_dtype == "fp32"
                            else np.asarray(z, np.float32))
+        # exact-rescore row source, in precedence order: an explicit
+        # gather callable (``ids -> (…, F) float32`` — the engine streaming
+        # a lazy memmapped snapshot re-z-scores just the gathered rows), a
+        # host fp32 copy of the corpus, or None (fp32 resident: the scan
+        # itself is exact and no re-rank runs)
+        if fp32_rows is not None:
+            self._fp32_rows = fp32_rows
+        elif self._zf_np is not None:
+            self._fp32_rows = self._zf_np.__getitem__
+        else:
+            self._fp32_rows = None
         self._w_np = np.asarray(w)
         self._tids_np = (np.asarray(table_ids, np.int32)
                          if table_ids is not None
@@ -213,6 +226,14 @@ class Executor:
         self._placed: dict[tuple, dict] = {}
         self._pipelines: dict[tuple, object] = {}
         self._grid_meshes: dict[tuple, Mesh] = {}
+        # AOT dispatch table: exact-shape executables registered by
+        # ``aot_compile`` (fresh lower+compile or a persistent-cache load).
+        # ``lower().compile()`` does NOT feed jax's jit call cache, so the
+        # serving path must dispatch through this dict to reuse them; a
+        # shape with no entry falls back to the plain jitted pipeline.
+        self._compiled: dict[tuple, object] = {}
+        self._exec_cache = exec_cache
+        self._dispatch_stats = {"aot": 0, "fallback": 0}
         self._closed = False
         # observability: duck-typed event sink (anything with
         # .publish(type, **payload) — service.events.EventBus; exec stays
@@ -239,6 +260,7 @@ class Executor:
         self._placed.clear()
         self._pipelines.clear()
         self._grid_meshes.clear()
+        self._compiled.clear()
         self._z = self._w = self._cids = self._tids = self._ckeys = None
         self._zscale = self._coarse = None
 
@@ -309,6 +331,179 @@ class Executor:
                 interpret=_interpret())
         return self._pipelines[key]
 
+    # -- AOT warmup ---------------------------------------------------------
+
+    def aot_compile(self, entries, *, cache=None) -> dict:
+        """AOT-compile (or load from the persistent executable cache) every
+        pipeline the ``(plan, padded_batch)`` pairs in ``entries`` would
+        touch, register them in the dispatch table, and pre-seed the
+        first-contact set — so a warmed shape's first real request carries
+        no ``compile_ms`` attribution and no compile event.
+
+        ``jit(...).lower(...).compile()`` bypasses jax's jit call cache,
+        which is exactly why the result must be held in ``self._compiled``
+        — and why the persistent-cache path is an honest restart
+        measurement: nothing in the process jit cache can serve it.
+
+        Publishes ``executable_cache_hit``/``executable_cache_miss`` per
+        unit (with a ``remaining`` countdown the metrics layer exposes as
+        the ``warmup_remaining`` gauge) and a ``compile_begin``/``end``
+        pair for every fresh compile, so warmup compiles land in the same
+        ``compile_ms`` histogram first-contact serving compiles do.
+        Inadmissible plans (no band keys / coarse digest / mesh) are
+        counted as skips, not errors.  Returns a report dict."""
+        if self._closed:
+            raise RuntimeError("executor is closed")
+        cache = cache if cache is not None else self._exec_cache
+        units, seen_units, planned, skipped = [], set(), [], 0
+        for plan, q in entries:
+            us = self._plan_units(plan, int(q))
+            if us is None:
+                skipped += 1
+                continue
+            planned.append((plan, int(q)))
+            for u in us:
+                if u["key"] not in seen_units:
+                    seen_units.add(u["key"])
+                    units.append(u)
+        report = {"n_plans": len(planned), "n_executables": len(units),
+                  "skipped_plans": skipped, "cache_hits": 0,
+                  "cache_misses": 0, "already_warm": 0, "compile_ms": 0.0}
+        remaining = len(units)
+        for u in units:
+            remaining -= 1
+            if u["key"] in self._compiled:
+                report["already_warm"] += 1
+                continue
+            sig = exe = None
+            if cache is not None:
+                sig = cache.signature(u["name"], u["statics"],
+                                      tree_aval_descriptors(u["dyn"]),
+                                      u["mesh_desc"])
+                exe = cache.load(sig)
+            if exe is not None:
+                report["cache_hits"] += 1
+                if self._events is not None:
+                    self._events.publish("executable_cache_hit",
+                                         name=u["name"], n_queries=u["q"],
+                                         remaining=remaining)
+            else:
+                if self._events is not None:
+                    self._events.publish("compile_begin", plan=u["name"],
+                                         grid=[], n_queries=u["q"], k=0,
+                                         source="warmup")
+                t0 = time.perf_counter()
+                exe = u["lower"]().compile()
+                ms = (time.perf_counter() - t0) * 1e3
+                report["cache_misses"] += 1
+                report["compile_ms"] += ms
+                if self._events is not None:
+                    self._events.publish("executable_cache_miss",
+                                         name=u["name"], n_queries=u["q"],
+                                         remaining=remaining)
+                    self._events.publish("compile_end", plan=u["name"],
+                                         grid=[], n_queries=u["q"], k=0,
+                                         ms=ms, source="warmup")
+                if cache is not None:
+                    cache.store(sig, exe)
+            self._compiled[u["key"]] = exe
+        for plan, q in planned:
+            self._seen_shapes.add((plan.kind, plan.k, plan.budget,
+                                   plan.grid, q))
+        return report
+
+    def _plan_units(self, plan: QueryPlan, q: int):
+        """Executable units — dispatch key, dynamic avals, lazy ``lower``
+        thunk, cache-signature fields — that ``plan`` touches at padded
+        batch ``q``: the scan pipeline, plus the exact-rescore re-rank when
+        the resident profiles are quantized.  None when this executor
+        cannot serve the plan at all."""
+        if self.n_columns == 0 or q <= 0:
+            return None
+        if plan.candidates != "all" and self._ckeys_np is None:
+            return None
+        if plan.candidates == "tiered" and (plan.sharded or
+                                            self._coarse_np is None):
+            return None
+        if plan.sharded and self.mesh is None:
+            return None
+        fnum = int(self._z_np.shape[1])
+        fw = int(self._w_np.shape[1])
+        wdt = self._w_np.dtype
+        S = jax.ShapeDtypeStruct
+        units = []
+        if plan.sharded:
+            mesh, axes, qaxes = self._plan_mesh_axes(plan)
+            corpus = self._corpus(plan)
+            # _execute_sharded pads the batch to a multiple of q_shards
+            qp = -(-q // plan.grid[0]) * plan.grid[0]
+            qsh = NamedSharding(mesh, P(qaxes) if qaxes else P())
+            sq = lambda shape, dt: S(shape, dt, sharding=qsh)
+            if plan.candidates == "all":
+                dyn = (corpus["z"], corpus["w"], corpus["cids"],
+                       corpus["tids"], sq((qp, fnum), np.float32),
+                       sq((qp, fw), wdt), sq((qp,), np.int32),
+                       sq((qp,), np.int32))
+            else:
+                nb = int(self._ckeys_np.shape[1])
+                dyn = (corpus["z"], corpus["w"], corpus["cids"],
+                       corpus["tids"], corpus["ckeys"],
+                       sq((qp, fnum), np.float32), sq((qp, fw), wdt),
+                       sq((qp, nb), np.uint32), sq((qp,), np.int32),
+                       sq((qp,), np.int32))
+            statics = self._sharded_statics(plan)
+            fn = self._pipeline(plan)
+            mesh_desc = (tuple(str(a) for a in mesh.axis_names),
+                         tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+                         tuple(axes), tuple(qaxes))
+            units.append(dict(
+                key=self._exe_key("sharded", qp, statics), name="sharded",
+                q=qp, statics=statics, dyn=dyn, mesh_desc=mesh_desc,
+                lower=lambda fn=fn, dyn=dyn: fn.lower(*dyn)))
+            if self._fp32_rows is not None:
+                # the sharded merge returns min(k, k_local · data shards)
+                # columns — that width is the rescore gather's R
+                d_total = 1
+                for a in axes:
+                    d_total *= int(mesh.shape[a])
+                local_cols = int(corpus["z"].shape[0]) // max(d_total, 1)
+                width = (plan.budget_per_shard
+                         if plan.candidates != "all" else local_cols)
+                r = min(plan.k, min(plan.k, max(width, 1)) * d_total)
+                units.append(self._rescore_unit(q, r, plan.k, fnum, fw, wdt))
+        else:
+            name, fn, statics = self._local_spec(plan)
+            zq, wq = S((q, fnum), np.float32), S((q, fw), wdt)
+            tqv, qidv = S((q,), np.int32), S((q,), np.int32)
+            qk = (S((q, int(self._ckeys_np.shape[1])), np.uint32)
+                  if plan.candidates != "all" else None)
+            qc = (S((q, int(self._coarse_np.shape[1])), np.uint32)
+                  if plan.candidates == "tiered" else None)
+            dyn = self._local_dyn(plan, zq, wq, tqv, qidv, qk, qc)
+            units.append(dict(
+                key=self._exe_key(name, q, statics), name=name, q=q,
+                statics=statics, dyn=dyn, mesh_desc=None,
+                lower=lambda fn=fn, dyn=dyn, statics=statics:
+                    fn.lower(*dyn, **statics)))
+            if self._fp32_rows is not None:
+                # local scans over-fetch: the pipeline's static k IS the
+                # width of the top set handed to the exact re-rank
+                units.append(self._rescore_unit(q, int(statics["k"]),
+                                                plan.k, fnum, fw, wdt))
+        return units
+
+    def _rescore_unit(self, q, r, k, fnum, fw, wdt):
+        S = jax.ShapeDtypeStruct
+        statics = dict(k=k)
+        dyn = (S((q, fnum), np.float32), S((q, fw), wdt),
+               S((q, r, fnum), np.float32), S((q, r, fw), wdt),
+               self._gbdt, S((q, r), np.float32), S((q, r), np.int32))
+        return dict(key=self._exe_key("_rescore_exact", q, statics, (r,)),
+                    name="_rescore_exact", q=q, statics=statics, dyn=dyn,
+                    mesh_desc=None,
+                    lower=lambda dyn=dyn, k=k:
+                        _rescore_exact.lower(*dyn, k=k))
+
     # -- entry point --------------------------------------------------------
 
     def execute(self, plan: QueryPlan, zq, wq, tq, qid, qkeys=None,
@@ -364,7 +559,7 @@ class Executor:
         else:
             sc, ids, n = self._execute_local(plan, zq, wq, tq, qid, qkeys,
                                              qcoarse)
-        if self._zf_np is not None:
+        if self._fp32_rows is not None:
             # exact fp32 re-rank of the quantized scan's top set (local
             # scans over-fetched RESCORE_MULT × k above; sharded scans
             # re-rank their returned k — ordering repaired, no recovery
@@ -403,43 +598,98 @@ class Executor:
     # -- internals ----------------------------------------------------------
 
     def _rescore(self, zq, wq, sc, ids, k: int):
-        """Gather the scan's candidate rows from the host fp32 source and
+        """Gather the scan's candidate rows from the fp32 source and
         re-rank them exactly.  The gather is (Q, R, F) with R a small
         multiple of k, so the cost is independent of the lake size."""
         ids_np = np.asarray(ids)
         safe = np.clip(ids_np, 0, self.n_columns - 1)
-        return _rescore_exact(
-            jnp.asarray(zq, jnp.float32), jnp.asarray(wq),
-            jnp.asarray(self._zf_np[safe]), jnp.asarray(self._w_np[safe]),
-            self._gbdt, jnp.asarray(np.asarray(sc)),
-            jnp.asarray(ids_np), k)
+        dyn = (jnp.asarray(zq, jnp.float32), jnp.asarray(wq),
+               jnp.asarray(np.asarray(self._fp32_rows(safe), np.float32)),
+               jnp.asarray(self._w_np[safe]), self._gbdt,
+               jnp.asarray(np.asarray(sc)), jnp.asarray(ids_np))
+        return self._call("_rescore_exact", _rescore_exact, dyn,
+                          dict(k=k), extra=(int(ids_np.shape[1]),))
+
+    # -- AOT dispatch -------------------------------------------------------
+
+    @staticmethod
+    def _exe_key(name: str, q: int, statics: dict, extra=()) -> tuple:
+        return (name, int(q), tuple(sorted(statics.items())), tuple(extra))
+
+    def _call(self, name, fn, dyn, statics: dict, extra=()):
+        """Dispatch one pipeline call: the AOT-compiled executable when
+        warmup registered this exact shape (statics are baked in, only the
+        dynamic args are passed), else the plain jitted fallback."""
+        exe = self._compiled.get(
+            self._exe_key(name, dyn[0].shape[0], statics, extra))
+        if exe is not None:
+            self._dispatch_stats["aot"] += 1
+            return exe(*dyn)
+        self._dispatch_stats["fallback"] += 1
+        return fn(*dyn, **statics)
+
+    def dispatch_stats(self) -> dict:
+        """AOT vs jit-fallback dispatch counts — a warmed engine serving
+        only ladder shapes must show zero fallbacks (test-gated)."""
+        return dict(self._dispatch_stats)
+
+    def _local_spec(self, plan: QueryPlan):
+        """(name, fn, statics) of the local pipeline ``plan`` runs — one
+        resolution shared by the serving dispatch and AOT warmup, so their
+        dispatch keys agree byte-for-byte."""
+        # quantized scans hand an over-fetched top set to the exact fp32
+        # re-rank in execute(); fp32 scans keep k as-is
+        k = (plan.k if self._fp32_rows is None
+             else max(plan.k, RESCORE_MULT * plan.k))
+        if plan.candidates == "all":
+            return ("_local_all", _local_all,
+                    dict(k=min(k, self.n_columns), block=self.score_block))
+        budget = min(plan.budget, self.n_columns)
+        if plan.candidates == "tiered":
+            surv = min(max(plan.survivor_budget, budget), self.n_columns)
+            return ("_local_tiered", _local_tiered,
+                    dict(k=min(k, budget, surv), budget=min(budget, surv),
+                         survivor_budget=surv, block_c=self.survivor_block,
+                         interpret=_interpret()))
+        return ("_local_pruned", _local_pruned,
+                dict(kind=plan.candidates, k=min(k, budget), budget=budget,
+                     interpret=_interpret()))
+
+    def _local_dyn(self, plan: QueryPlan, zq, wq, tq, qid, qkeys, qcoarse):
+        """Dynamic-argument tuple of the local pipeline, in call order."""
+        if plan.candidates == "all":
+            return (zq, wq, tq, qid, self._z, self._zscale, self._w,
+                    self._cids, self._tids, self._gbdt)
+        if plan.candidates == "tiered":
+            return (zq, wq, qkeys, qcoarse, tq, qid, self._z, self._zscale,
+                    self._w, self._ckeys, self._coarse, self._cids,
+                    self._tids, self._gbdt)
+        return (zq, wq, qkeys, tq, qid, self._z, self._zscale, self._w,
+                self._ckeys, self._cids, self._tids, self._gbdt)
+
+    def _sharded_statics(self, plan: QueryPlan) -> dict:
+        """Identity of a sharded pipeline for dispatch/cache keys — the
+        ``_pipeline`` cache key, spelled as a statics mapping."""
+        _, axes, qaxes = self._plan_mesh_axes(plan)
+        return dict(candidates=plan.candidates, k=plan.k,
+                    budget_per_shard=(plan.budget_per_shard
+                                      if plan.candidates != "all" else 0),
+                    axes=axes, grid=plan.grid if qaxes else ())
 
     def _execute_local(self, plan, zq, wq, tq, qid, qkeys, qcoarse=None):
         zq, wq = jnp.asarray(zq, jnp.float32), jnp.asarray(wq)
         tq = jnp.asarray(tq, jnp.int32)
         qid = jnp.asarray(qid, jnp.int32)
-        # quantized scans hand an over-fetched top set to the exact fp32
-        # re-rank in execute(); fp32 scans keep k as-is
-        k = (plan.k if self._zf_np is None
-             else max(plan.k, RESCORE_MULT * plan.k))
-        if plan.candidates == "all":
-            return _local_all(zq, wq, tq, qid, self._z, self._zscale,
-                              self._w, self._cids, self._tids, self._gbdt,
-                              min(k, self.n_columns), self.score_block)
-        budget = min(plan.budget, self.n_columns)
+        qkeys = jnp.asarray(qkeys) if qkeys is not None else None
+        qcoarse = jnp.asarray(qcoarse) if qcoarse is not None else None
+        name, fn, statics = self._local_spec(plan)
+        dyn = self._local_dyn(plan, zq, wq, tq, qid, qkeys, qcoarse)
+        out = self._call(name, fn, dyn, statics)
         if plan.candidates == "tiered":
-            surv = min(max(plan.survivor_budget, budget), self.n_columns)
-            sc, ids, n, n_hits, n_surv = _local_tiered(
-                zq, wq, jnp.asarray(qkeys), jnp.asarray(qcoarse), tq, qid,
-                self._z, self._zscale, self._w, self._ckeys, self._coarse,
-                self._cids, self._tids, self._gbdt, min(k, budget, surv),
-                min(budget, surv), surv, self.survivor_block, _interpret())
+            sc, ids, n, n_hits, n_surv = out
             self._tls.tier_stats = (np.asarray(n_hits), np.asarray(n_surv))
             return sc, ids, n
-        return _local_pruned(zq, wq, jnp.asarray(qkeys), tq, qid, self._z,
-                             self._zscale, self._w, self._ckeys, self._cids,
-                             self._tids, self._gbdt, plan.candidates,
-                             min(k, budget), budget, _interpret())
+        return out
 
     def _execute_sharded(self, plan, zq, wq, tq, qid, qkeys):
         corpus = self._corpus(plan)
@@ -455,15 +705,23 @@ class Executor:
         qsharding = NamedSharding(mesh, P(qaxes) if qaxes else P())
         put = lambda a, dt=None: jax.device_put(
             np.asarray(a, dt) if dt else np.asarray(a), qsharding)
-        fn = self._pipeline(plan)
         if plan.candidates == "all":
-            sc, ids, n = fn(corpus["z"], corpus["w"], corpus["cids"],
-                            corpus["tids"], put(zq, np.float32), put(wq),
-                            put(tq, np.int32), put(qid, np.int32))
+            args = (corpus["z"], corpus["w"], corpus["cids"],
+                    corpus["tids"], put(zq, np.float32), put(wq),
+                    put(tq, np.int32), put(qid, np.int32))
         else:
-            sc, ids, n = fn(corpus["z"], corpus["w"], corpus["cids"],
-                            corpus["tids"], corpus["ckeys"],
-                            put(zq, np.float32), put(wq),
-                            put(qkeys, np.uint32), put(tq, np.int32),
-                            put(qid, np.int32))
+            args = (corpus["z"], corpus["w"], corpus["cids"],
+                    corpus["tids"], corpus["ckeys"],
+                    put(zq, np.float32), put(wq),
+                    put(qkeys, np.uint32), put(tq, np.int32),
+                    put(qid, np.int32))
+        key = self._exe_key("sharded", np.asarray(zq).shape[0],
+                            self._sharded_statics(plan))
+        exe = self._compiled.get(key)
+        if exe is not None:
+            self._dispatch_stats["aot"] += 1
+            sc, ids, n = exe(*args)
+        else:
+            self._dispatch_stats["fallback"] += 1
+            sc, ids, n = self._pipeline(plan)(*args)
         return sc[:q], ids[:q], n[:q]

@@ -375,3 +375,78 @@ class Planner:
                          k=cfg.k, n_shards=g[1], grid=g,
                          shard_axes=tuple(cfg.shard_axes),
                          survivor_budget=surv, cost=cost)
+
+    # -- admissible-set enumeration (AOT warmup) ----------------------------
+
+    def _make_plan(self, cand: str, sharded: bool, grid: tuple,
+                   n_columns: int, n_queries: int) -> QueryPlan:
+        """A fully-resolved plan for an explicitly chosen (kind, placement)
+        — the budget/survivor resolution of :meth:`plan` without its mode
+        logic, so warmup can enumerate kinds the mode would not pick."""
+        budget = (n_columns if cand == "all"
+                  else self.candidate_budget(n_columns))
+        surv = (self.survivor_budget(n_columns, budget)
+                if cand == "tiered" else 0)
+        if cand == "tiered":
+            budget = min(budget, surv)
+        g = (int(grid[0]), int(grid[1]))
+        cost = self._cost(cand, n_queries, max(n_columns, 1),
+                          max(budget, 1), max(g[1], 1), g[0],
+                          survivor_budget=surv)
+        return QueryPlan(candidates=cand, sharded=sharded, budget=budget,
+                         k=self.config.k, n_shards=g[1], grid=g,
+                         shard_axes=tuple(self.config.shard_axes),
+                         survivor_budget=surv, cost=cost)
+
+    def plan_set(self, *, n_columns: int, n_queries: int = 1,
+                 mode: str = "auto", mesh=None, grid: tuple | None = None,
+                 scope: str = "serve") -> list[QueryPlan]:
+        """The admissible executable set for one padded batch size — what
+        AOT warmup compiles before the scheduler admits traffic.
+
+        ``scope="serve"``: the plan this (mode, batch, mesh) actually
+        executes, plus the exhaustive recall baseline ``measure_recall``
+        runs next to it (same placement family and grid, so the baseline's
+        first execution is warm too).  ``scope="full"``: additionally every
+        candidate kind (all/lsh→hybrid/tiered) crossed with the local
+        placement and every admissible :meth:`grid_options` factorization
+        of the mesh (or the operator-pinned ``grid`` alone, when set).
+        Deduplicated on the plan's identity fields; the executor skips any
+        enumerated plan its corpus can't serve (no band keys / coarse
+        digest / mesh)."""
+        if scope not in ("serve", "full"):
+            raise ValueError(f"unknown warmup scope {scope!r}; "
+                             f"want 'serve' or 'full'")
+        served = self.plan(n_columns=n_columns, n_queries=n_queries,
+                           mode=mode, mesh=mesh, grid=grid)
+        base = self.plan(n_columns=n_columns, n_queries=n_queries,
+                         mode="sharded" if served.sharded else "full",
+                         mesh=mesh if served.sharded else None,
+                         grid=served.grid if served.sharded else None)
+        plans = [served, base]
+        if scope == "full":
+            n_dev = self._n_shards(mesh)
+            if grid is not None:
+                grids = [(int(grid[0]), int(grid[1]))]
+            elif mesh is not None and n_dev > 1:
+                grids = self.grid_options(n_dev, n_queries, n_columns)
+            else:
+                grids = []
+            for cand in CANDIDATE_KINDS:
+                if cand == "tiered" and self.config.n_coarse_bands <= 0:
+                    continue                # no coarse digest to scan
+                plans.append(self._make_plan(cand, False, (1, 1),
+                                             n_columns, n_queries))
+                if cand == "tiered":
+                    continue                # tiered plans are local-only
+                for g in grids:
+                    plans.append(self._make_plan(cand, True, g,
+                                                 n_columns, n_queries))
+        out, seen = [], set()
+        for p in plans:
+            key = (p.candidates, p.sharded, p.budget, p.k, p.grid,
+                   p.survivor_budget)
+            if key not in seen:
+                seen.add(key)
+                out.append(p)
+        return out

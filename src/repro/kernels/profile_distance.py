@@ -189,6 +189,57 @@ def quantize_profiles(z: np.ndarray, dtype: str) -> tuple[np.ndarray, np.ndarray
     raise ValueError(f"unknown profile dtype {dtype!r}; want one of {PROFILE_DTYPES}")
 
 
+def quantize_profiles_streamed(numeric, mean, std, dtype: str, *,
+                               block: int = 8192
+                               ) -> tuple[np.ndarray, np.ndarray]:
+    """:func:`quantize_profiles` of ``(numeric - mean) / std`` without ever
+    materializing the z-scored fp32 matrix — the lazy-snapshot path, where
+    ``numeric`` is a read-only segment memmap and the eager z-score pass
+    would page the whole lake through host memory just to throw the fp32
+    away after quantization.  Blocks of ``block`` rows are z-scored and
+    quantized in flight; only the compact sidecar accumulates.
+
+    Byte-identical to the eager quantizer: int8's per-feature abs-max is
+    order-independent, so the two-pass stream (pass 1 reduces the abs-max,
+    pass 2 quantizes against it) lands on exactly the same scale.
+    """
+    mean = np.asarray(mean, np.float32)
+    std = np.asarray(std, np.float32)
+    c = int(numeric.shape[0])
+    f = int(numeric.shape[1]) if getattr(numeric, "ndim", 2) == 2 else 0
+    block = max(int(block), 1)
+    ones = np.ones((f,), np.float32)
+    zblock = lambda lo, hi: \
+        (np.asarray(numeric[lo:hi], np.float32) - mean) / std
+    if dtype == "fp32":
+        out = np.empty((c, f), np.float32)
+        for lo in range(0, c, block):
+            out[lo:lo + block] = zblock(lo, lo + block)
+        return out, ones
+    if dtype == "fp16":
+        out = np.empty((c, f), np.float16)
+        for lo in range(0, c, block):
+            out[lo:lo + block] = zblock(lo, lo + block).astype(np.float16)
+        return out, ones
+    if dtype == "int8":
+        amax = np.zeros((f,), np.float32)
+        for lo in range(0, c, block):        # pass 1: abs-max reduction
+            z = zblock(lo, lo + block)
+            if z.shape[0]:
+                np.maximum(amax, np.abs(z).max(axis=0), out=amax)
+        if c == 0:
+            amax = ones
+        scale = np.maximum(amax, 1e-12).astype(np.float32) / 127.0
+        out = np.empty((c, f), np.int8)
+        for lo in range(0, c, block):        # pass 2: quantize
+            z = zblock(lo, lo + block)
+            out[lo:lo + block] = np.clip(
+                np.rint(z / scale[None, :]), -127, 127).astype(np.int8)
+        return out, scale
+    raise ValueError(f"unknown profile dtype {dtype!r}; "
+                     f"want one of {PROFILE_DTYPES}")
+
+
 def dequantize(zc, scale):
     """Sidecar block (..., F) of any dtype + (F,) scale -> f32 (jnp-safe)."""
     if zc.dtype == jnp.float32:

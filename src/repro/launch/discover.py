@@ -103,7 +103,15 @@ def serve_mode(args, lake, model):
         EngineConfig(k=args.k, mode=args.mode,
                      lsh=LSHConfig(n_bands=args.lsh_bands),
                      cost_fn=cost_fn, grid=grid,
-                     metrics=args.metrics_port is not None), mesh=mesh)
+                     metrics=args.metrics_port is not None,
+                     warmup=(False if args.warmup == "off" else args.warmup),
+                     executable_cache_dir=args.executable_cache), mesh=mesh)
+    if engine.warmup_report is not None:
+        rep = engine.warmup_report
+        print(f"warmup[{rep['scope']}]: {rep['n_executables']} executables "
+              f"over buckets {rep['buckets']} in {rep['wall_ms']:.0f}ms "
+              f"({rep['cache_hits']} from cache, "
+              f"{rep['cache_misses']} compiled)")
     metrics_server = None
     if args.metrics_port is not None:
         from repro.service import MetricsServer
@@ -178,11 +186,14 @@ def open_loop_mode(args, engine, qids, closed_qps: float) -> None:
             for i, q in enumerate(qids)]
     # warm every bucket's compiled shape BEFORE offering load, or the
     # first formed batch at each new size pays its jit compile against
-    # the deadline and the printed numbers measure XLA, not serving
+    # the deadline and the printed numbers measure XLA, not serving.
+    # engine.warmup() AOT-compiles the ladder (through the persistent
+    # executable cache when one is configured) without serving traffic
     engine.config.batch_buckets = buckets
     engine.planner.config.batch_buckets = buckets
-    for b in buckets:
-        engine.query_batch([pool[i % len(pool)] for i in range(b)])
+    rep = engine.warmup("serve")
+    print(f"open-loop warmup: {rep['n_executables']} executables in "
+          f"{rep['wall_ms']:.0f}ms ({rep['cache_hits']} from cache)")
     r = run_open_loop(engine, pool, offered, args.open_loop_duration,
                       args.deadline_ms,
                       scheduler_config=SchedulerConfig(batch_buckets=buckets))
@@ -246,6 +257,20 @@ def main():
                     help="per-request deadline for the open-loop run")
     ap.add_argument("--open-loop-duration", type=float, default=2.0,
                     help="seconds of Poisson arrivals to offer")
+    ap.add_argument("--warmup", default="off",
+                    choices=["off", "serve", "full"],
+                    help="AOT-compile the padded-batch bucket ladder before "
+                         "serving: 'serve' warms the configured mode's "
+                         "plans (+ recall baseline), 'full' every "
+                         "admissible plan kind x grid factorization")
+    ap.add_argument("--executable-cache", default=None, metavar="DIR",
+                    help="persistent executable cache directory: warmup "
+                         "stores serialized XLA executables there and a "
+                         "restarted engine loads them instead of "
+                         "recompiling (keyed by jax version, backend, "
+                         "device kind/count, mesh geometry, and plan "
+                         "signature — any drift falls back to a fresh "
+                         "compile)")
     ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
                     help="enable the observability plane (event bus + "
                          "metrics registry) and serve the Prometheus text "

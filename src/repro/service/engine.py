@@ -63,7 +63,9 @@ import numpy as np
 from repro.core import features as FT
 from repro.core.ingest import ingest_string_columns
 from repro.core.predictor import JoinQualityModel
-from repro.exec import MODES, Executor, Planner, PlannerConfig, pad_rows
+from repro.exec import (DEFAULT_BATCH_BUCKETS, MODES, Executor,
+                        ExecutableCache, Planner, PlannerConfig, pad_rows)
+from repro.kernels.profile_distance import quantize_profiles_streamed
 from repro.service import events as EV
 from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
 from repro.service.catalog import (CatalogSnapshot, CatalogStore,
@@ -104,6 +106,16 @@ class EngineConfig:
     # event-free; per-request phase traces are recorded either way
     metrics: bool = False
     event_capacity: int = 8192
+    # AOT warmup: False = first-contact compiles on the serving path
+    # (legacy); True / "serve" = pre-compile the bucket-ladder executables
+    # the configured mode would serve before traffic; "full" = every
+    # admissible (bucket × grid × plan kind) executable.  The scheduler
+    # holds batch dispatch until ``engine.warm_event`` sets (see
+    # SchedulerConfig.wait_for_warm)
+    warmup: bool | str = False
+    # persistent executable cache directory (shared across engine
+    # processes); None keeps warmup in-process only — a restart re-compiles
+    executable_cache_dir: str | None = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -112,7 +124,9 @@ class _VersionState:
     after construction and released by refcount."""
 
     snapshot: CatalogSnapshot
-    z: np.ndarray                      # zscored numeric profiles (C, F_NUM)
+    # zscored numeric profiles (C, F_NUM): a fp32 ndarray, or a lazy
+    # ZscoreView (lazy snapshot + quantized sidecar) — both row-indexable
+    z: np.ndarray
     w: np.ndarray                      # word features (C, F_WORDS)
     lsh: LSHIndex
     executor: Executor
@@ -169,7 +183,18 @@ class DiscoveryEngine:
             from repro.service.metrics import ServiceMetrics
             self.events = EV.EventBus(capacity=config.event_capacity)
             self.metrics = ServiceMetrics(self.events)
+        # AOT warmup plane: the cache is shared by every version's
+        # executor; warm_event starts SET so a never-warmed engine (or a
+        # scheduler racing construction) is not held hostage — warmup()
+        # clears it only for its own duration
+        self._exec_cache = (ExecutableCache(config.executable_cache_dir)
+                            if config.executable_cache_dir else None)
+        self.warm_event = threading.Event()
+        self.warm_event.set()
+        self.warmup_report: dict | None = None
         self.refresh(snapshot)
+        if config.warmup:
+            self.warmup()
 
     @classmethod
     def from_catalog(cls, catalog: CatalogStore, model: JoinQualityModel,
@@ -194,6 +219,12 @@ class DiscoveryEngine:
             self._counters["refreshes"] += 1
         if old is not None:
             self._release(old)
+        # a refreshed version means a fresh executor with an empty dispatch
+        # table — re-warm it so the swap doesn't reintroduce first-contact
+        # compiles (guarded on a prior warmup: __init__'s refresh runs
+        # before the configured warmup, which then warms the head itself)
+        if self.config.warmup and self.warmup_report is not None:
+            self.warmup()
 
     def follow(self, reader) -> None:
         """Attach a :class:`~repro.service.catalog.CatalogReader`; every
@@ -212,6 +243,69 @@ class DiscoveryEngine:
         ``RequestScheduler.__init__``; the latest attached wins)."""
         self._scheduler = scheduler
 
+    # -- AOT warmup ----------------------------------------------------------
+
+    def warmup(self, scope: str | None = None) -> dict:
+        """AOT-compile the admissible executable set before admitting
+        traffic: every bucket of the padded-batch ladder × the plans
+        :meth:`Planner.plan_set` enumerates for it (``scope="serve"`` —
+        the served plan plus its recall baseline; ``scope="full"`` — every
+        admissible candidate kind × grid factorization).  Executables come
+        from the persistent :class:`~repro.exec.ExecutableCache` when
+        ``executable_cache_dir`` is set and the signature matches, else
+        from a fresh ``lower().compile()`` that is then stored — so a
+        restarted engine warms from disk in milliseconds.
+
+        ``warm_event`` is cleared for the duration; a scheduler with
+        ``wait_for_warm`` holds batch dispatch until it sets again.
+        Returns (and stashes as ``warmup_report``) the compile/hit counts
+        and walls."""
+        if scope is None:
+            w = self.config.warmup
+            scope = w if isinstance(w, str) and w else "serve"
+        if scope not in ("serve", "full"):
+            raise ValueError(f"unknown warmup scope {scope!r}; "
+                             f"want 'serve' or 'full'")
+        if not self.planner.config.batch_buckets:
+            # no ladder configured (scheduler not constructed yet, or a
+            # direct-call engine): warm the default ladder, and install it
+            # so serving actually pads onto the warmed shapes
+            ladder = tuple(DEFAULT_BATCH_BUCKETS)
+            self.config.batch_buckets = ladder
+            self.planner.config.batch_buckets = ladder
+        buckets = tuple(sorted({int(b)
+                                for b in self.planner.config.batch_buckets}))
+        t0 = time.perf_counter()
+        self.warm_event.clear()
+        st = self._pin()
+        try:
+            entries = [(plan, b) for b in buckets
+                       for plan in self.planner.plan_set(
+                           n_columns=st.snapshot.n_columns, n_queries=b,
+                           mode=self.config.mode, mesh=self.mesh,
+                           grid=self.config.grid, scope=scope)]
+            if self.events is not None:
+                self.events.publish(EV.WARMUP_BEGIN, scope=scope,
+                                    buckets=list(buckets),
+                                    n_plans=len(entries))
+            report = st.executor.aot_compile(entries,
+                                             cache=self._exec_cache)
+        finally:
+            self._release(st)
+            self.warm_event.set()
+        report["scope"] = scope
+        report["buckets"] = list(buckets)
+        report["wall_ms"] = (time.perf_counter() - t0) * 1e3
+        if self.events is not None:
+            self.events.publish(
+                EV.WARMUP_END, scope=scope,
+                executables=report["n_executables"],
+                cache_hits=report["cache_hits"],
+                cache_misses=report["cache_misses"],
+                wall_ms=report["wall_ms"])
+        self.warmup_report = report
+        return report
+
     def _maybe_follow(self) -> None:
         reader = self._reader
         if reader is None:
@@ -223,15 +317,35 @@ class DiscoveryEngine:
 
     def _build_state(self, snapshot: CatalogSnapshot) -> _VersionState:
         prof = snapshot.profiles
-        z = prof.zscored.astype(np.float32)
         w = prof.words
         lsh = LSHIndex.build(snapshot.signatures, self.config.lsh)
+        dt = self.config.profile_dtype
+        if snapshot.lazy and dt != "fp32":
+            # lazy snapshot + quantized sidecar: stream the quantizer over
+            # the memmapped raw profiles in blocks (byte-identical sidecar
+            # to the eager path) and never materialize the lake-sized fp32
+            # z-score matrix — per-row resolve and the exact rescore
+            # re-z-score just the rows they gather, through the lazy view
+            sidecar, scale = quantize_profiles_streamed(
+                prof.numeric, prof.mean, prof.std, dt)
+            zv = prof.zscored_view()
+            executor = Executor(
+                sidecar, w, self.model.gbdt.astuple(),
+                table_ids=snapshot.table_ids, band_keys=lsh.keys,
+                coarse_keys=lsh.coarse, profile_dtype=dt,
+                z_scale=scale, fp32_rows=zv.__getitem__,
+                mesh=self.mesh, events=self.events,
+                exec_cache=self._exec_cache)
+            return _VersionState(snapshot=snapshot, z=zv, w=w, lsh=lsh,
+                                 executor=executor)
+        z = prof.zscored.astype(np.float32)
         executor = Executor(
             z, w, self.model.gbdt.astuple(),
             table_ids=snapshot.table_ids, band_keys=lsh.keys,
             coarse_keys=lsh.coarse,
-            profile_dtype=self.config.profile_dtype,
-            mesh=self.mesh, events=self.events)
+            profile_dtype=dt,
+            mesh=self.mesh, events=self.events,
+            exec_cache=self._exec_cache)
         return _VersionState(snapshot=snapshot, z=z, w=w, lsh=lsh,
                              executor=executor)
 

@@ -34,6 +34,14 @@ Event taxonomy (the ``type`` strings components publish):
                             the lake (survivor counts + fraction)
 ``fine_probe``              tiered candidate stage: banded probe + scoring
                             ran on the gathered survivors
+``warmup_begin``            engine AOT warmup started (scope, buckets,
+                            n_plans)
+``warmup_end``              warmup finished (executables, hits/misses,
+                            wall_ms)
+``executable_cache_hit``    warmup loaded one executable from the
+                            persistent cache (``remaining`` counts down)
+``executable_cache_miss``   warmup compiled one executable fresh (a
+                            ``compile_begin``/``end`` pair brackets it)
 ==========================  =================================================
 
 Payloads are free-form keyword dicts; the constants below are the
@@ -63,6 +71,10 @@ COMPACTION_PUBLISHED = "compaction_published"
 MANIFEST_ADVANCED = "manifest_advanced"
 COARSE_PASS = "coarse_pass"
 FINE_PROBE = "fine_probe"
+WARMUP_BEGIN = "warmup_begin"
+WARMUP_END = "warmup_end"
+EXECUTABLE_CACHE_HIT = "executable_cache_hit"
+EXECUTABLE_CACHE_MISS = "executable_cache_miss"
 
 EVENT_TYPES = (
     REQUEST_ADMITTED, REQUEST_SHED, REQUEST_EXPIRED, BATCH_FORMED,
@@ -70,6 +82,7 @@ EVENT_TYPES = (
     SNAPSHOT_PINNED, SNAPSHOT_RETIRED,
     COMPACTION_STARTED, COMPACTION_PUBLISHED, MANIFEST_ADVANCED,
     COARSE_PASS, FINE_PROBE,
+    WARMUP_BEGIN, WARMUP_END, EXECUTABLE_CACHE_HIT, EXECUTABLE_CACHE_MISS,
 )
 
 # trace ids: cheap, process-unique, monotonic within a session — NOT

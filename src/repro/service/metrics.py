@@ -266,6 +266,17 @@ class ServiceMetrics:
         self.compile_ms = r.histogram(
             "compile_ms", "first-contact compile+execute wall (ms)",
             buckets=COMPILE_BUCKETS_MS)
+        self.warmups = r.counter(
+            "warmups_total", "engine AOT warmup passes completed")
+        self.executable_cache_hits = r.counter(
+            "executable_cache_hits_total",
+            "warmup executables loaded from the persistent cache")
+        self.executable_cache_misses = r.counter(
+            "executable_cache_misses_total",
+            "warmup executables compiled fresh (cache miss)")
+        self.warmup_remaining = r.gauge(
+            "warmup_remaining",
+            "executables still to warm in the running warmup pass")
         self.snapshot_pins = r.counter(
             "snapshot_pins_total", "MVCC snapshot pins")
         self.snapshots_retired = r.counter(
@@ -357,6 +368,21 @@ class ServiceMetrics:
             elif ev.type == EV.COMPILE_END:
                 self.compiles.inc()
                 self.compile_ms.observe(ev.payload.get("ms", 0.0))
+            elif ev.type == EV.WARMUP_BEGIN:
+                self.warmup_remaining.set(ev.payload.get("n_plans", 0))
+            elif ev.type == EV.WARMUP_END:
+                self.warmups.inc()
+                self.warmup_remaining.set(0)
+            elif ev.type == EV.EXECUTABLE_CACHE_HIT:
+                self.executable_cache_hits.inc()
+                rem = ev.payload.get("remaining")
+                if rem is not None:
+                    self.warmup_remaining.set(rem)
+            elif ev.type == EV.EXECUTABLE_CACHE_MISS:
+                self.executable_cache_misses.inc()
+                rem = ev.payload.get("remaining")
+                if rem is not None:
+                    self.warmup_remaining.set(rem)
             elif ev.type == EV.COARSE_PASS:
                 self.coarse_passes.inc()
                 frac = ev.payload.get("survivor_fraction")

@@ -81,6 +81,11 @@ class SchedulerConfig:
     # padded-batch bucket ladder; None = the engine's configured ladder,
     # falling back to exec.plan.DEFAULT_BATCH_BUCKETS
     batch_buckets: tuple | None = None
+    # hold batch dispatch while the engine's AOT warmup is running
+    # (engine.warm_event cleared): admission keeps accepting, deadlines
+    # keep counting, but no batch pays a first-contact compile mid-warmup.
+    # False dispatches through a running warmup (legacy behaviour)
+    wait_for_warm: bool = True
 
 
 @dataclasses.dataclass(eq=False)
@@ -137,7 +142,8 @@ class RequestScheduler:
         self._counters = {"submitted": 0, "completed": 0, "failed": 0,
                           "shed": 0, "expired": 0, "batches": 0,
                           "bucket_hits": 0, "bucket_misses": 0,
-                          "window_shrunk": 0, "max_queue_depth": 0}
+                          "window_shrunk": 0, "max_queue_depth": 0,
+                          "warm_held": 0}
         self._batch_hist: dict[int, int] = {}
         # observability plane: adopt the engine's bus/metrics when it has
         # one (EngineConfig.metrics=True); every publish site guards on
@@ -233,7 +239,24 @@ class RequestScheduler:
             if items is None:
                 return
             if items:
+                self._wait_for_warm()
                 self._run_batch(items)
+
+    def _wait_for_warm(self) -> None:
+        """Hold batch dispatch while the engine's AOT warmup runs (its
+        ``warm_event`` is cleared only for a warmup's duration — it starts
+        set, so a never-warmed engine is never held).  Polled so a
+        ``close()`` during warmup still shuts the worker down promptly."""
+        if not self.config.wait_for_warm:
+            return
+        ev = getattr(self.engine, "warm_event", None)
+        if ev is None or ev.is_set():
+            return
+        self._counters["warm_held"] += 1
+        while not ev.wait(timeout=0.05):
+            with self._cv:
+                if self._stop:
+                    return
 
     def _next_batch(self) -> list[_Item] | None:
         """Block for arrivals, coalesce within the wait window, then pop
