@@ -53,6 +53,17 @@ trace attribution, then a warm restart over the populated cache gated to
 warm ≥ 5× faster than the cold compile pass.  Results land under
 ``warmstart`` in the JSON; ``--warmstart --smoke`` is the CI gate.
 
+``--fleet-sweep`` measures **goodput vs engine-replica count** through
+the :class:`EngineFleet` router.  Replica compute is device-emulated —
+the measured real per-batch wall replayed as a GIL-releasing sleep per
+replica thread — so the gated near-linear-scaling number isolates the
+router/lifecycle overhead instead of re-measuring the host's core count
+(real-engine numbers are recorded too, ungated).  A second section
+drives a 4-replica fleet under load with one replica **killed
+mid-batch** and gates on zero lost requests.  Results land under
+``fleet_sweep`` in the JSON; ``--fleet-sweep --smoke`` is the fleet CI
+gate (scaling >= 2.5x at 4 replicas, zero lost, >= 1 re-dispatch).
+
 The open-loop runs drive a **metrics-enabled** engine (event bus +
 Prometheus registry + live HTTP endpoint) and record the registry
 snapshot plus per-phase trace percentiles under ``observability``.
@@ -70,6 +81,7 @@ import json
 import os
 import shutil
 import tempfile
+import time
 
 import numpy as np
 
@@ -109,6 +121,25 @@ WARMSTART_TABLES = 45
 WARMSTART_BUCKETS = (8, 16, 32)
 WARMSTART_SMOKE_BUCKETS = (8, 16)
 WARMSTART_SPEEDUP_GATE = 5.0      # warm restart vs cold warmup wall
+
+# --fleet-sweep: goodput vs replica count through the EngineFleet router.
+# The scaling gate runs against DEVICE-EMULATED replica execution: each
+# replica's batch wall is a GIL-releasing sleep replaying the measured
+# real per-batch compute, emulating replicas pinned to their own device
+# slices (this host shares one CPU between all replica threads, so real
+# thread-parallel compute cannot scale and would gate on the host's core
+# count, not the router).  The real-engine numbers are recorded too,
+# ungated, labeled per-host.
+FLEET_TABLES = 45
+FLEET_REPLICAS = (1, 2, 4)
+FLEET_SMOKE_REPLICAS = (1, 4)
+FLEET_BUCKET = 8                       # one warmed bucket: router-bound run
+FLEET_MIN_BATCH_S = 0.02               # emulation floor: bounds arrivals
+FLEET_DURATION_S = 2.0
+FLEET_DEADLINE_MS = 2000.0
+FLEET_OVERLOAD = 1.3                   # offered / per-config capacity
+FLEET_SCALING_GATE = 2.5               # goodput(4 replicas) / goodput(1)
+FLEET_KILL_LOAD = 0.7                  # offered / capacity for the kill run
 
 # --open-loop: Poisson-arrival serving through the scheduler
 OPEN_LOOP_TABLES = 90
@@ -524,6 +555,229 @@ def warmstart_bench(smoke: bool = False) -> dict:
     return out
 
 
+def fleet_sweep(smoke: bool = False) -> dict:
+    """Goodput vs replica count through :class:`EngineFleet`, plus the
+    zero-lost-requests gate under an injected replica kill.
+
+    **Scaling section (gated):** each replica's execution is
+    device-emulated — its ``query_batch`` sleeps the *measured* real
+    per-batch compute wall (GIL-releasing, like a device dispatch) and
+    returns canned responses, so N replica threads overlap exactly as N
+    device slices would.  On this single-socket host, real thread-parallel
+    scoring serializes on the cores and would measure the host, not the
+    router; the emulation isolates what this benchmark is for — routing,
+    queueing, and lifecycle overhead at N replicas.  Each replica count is
+    driven {ovl}x past its own aggregate capacity and goodput (completions
+    within the deadline / wall) is recorded; the gate is
+    ``goodput(4) >= {gate}x goodput(1)``.
+
+    **Kill section (gated):** a 4-replica fleet under load with one
+    replica killed mid-batch via :class:`FaultInjector`.  Every accepted
+    future must resolve — re-dispatched completion, deadline expiry, or a
+    clean error — with ``lost == 0`` and at least one re-dispatch.
+
+    **Real-engine section (ungated, skipped in smoke):** the same sweep
+    over real engines on per-replica sub-meshes
+    (:func:`make_replica_meshes`) — honest per-host numbers that scale
+    only as far as the host's parallelism does.
+    """.format(ovl=FLEET_OVERLOAD, gate=FLEET_SCALING_GATE)
+    import dataclasses as _dc
+    from concurrent.futures import TimeoutError as FuturesTimeout
+
+    import jax
+
+    from repro.launch.mesh import make_replica_meshes
+    from repro.service import (ColumnCatalog, DeadlineExpired,
+                               DiscoveryEngine, DiscoveryRequest,
+                               EngineConfig, EngineFleet, FaultInjector,
+                               FleetConfig, LSHConfig, RequestScheduler,
+                               SchedulerConfig, SchedulerOverloadError,
+                               add_lake)
+    from repro.service.loadgen import run_open_loop
+
+    n_dev = len(jax.devices())
+    lake = bench_lake(seed=1, n_tables=FLEET_TABLES)
+    model = bench_model()
+    root = tempfile.mkdtemp(prefix="freyja_fleet_")
+    try:
+        add_lake(ColumnCatalog(root, n_perm=128), lake)
+        snapshot = ColumnCatalog(root).snapshot()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    c = snapshot.n_columns
+    rng = np.random.default_rng(11)
+    pool = [DiscoveryRequest(name=f"fl{i}", column_id=int(col))
+            for i, col in enumerate(rng.integers(0, c, size=256))]
+    B = FLEET_BUCKET
+
+    def base_config():
+        return EngineConfig(k=10, mode="lsh", lsh=LSHConfig(n_bands=64),
+                            candidate_frac=0.2, cache_entries=0,
+                            batch_buckets=(B,))
+
+    # measure the real per-batch device wall once (median of 5 after a
+    # compile warm-up) — this is the wall the emulated replicas replay
+    probe = DiscoveryEngine(snapshot, model, base_config())
+    canned = probe.query_batch(pool[:B])
+    times = []
+    for _ in range(5):
+        with Timer() as t:
+            probe.query_batch(pool[:B])
+        times.append(t.s)
+    measured_s = float(np.median(times))
+    per_batch_s = max(measured_s, FLEET_MIN_BATCH_S)
+
+    def make_emulated():
+        eng = DiscoveryEngine(snapshot, model, base_config())
+
+        def emu_query_batch(reqs, trace_ids=None, **kw):
+            time.sleep(per_batch_s)        # the emulated device-slice wall
+            per_q = per_batch_s * 1e3 / max(len(reqs), 1)
+            return [_dc.replace(canned[i % len(canned)], name=r.name,
+                                queue_ms=0.0, compute_ms=per_q,
+                                latency_ms=per_q,
+                                trace_id=(trace_ids[i] if trace_ids
+                                          else None),
+                                trace=[{"phase": "execute", "ms": per_q}])
+                    for i, r in enumerate(reqs)]
+
+        eng.query_batch = emu_query_batch
+        return eng
+
+    replicas = FLEET_SMOKE_REPLICAS if smoke else FLEET_REPLICAS
+    duration = FLEET_DURATION_S * (0.5 if smoke else 1.0)
+    cap_1 = B / per_batch_s                # one emulated replica's QPS
+    out = {"smoke": smoke, "n_columns": c, "bucket": B,
+           "measured_batch_s": measured_s,
+           "emulated_batch_s": per_batch_s,
+           "emulation": ("replica compute device-emulated: measured "
+                         "per-batch wall replayed as a GIL-releasing "
+                         "sleep per replica thread (single-socket host; "
+                         "see docstring)"),
+           "capacity_per_replica_qps": cap_1,
+           "scaling_gate": FLEET_SCALING_GATE, "sweep": []}
+
+    def run_fleet(n, offered, seed):
+        fleet = EngineFleet([make_emulated() for _ in range(n)],
+                            FleetConfig(health_interval_s=0.25))
+        try:
+            # coalescing window matched to the offered rate so formed
+            # batches fill the bucket at EVERY replica count — the
+            # emulated wall is per bucket-padded batch (as on a real
+            # device), so unmatched windows would measure batch-formation
+            # luck, not replica scaling
+            cfg = SchedulerConfig(max_batch=B,
+                                  max_wait_ms=1e3 * B / offered)
+            r = run_open_loop(
+                fleet, pool, offered, duration, FLEET_DEADLINE_MS,
+                scheduler_config=cfg, seed=seed,
+                max_arrivals=OPEN_LOOP_MAX_ARRIVALS)
+            fs = fleet.stats()
+        finally:
+            fleet.close(drain=False)
+        r = _strip_completions(r)
+        r["fleet"] = {k: fs[k] for k in
+                      ("dispatched", "completed", "failed", "redispatches",
+                       "evictions")}
+        r["per_replica_batches"] = {rid: v["batches_served"]
+                                    for rid, v in fs["replicas"].items()}
+        return r
+
+    for i, n in enumerate(replicas):
+        offered = FLEET_OVERLOAD * n * cap_1
+        entry = {"replicas": n, "target_offered_qps": offered,
+                 **run_fleet(n, offered, seed=i)}
+        out["sweep"].append(entry)
+    good = {e["replicas"]: e["goodput_qps"] for e in out["sweep"]}
+    out["scaling_4_over_1"] = good.get(4, 0.0) / max(good.get(1, 1e-9),
+                                                     1e-9)
+
+    # ---- kill section: one replica killed mid-batch under live load ----
+    inj = FaultInjector()
+    inj.arm("mid_batch", mode="kill")
+    fleet = EngineFleet([make_emulated() for _ in range(4)],
+                        FleetConfig(health_interval_s=0.1), injector=inj)
+    accepted, shed, ok, expired, failed, lost = [], 0, 0, 0, 0, 0
+    try:
+        offered = FLEET_KILL_LOAD * 4 * cap_1
+        with RequestScheduler(
+                fleet, SchedulerConfig(
+                    max_batch=B,
+                    max_wait_ms=1e3 * B / offered)) as sch:
+            n_arr = min(int(offered * duration),
+                        OPEN_LOOP_MAX_ARRIVALS)
+            arr = np.cumsum(np.random.default_rng(23)
+                            .exponential(1.0 / offered, size=n_arr))
+            t0 = time.perf_counter()
+            for i in range(n_arr):
+                gap = arr[i] - (time.perf_counter() - t0)
+                if gap > 0:
+                    time.sleep(gap)
+                try:
+                    accepted.append(sch.submit(
+                        pool[i % len(pool)],
+                        deadline_ms=FLEET_DEADLINE_MS))
+                except SchedulerOverloadError:
+                    shed += 1
+            for f in accepted:
+                try:
+                    f.result(timeout=120)
+                    ok += 1
+                except DeadlineExpired:
+                    expired += 1
+                except FuturesTimeout:
+                    lost += 1              # a silently dropped request
+                except Exception:
+                    failed += 1
+        fs = fleet.stats()
+    finally:
+        inj.release_hangs()
+        fleet.close(drain=False)
+    out["kill"] = {
+        "offered": n_arr + shed, "accepted": len(accepted), "shed": shed,
+        "completed": ok, "expired": expired, "failed": failed,
+        "lost": lost, "redispatches": fs["redispatches"],
+        "evictions": fs["evictions"], "fired": list(inj.fired),
+    }
+
+    # ---- real-engine section (ungated; the host's own parallelism) ----
+    if not smoke:
+        meshes = make_replica_meshes(max(replicas), devices=jax.devices())
+        real = {"n_devices": n_dev,
+                "submesh_devices": (meshes[0].devices.size
+                                    if meshes[0] is not None else 0),
+                "sweep": []}
+        rprobe = DiscoveryEngine(snapshot, model, base_config(),
+                                 mesh=meshes[0])
+        rprobe.query_batch(pool[:B])
+        with Timer() as t:
+            rprobe.query_batch(pool[:B])
+        rcap = B / max(t.s, 1e-9)
+        for i, n in enumerate((1, max(replicas))):
+            sub = make_replica_meshes(n, devices=jax.devices())
+            engines = []
+            for m in sub[:n]:
+                e = DiscoveryEngine(snapshot, model, base_config(), mesh=m)
+                e.query_batch(pool[:B])    # warm each replica's compile
+                engines.append(e)
+            fleet = EngineFleet(engines, FleetConfig())
+            try:
+                r_off = FLEET_OVERLOAD * n * rcap
+                r = run_open_loop(
+                    fleet, pool, r_off, duration, FLEET_DEADLINE_MS,
+                    scheduler_config=SchedulerConfig(
+                        max_batch=B, max_wait_ms=1e3 * B / r_off),
+                    seed=40 + i, max_arrivals=OPEN_LOOP_MAX_ARRIVALS)
+            finally:
+                fleet.close(drain=False)
+            real["sweep"].append({"replicas": n,
+                                  **_strip_completions(r)})
+        g = {e["replicas"]: e["goodput_qps"] for e in real["sweep"]}
+        real["scaling"] = (g[max(replicas)] / max(g[1], 1e-9))
+        out["real_engine"] = real
+    return out
+
+
 def _strip_completions(r: dict) -> dict:
     """Drop the per-request completion log from a loadgen result before it
     lands in the bench JSON (the aggregates — latency_hist, trace_phases,
@@ -745,7 +999,8 @@ def open_loop_bench(record: dict | None = None, smoke: bool = False) -> dict:
 
 def run(smoke: bool = False, sweep_blocks: bool = False,
         batch_sweep_flag: bool = False, open_loop_flag: bool = False,
-        scale_sweep_flag: bool = False, warmstart_flag: bool = False):
+        scale_sweep_flag: bool = False, warmstart_flag: bool = False,
+        fleet_sweep_flag: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
@@ -760,7 +1015,10 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     scale_gate = smoke and scale_sweep_flag
     # --warmstart --smoke is the zero-compile-serving CI gate; same skip
     warmstart_gate = smoke and warmstart_flag
-    table_sizes = (() if (open_loop_gate or scale_gate or warmstart_gate)
+    # --fleet-sweep --smoke is the replica-fleet CI gate; same skip
+    fleet_gate = smoke and fleet_sweep_flag
+    table_sizes = (() if (open_loop_gate or scale_gate or warmstart_gate
+                          or fleet_gate)
                    else SMOKE_TABLE_SIZES if smoke else TABLE_SIZES)
     n_queries = SMOKE_N_QUERIES if smoke else N_QUERIES
     model = bench_model()
@@ -774,7 +1032,8 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     try:
         with open(OUT_JSON) as f:
             record = json.load(f)
-        if not (open_loop_gate or scale_gate or warmstart_gate):
+        if not (open_loop_gate or scale_gate or warmstart_gate
+                or fleet_gate):
             record["lakes"] = []
             record["smoke"] = smoke
     except (FileNotFoundError, json.JSONDecodeError):
@@ -953,6 +1212,57 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
                 f"{ws['restart_speedup']:.2f}x faster than cold warmup "
                 f"(gate >= {WARMSTART_SPEEDUP_GATE}x)")
 
+    if fleet_sweep_flag:
+        fl = fleet_sweep(smoke=smoke)
+        record["fleet_sweep" if not fleet_gate else
+               "fleet_sweep_smoke"] = fl
+        for e in fl["sweep"]:
+            rows.append((
+                f"service/fleet/R{e['replicas']}", 0.0,
+                f"goodput {e['goodput_qps']:.0f} QPS "
+                f"(offered {e['offered_qps']:.0f}, "
+                f"shed={100*e['shed_rate']:.0f}% "
+                f"exp={100*e['expired_rate']:.0f}%, "
+                f"redisp={e['fleet']['redispatches']})"))
+        rows.append((
+            "service/fleet/scaling", 0.0,
+            f"goodput(4)/goodput(1) = {fl['scaling_4_over_1']:.2f}x "
+            f"(gate >= {FLEET_SCALING_GATE}x, device-emulated replicas)"))
+        kl = fl["kill"]
+        rows.append((
+            "service/fleet/kill", 0.0,
+            f"accepted {kl['accepted']}: {kl['completed']} ok / "
+            f"{kl['expired']} expired / {kl['failed']} failed / "
+            f"{kl['lost']} LOST; redisp={kl['redispatches']} "
+            f"evictions={kl['evictions']}"))
+        re_ = fl.get("real_engine")
+        if re_ is not None:
+            rows.append((
+                "service/fleet/real_engine", 0.0,
+                f"host scaling {re_['scaling']:.2f}x over "
+                f"{re_['n_devices']} host devices "
+                f"({re_['submesh_devices']} per replica; ungated)"))
+        if smoke:
+            if fl["scaling_4_over_1"] < FLEET_SCALING_GATE:
+                gate_failures.append(
+                    f"FLEET SCALING REGRESSION: goodput(4)/goodput(1) = "
+                    f"{fl['scaling_4_over_1']:.2f}x < "
+                    f"{FLEET_SCALING_GATE}x (device-emulated replicas)")
+            if kl["lost"] or kl["accepted"] != (kl["completed"]
+                                                + kl["expired"]
+                                                + kl["failed"]):
+                gate_failures.append(
+                    f"FLEET LOSS REGRESSION: {kl['lost']} lost of "
+                    f"{kl['accepted']} accepted under an injected "
+                    f"replica kill (completed={kl['completed']} "
+                    f"expired={kl['expired']} failed={kl['failed']})")
+            if not kl["redispatches"] or kl["evictions"] != 1:
+                gate_failures.append(
+                    f"FLEET FAULT-PATH REGRESSION: injected kill drove "
+                    f"{kl['evictions']} evictions / "
+                    f"{kl['redispatches']} redispatches "
+                    f"(expected 1 / >= 1)")
+
     if scale_sweep_flag:
         sc = scale_sweep(smoke=smoke)
         record["scale_sweep" if not scale_gate else
@@ -1051,10 +1361,17 @@ if __name__ == "__main__":
                          "(gated to >= "
                          f"{WARMSTART_SPEEDUP_GATE:.0f}x faster than the "
                          "cold warmup)")
+    ap.add_argument("--fleet-sweep", action="store_true",
+                    help="measure goodput vs engine-replica count through "
+                         "the EngineFleet router (device-emulated replica "
+                         "compute; gated near-linear scaling) plus the "
+                         "zero-lost-requests gate under one injected "
+                         "replica kill; with --smoke, the fleet CI gate")
     args = ap.parse_args()
     for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks,
                  batch_sweep_flag=args.batch_sweep,
                  open_loop_flag=args.open_loop,
                  scale_sweep_flag=args.scale_sweep,
-                 warmstart_flag=args.warmstart):
+                 warmstart_flag=args.warmstart,
+                 fleet_sweep_flag=args.fleet_sweep):
         print(",".join(map(str, r)))

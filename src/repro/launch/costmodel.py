@@ -447,6 +447,29 @@ def make_calibrated_cost_fn(constants: dict):
     return cost_fn
 
 
+def plan_cost_per_query(cost: dict | None) -> float | None:
+    """Per-request cost of an executed plan, for the fleet router.
+
+    Prefers the calibrated ``total_cost`` (predicted seconds — what
+    ``make_calibrated_cost_fn`` attaches); falls back to ``total_flops``
+    scaled to pseudo-seconds so calibrated and analytic replicas stay
+    on comparable magnitudes.  Returns ``None`` when ``cost`` carries
+    neither (the router then uses its unit-cost default) — the router
+    only ever *compares* these values across replicas, so any shared
+    monotone scale works.
+    """
+    if not cost:
+        return None
+    n = max(float(cost.get("n_queries", 1) or 1), 1.0)
+    total = cost.get("total_cost")
+    if total is None:
+        flops = cost.get("total_flops")
+        if flops is None:
+            return None
+        total = float(flops) * 1e-9
+    return max(float(total) / n, 1e-9)
+
+
 def w_avg_decode(cfg, seq: int) -> float:
     if cfg.family == "ssm":
         return 0.0

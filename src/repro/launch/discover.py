@@ -97,6 +97,10 @@ def serve_mode(args, lake, model):
               f"score={constants['score_s_per_flop']:.3e} s/flop, "
               f"fixed={1e3*constants['fixed_s_per_query']:.3f} ms/query")
 
+    if args.replicas > 1:
+        fleet_mode(args, lake, model, cost_fn, grid)
+        return
+
     # restart path: a fresh process would do exactly this
     engine = DiscoveryEngine.from_catalog(
         ColumnCatalog(args.catalog), model,
@@ -173,6 +177,61 @@ def serve_mode(args, lake, model):
               f"{engine.n_columns} columns live")
 
 
+def fleet_mode(args, lake, model, cost_fn, grid) -> None:
+    """``--replicas N``: serve through an :class:`EngineFleet` of catalog
+    followers, each on its own device slice, behind the load-aware
+    router."""
+    import jax
+
+    from repro.service import (DiscoveryRequest, EngineConfig, EngineFleet,
+                               LSHConfig, serve_discovery)
+
+    fleet = EngineFleet.from_catalog(
+        args.catalog, model,
+        EngineConfig(k=args.k, mode=args.mode,
+                     lsh=LSHConfig(n_bands=args.lsh_bands),
+                     cost_fn=cost_fn, grid=grid,
+                     metrics=args.metrics_port is not None,
+                     warmup=(False if args.warmup == "off" else args.warmup),
+                     executable_cache_dir=args.executable_cache),
+        n_replicas=args.replicas,
+        devices=jax.devices() if args.mesh else None)
+    try:
+        fleet.warm_event.wait(timeout=300)
+        st = fleet.stats()
+        slices = {rid: v["state"] for rid, v in st["replicas"].items()}
+        print(f"fleet: {args.replicas} replicas over "
+              f"{len(jax.devices())} devices, states {slices}")
+        metrics_server = None
+        if args.metrics_port is not None:
+            from repro.service import MetricsServer
+            metrics_server = MetricsServer(fleet.metrics,
+                                           port=args.metrics_port)
+            print(f"metrics: serving Prometheus exposition at "
+                  f"{metrics_server.url}")
+        qids = select_queries(lake, args.queries)
+        reqs = [DiscoveryRequest(name=f"q{int(q)}", column_id=int(q))
+                for q in qids]
+        t0 = time.perf_counter()
+        responses = list(serve_discovery(fleet, reqs, max_batch=args.batch))
+        dt = time.perf_counter() - t0
+        st = fleet.stats()
+        print(f"served {len(responses)} queries in {dt:.3f}s "
+              f"({len(responses)/max(dt,1e-9):.1f} QPS, mode={args.mode}, "
+              f"{st['dispatched']} batches routed, "
+              f"{st['redispatches']} re-dispatched)")
+        for rid, v in st["replicas"].items():
+            print(f"  replica {rid}: {v['state']} "
+                  f"served {v['requests_served']} requests in "
+                  f"{v['batches_served']} batches "
+                  f"(catalog v{v['engine_version']})")
+        for r in responses[:3]:
+            names = [m.column for m in r.matches[:5]]
+            print(f"  {r.name} ({r.n_candidates} scored) -> {names}")
+    finally:
+        fleet.close()
+
+
 def open_loop_mode(args, engine, qids, closed_qps: float) -> None:
     """Poisson-arrival serving through the continuous-batching scheduler."""
     from repro.launch.costmodel import derive_batch_buckets
@@ -238,6 +297,12 @@ def main():
                          "and the cost model")
     ap.add_argument("--lsh-bands", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="serve through an EngineFleet of N catalog-"
+                         "follower replicas behind the load-aware router "
+                         "(each pinned to its own device slice with "
+                         "--mesh; warm->serve->drain->evict lifecycle, "
+                         "health-check eviction, batch re-dispatch)")
     ap.add_argument("--follow", action="store_true",
                     help="follower mode: tail the catalog manifest chain "
                          "and refresh onto new versions between batches")

@@ -22,6 +22,44 @@ def make_local_mesh(model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_replica_meshes(n_replicas: int, *, devices=None,
+                        model: int = 1) -> list:
+    """Partition the device set into ``n_replicas`` contiguous slices and
+    build one ``(data, model)`` sub-mesh per replica.
+
+    The fleet (``repro.service.fleet``) pins each engine replica to its
+    own slice so replicas never contend for device memory or compute.
+    Slices are contiguous — on real TPU topologies neighbouring device
+    ids share ICI links, so a contiguous slice keeps each replica's
+    collectives on-chip instead of crossing the fleet boundary.
+
+    When the pool is too small to give every replica ``model`` devices
+    (e.g. 4 host devices, 8 replicas) every replica gets ``None`` —
+    single-device local execution, the degenerate slice.  A non-dividing
+    replica count leaves the trailing remainder devices unused rather
+    than building lopsided slices (uneven replicas would defeat the
+    router's cost symmetry).
+    """
+    import numpy as np
+
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    devs = devs.reshape(-1)
+    n_replicas = int(n_replicas)
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1; got {n_replicas}")
+    per = devs.size // n_replicas
+    if per < max(model, 1) or per < 2:
+        # not enough devices to mesh every replica: single-device local
+        return [None] * n_replicas
+    per -= per % model                   # keep the model axis dividing
+    meshes = []
+    for i in range(n_replicas):
+        chunk = devs[i * per:(i + 1) * per]
+        meshes.append(jax.sharding.Mesh(
+            chunk.reshape(per // model, model), ("data", "model")))
+    return meshes
+
+
 def make_grid_mesh(q_shards: int, d_shards: int, *, devices=None):
     """2-D (query × data) grid mesh for discovery serving.
 

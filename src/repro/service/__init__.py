@@ -32,7 +32,14 @@ Layers (bottom-up):
 * ``metrics``   — Prometheus-style :class:`MetricsRegistry`,
   :class:`ServiceMetrics` (the standard counters/gauges/histograms fed
   by an event-bus consumer + direct latency instrumentation), and
-  :class:`MetricsServer` (stdlib ``GET /metrics`` endpoint).
+  :class:`MetricsServer` (stdlib ``GET /metrics`` endpoint);
+* ``fleet``     — :class:`EngineFleet`: N engine replicas (each a
+  catalog follower pinned to its own device slice) behind the pure
+  deterministic :class:`FleetRouter`, with a warm→serve→drain→evict
+  replica lifecycle, health-check eviction, and in-flight batch
+  re-dispatch; ``RequestScheduler(fleet)`` is a drop-in upgrade from a
+  single engine.  :class:`FaultInjector` is the testing hook that kills
+  or hangs replicas at named points.
 """
 from repro.service.api import (ColumnMatch, DiscoveryRequest,
                                DiscoveryResponse, serve_discovery)
@@ -43,6 +50,9 @@ from repro.service.catalog import (CatalogReader, CatalogSnapshot,
 from repro.service.compactor import BackgroundCompactor
 from repro.service.engine import DiscoveryEngine, EngineConfig, measure_recall
 from repro.service.events import Event, EventBus, EventCursor, mint_trace_id
+from repro.service.fleet import (EngineFleet, EngineReplica, FaultInjector,
+                                 FleetConfig, FleetRouter, ReplicaKilled,
+                                 ReplicaSnapshot)
 from repro.service.lsh import (LSHConfig, LSHIndex, band_keys,
                                coarse_band_keys)
 from repro.service.metrics import (MetricsRegistry, MetricsServer,
@@ -57,6 +67,8 @@ __all__ = [
     "BackgroundCompactor",
     "DiscoveryEngine", "EngineConfig", "measure_recall",
     "Event", "EventBus", "EventCursor", "mint_trace_id",
+    "EngineFleet", "EngineReplica", "FaultInjector", "FleetConfig",
+    "FleetRouter", "ReplicaKilled", "ReplicaSnapshot",
     "LSHConfig", "LSHIndex", "band_keys", "coarse_band_keys",
     "MetricsRegistry", "MetricsServer", "ServiceMetrics", "parse_exposition",
     "DeadlineExpired", "RequestScheduler", "SchedulerConfig",

@@ -317,10 +317,14 @@ class WriterLease:
     """
 
     def __init__(self, root: str, *, owner: str | None = None,
-                 ttl_s: float = 60.0):
+                 ttl_s: float = 60.0, clock=time.time):
         self.root = root
         self.owner = owner or f"pid-{os.getpid()}"
         self.ttl_s = float(ttl_s)
+        # injectable wall clock: expiry tests advance a fake clock past
+        # the ttl instead of sleeping (or hacking negative ttls).  Every
+        # participant judging the same lease must share the clock
+        self._clock = clock
         self.token = os.urandom(8).hex()
         self._held = False
 
@@ -337,7 +341,7 @@ class WriterLease:
 
     def _write_tmp(self) -> str:
         rec = {"owner": self.owner, "token": self.token,
-               "expires": time.time() + self.ttl_s}
+               "expires": self._clock() + self.ttl_s}
         tmp = os.path.join(self.root, f".lease-{self.token}.tmp")
         with open(tmp, "w") as f:
             json.dump(rec, f)
@@ -354,11 +358,12 @@ class WriterLease:
         finally:
             os.unlink(tmp)
         cur = self._read()
+        now = self._clock()
         if (cur is not None and cur.get("token") != self.token
-                and float(cur.get("expires", 0)) > time.time()):
+                and float(cur.get("expires", 0)) > now):
             raise LeaseHeldError(
                 f"catalog lease held by {cur.get('owner')!r} for another "
-                f"{float(cur['expires']) - time.time():.1f}s")
+                f"{float(cur['expires']) - now:.1f}s")
         # expired (or unreadable) lease: unlink the record we judged
         # expired iff it is still the one on disk, then race a fresh
         # create-if-absent — exactly one stealer's link succeeds (a blind

@@ -141,7 +141,7 @@ class DiscoveryEngine:
     """Serves discovery queries from pinned catalog snapshots."""
 
     def __init__(self, snapshot: CatalogSnapshot, model: JoinQualityModel,
-                 config: EngineConfig | None = None, mesh=None):
+                 config: EngineConfig | None = None, mesh=None, events=None):
         config = config if config is not None else EngineConfig()
         if config.mode not in MODES:
             raise ValueError(f"unknown mode {config.mode!r}; "
@@ -176,10 +176,13 @@ class DiscoveryEngine:
         self._scheduler = None
         # observability plane: events/metrics exist only when configured
         # (publish sites guard on None so the disabled hot path pays one
-        # attribute read, nothing else)
-        self.events = None
+        # attribute read, nothing else).  An externally supplied bus
+        # (``events=``) is adopted as-is WITHOUT a private aggregator —
+        # the fleet shares one bus + one ServiceMetrics across replicas
+        self._closed = False
+        self.events = events
         self.metrics = None
-        if config.metrics:
+        if config.metrics and events is None:
             from repro.service.metrics import ServiceMetrics
             self.events = EV.EventBus(capacity=config.event_capacity)
             self.metrics = ServiceMetrics(self.events)
@@ -210,6 +213,9 @@ class DiscoveryEngine:
         state is retired only once its last batch unpins it.  The result
         cache is cleared; entries racing this swap land under the retired
         version's namespace and can never hit again."""
+        with self._slock:
+            if self._closed:     # a follower poll racing eviction: the
+                return           # closed engine must not grow new states
         st = self._build_state(snapshot)
         with self._slock:
             old, self._head = self._head, st
@@ -351,6 +357,8 @@ class DiscoveryEngine:
 
     def _pin(self) -> _VersionState:
         with self._slock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
             st = self._head
             st.refs += 1
         if self.events is not None:      # publish outside the lock
@@ -368,6 +376,27 @@ class DiscoveryEngine:
             st.executor.close()
             if self.events is not None:
                 self.events.publish(EV.SNAPSHOT_RETIRED, version=st.version)
+
+    # -- lifecycle (fleet drain/evict hook) ---------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self) -> None:
+        """Retire this engine: refuse new pins and release the head's
+        construction reference.  The drain hook fleet eviction relies on —
+        in-flight batches keep their pinned version until their own
+        ``finally`` unpins it, so once the last one finishes every live
+        state's refcount reaches zero and its executor is closed.
+        Idempotent; a closed engine still answers ``stats()``."""
+        with self._slock:
+            if self._closed:
+                return
+            self._closed = True
+            head = self._head
+        if head is not None:
+            self._release(head)
 
     # -- compat surface (head-state views) ----------------------------------
 

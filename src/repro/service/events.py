@@ -42,6 +42,13 @@ Event taxonomy (the ``type`` strings components publish):
                             persistent cache (``remaining`` counts down)
 ``executable_cache_miss``   warmup compiled one executable fresh (a
                             ``compile_begin``/``end`` pair brackets it)
+``replica_state``           a fleet replica changed lifecycle state
+                            (replica, state ∈ warming/serving/draining/
+                            evicted, reason)
+``batch_routed``            the fleet router placed a formed batch on a
+                            replica (replica, n, queue_depth)
+``batch_redispatched``      a batch was re-dispatched off a failed/evicted
+                            replica (replica, n, attempts)
 ==========================  =================================================
 
 Payloads are free-form keyword dicts; the constants below are the
@@ -75,6 +82,9 @@ WARMUP_BEGIN = "warmup_begin"
 WARMUP_END = "warmup_end"
 EXECUTABLE_CACHE_HIT = "executable_cache_hit"
 EXECUTABLE_CACHE_MISS = "executable_cache_miss"
+REPLICA_STATE = "replica_state"
+BATCH_ROUTED = "batch_routed"
+BATCH_REDISPATCHED = "batch_redispatched"
 
 EVENT_TYPES = (
     REQUEST_ADMITTED, REQUEST_SHED, REQUEST_EXPIRED, BATCH_FORMED,
@@ -83,6 +93,7 @@ EVENT_TYPES = (
     COMPACTION_STARTED, COMPACTION_PUBLISHED, MANIFEST_ADVANCED,
     COARSE_PASS, FINE_PROBE,
     WARMUP_BEGIN, WARMUP_END, EXECUTABLE_CACHE_HIT, EXECUTABLE_CACHE_MISS,
+    REPLICA_STATE, BATCH_ROUTED, BATCH_REDISPATCHED,
 )
 
 # trace ids: cheap, process-unique, monotonic within a session — NOT

@@ -304,6 +304,18 @@ class ServiceMetrics:
             "coarse_survivor_fraction",
             "fraction of the lake surviving the coarse digest pass",
             buckets=SURVIVOR_FRACTION_BUCKETS)
+        self.batches_routed = r.counter(
+            "batches_routed_total",
+            "formed batches placed on a replica by the fleet router")
+        self.redispatches = r.counter(
+            "redispatches_total",
+            "batches re-dispatched off a failed or evicted replica")
+        self.replica_state_changes = r.counter(
+            "replica_state_changes_total",
+            "fleet replica lifecycle transitions (labeled by new state)")
+        self.router_queue_depth = r.gauge(
+            "router_queue_depth",
+            "per-replica request queue depth at the last routed placement")
         self.queue_ms = r.histogram(
             "request_queue_ms", "submit -> batch formation wait (ms)")
         self.compute_ms = r.histogram(
@@ -395,6 +407,18 @@ class ServiceMetrics:
                 if v is not None:
                     self.manifest_version.set(
                         max(self.manifest_version.value(), float(v)))
+            elif ev.type == EV.BATCH_ROUTED:
+                self.batches_routed.inc()
+                rep = ev.payload.get("replica")
+                depth = ev.payload.get("queue_depth")
+                if rep is not None and depth is not None:
+                    self.router_queue_depth.set(float(depth),
+                                                replica=str(rep))
+            elif ev.type == EV.BATCH_REDISPATCHED:
+                self.redispatches.inc()
+            elif ev.type == EV.REPLICA_STATE:
+                self.replica_state_changes.inc(
+                    state=str(ev.payload.get("state", "")))
         for name, k in counts.items():
             getattr(self, name).inc(k)
         return len(evs)

@@ -58,7 +58,8 @@ import heapq
 import itertools
 import threading
 import time
-from concurrent.futures import Future
+import typing
+from concurrent.futures import Future, InvalidStateError
 
 from repro.exec.plan import DEFAULT_BATCH_BUCKETS
 from repro.service import events as EV
@@ -86,6 +87,11 @@ class SchedulerConfig:
     # keep counting, but no batch pays a first-contact compile mid-warmup.
     # False dispatches through a running warmup (legacy behaviour)
     wait_for_warm: bool = True
+    # injectable time source (monotonic seconds): tests swap in a fake
+    # clock (tests/_fixtures.FakeClock) to drive deadline expiry without
+    # real sleeps.  The coalescing wait derives its timeout from this
+    # clock, so a frozen fake clock must be paired with max_wait_ms=0
+    clock: typing.Callable[[], float] = time.perf_counter
 
 
 @dataclasses.dataclass(eq=False)
@@ -100,6 +106,43 @@ class _Item:
     profile_ms: float = 0.0       # submit-time upload profiling wall
 
 
+def finalize_batch(items, responses, t_start: float, *, metrics=None) -> None:
+    """Stamp scheduler-side latency fields on each response and resolve
+    its future.  Shared by the inline worker path and the fleet replica
+    delivery path (:mod:`repro.service.fleet`): ``t_start`` is the moment
+    scoring began, so ``queue_ms`` covers coalescing *plus* any replica
+    queue wait.  A future that already resolved (a re-dispatched batch
+    whose abandoned first owner un-hung later) is left alone — the
+    second resolution is swallowed, never raised into a worker thread."""
+    for it, r in zip(items, responses):
+        r.queue_ms = (t_start - it.t_submit) * 1e3
+        r.latency_ms = r.queue_ms + r.compute_ms
+        # prepend the scheduler-side spans: profile (measured at submit)
+        # and queue (the remainder of queue_ms), so the full trace still
+        # sums EXACTLY to latency_ms
+        r.trace = ([{"phase": "profile", "ms": it.profile_ms},
+                    {"phase": "queue", "ms": r.queue_ms - it.profile_ms}]
+                   + r.trace)
+        if metrics is not None:
+            metrics.observe_response(r)
+        try:
+            it.future.set_result(r)
+        except InvalidStateError:
+            pass
+
+
+def fail_batch(items, exc: BaseException) -> None:
+    """Resolve every future in ``items`` with ``exc`` (cancelled or
+    already-resolved futures are skipped).  Used by the fleet when a
+    batch exhausts its re-dispatch budget — the caller gets a clean
+    error, never a silently dropped request."""
+    for it in items:
+        try:
+            it.future.set_exception(exc)
+        except InvalidStateError:
+            pass
+
+
 class RequestScheduler:
     """Future-based async front door over a :class:`DiscoveryEngine`.
 
@@ -112,6 +155,7 @@ class RequestScheduler:
     def __init__(self, engine, config: SchedulerConfig | None = None):
         self.engine = engine
         self.config = config or SchedulerConfig()
+        self._clock = self.config.clock
         ladder = (self.config.batch_buckets
                   or engine.config.batch_buckets
                   or DEFAULT_BATCH_BUCKETS)
@@ -124,9 +168,20 @@ class RequestScheduler:
         # the same sizes the scheduler forms.  Deliberately persistent:
         # direct query_batch callers keep snapping to the same shapes
         # after this scheduler closes (padding up is result-transparent —
-        # padded rows are sliced off — and shape reuse is the point)
-        engine.config.batch_buckets = self.buckets
-        engine.planner.config.batch_buckets = self.buckets
+        # padded rows are sliced off — and shape reuse is the point).
+        # A fleet front end (`service.fleet.EngineFleet`) exposes
+        # install_buckets to propagate the ladder to every replica
+        install = getattr(engine, "install_buckets", None)
+        if install is not None:
+            install(self.buckets)
+        else:
+            engine.config.batch_buckets = self.buckets
+            engine.planner.config.batch_buckets = self.buckets
+        # formed-batch sink: an engine-compatible fleet exposes
+        # dispatch_batch — the worker hands the staged batch to the
+        # router instead of running it inline, and replica workers
+        # resolve the futures (reporting back via note_completed)
+        self._dispatch = getattr(engine, "dispatch_batch", None)
         self.max_batch = (int(self.config.max_batch)
                           if self.config.max_batch is not None
                           else self.buckets[-1])
@@ -189,14 +244,14 @@ class RequestScheduler:
         trace_id = getattr(request, "trace_id", None) or EV.mint_trace_id()
         # the clock starts BEFORE profiling: upload profiling is part of
         # the request's end-to-end latency and of its deadline budget
-        now = time.perf_counter()
+        now = self._clock()
         profile_ms = 0.0
         if getattr(request, "values", None) is not None:
             # profile the uploaded column HERE, in the submitter's
             # thread: the worker's formed-batch path never pays the
             # per-request device profiling
             self.engine.profile_request(request)
-            profile_ms = (time.perf_counter() - now) * 1e3
+            profile_ms = (self._clock() - now) * 1e3
         item = _Item(request=request, future=Future(), t_submit=now,
                      deadline=(now + deadline_ms / 1e3
                                if deadline_ms is not None else None),
@@ -252,7 +307,8 @@ class RequestScheduler:
         ev = getattr(self.engine, "warm_event", None)
         if ev is None or ev.is_set():
             return
-        self._counters["warm_held"] += 1
+        with self._cv:
+            self._counters["warm_held"] += 1
         while not ev.wait(timeout=0.05):
             with self._cv:
                 if self._stop:
@@ -267,7 +323,7 @@ class RequestScheduler:
             if not self._heap:
                 return None                      # stopped and drained
             if self.config.max_wait_ms > 0 and not self._stop:
-                t_end = time.perf_counter() + self.config.max_wait_ms / 1e3
+                t_end = self._clock() + self.config.max_wait_ms / 1e3
                 while len(self._heap) < self.max_batch and not self._stop:
                     # deadline-aware shrink: waiting past the earliest
                     # queued deadline converts a live request into an
@@ -278,7 +334,7 @@ class RequestScheduler:
                     for _, _, it in self._heap:
                         if it.deadline is not None and it.deadline < bound:
                             bound = it.deadline
-                    left = bound - time.perf_counter()
+                    left = bound - self._clock()
                     if left <= 0:
                         if bound < t_end:
                             self._counters["window_shrunk"] += 1
@@ -288,7 +344,7 @@ class RequestScheduler:
             # batch slots: keep drawing from the queue until max_batch
             # UNEXPIRED items are staged (or it drains) — a backlog of
             # dead heads must not shrink the batch the live tail gets
-            now = time.perf_counter()
+            now = self._clock()
             staged, dead = [], []
             while self._heap and len(staged) < self.max_batch:
                 it = heapq.heappop(self._heap)[2]
@@ -300,10 +356,10 @@ class RequestScheduler:
         # future mutations happen OUTSIDE the lock (done-callbacks may
         # re-enter submit); set_running first — set_exception on a
         # caller-cancelled future would raise and kill the worker
-        live = []
+        live, n_expired = [], 0
         for it in dead:
             if it.future.set_running_or_notify_cancel():
-                self._counters["expired"] += 1
+                n_expired += 1
                 self._publish(EV.REQUEST_EXPIRED, trace_id=it.trace_id,
                               name=it.request.name,
                               waited_ms=(now - it.t_submit) * 1e3)
@@ -313,48 +369,66 @@ class RequestScheduler:
         for it in staged:
             if it.future.set_running_or_notify_cancel():
                 live.append(it)
+        if n_expired:
+            with self._cv:
+                self._counters["expired"] += n_expired
         return live
 
     def _run_batch(self, items: list[_Item]) -> None:
-        t_start = time.perf_counter()
+        t_start = self._clock()
         n = len(items)
-        self._counters["batches"] += 1
-        self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
-        if n in self._bucket_set:
-            self._counters["bucket_hits"] += 1
-        else:
-            self._counters["bucket_misses"] += 1
+        # counters mutate UNDER the lock: stats() snapshots the same
+        # dict concurrently, and Python's per-opcode interleaving made
+        # the old unlocked increments observable as torn reads
+        # (sum(batch_size_hist) != batches mid-update)
+        with self._cv:
+            self._counters["batches"] += 1
+            self._batch_hist[n] = self._batch_hist.get(n, 0) + 1
+            key = "bucket_hits" if n in self._bucket_set else "bucket_misses"
+            self._counters[key] += 1
         self._publish(EV.BATCH_FORMED, n=n,
                       trace_ids=[it.trace_id for it in items])
+        if self._dispatch is not None:
+            # fleet handoff: the router places this formed batch on a
+            # replica; that replica's worker resolves the futures (via
+            # finalize_batch) and reports back through note_completed
+            self._dispatch(items)
+            return
         try:
             responses = self.engine.query_batch(
                 [it.request for it in items],
                 trace_ids=[it.trace_id for it in items])
         except BaseException as e:
-            self._counters["failed"] += n
+            with self._cv:
+                self._counters["failed"] += n
             for it in items:
-                it.future.set_exception(e)
+                try:
+                    it.future.set_exception(e)
+                except InvalidStateError:
+                    pass
             return
-        for it, r in zip(items, responses):
-            r.queue_ms = (t_start - it.t_submit) * 1e3
-            r.latency_ms = r.queue_ms + r.compute_ms
-            # prepend the scheduler-side spans: profile (measured at
-            # submit) and queue (the remainder of queue_ms), so the full
-            # trace still sums EXACTLY to latency_ms
-            r.trace = ([{"phase": "profile", "ms": it.profile_ms},
-                        {"phase": "queue",
-                         "ms": r.queue_ms - it.profile_ms}]
-                       + r.trace)
-            self._counters["completed"] += 1
-            if self.metrics is not None:
-                self.metrics.observe_response(r)
-            it.future.set_result(r)
+        finalize_batch(items, responses, t_start, metrics=self.metrics)
+        with self._cv:
+            self._counters["completed"] += n
         if self.metrics is not None:
             # fold this batch's events into the registry now, so the
             # metrics cursor tails the ring closely (zero-drop guarantee
             # at any load the worker keeps up with) and a scrape between
             # batches sees current counters
             self.metrics.drain()
+
+    # -- fleet reporting ----------------------------------------------------
+
+    def note_completed(self, n: int) -> None:
+        """Fleet replica workers report delivered requests here so
+        ``stats()['completed']`` stays the single source of truth no
+        matter which thread finished the batch."""
+        with self._cv:
+            self._counters["completed"] += int(n)
+
+    def note_failed(self, n: int) -> None:
+        with self._cv:
+            self._counters["failed"] += int(n)
 
     # -- lifecycle / observability ------------------------------------------
 

@@ -1,0 +1,61 @@
+"""Shared deterministic test fixtures: fake clock + seeded randomness.
+
+The flakiest tests in this suite were the ones that raced wall time —
+``time.sleep(0.05)`` hoping a 5 ms deadline lapsed, negative lease TTLs
+standing in for expiry.  Both runtimes take injectable clocks
+(``SchedulerConfig.clock``, ``WriterLease(clock=)``,
+``FleetConfig.clock``), so tests advance a :class:`FakeClock` instead of
+sleeping: deterministic on any host, zero wall-clock wait.
+
+Imported by ``conftest.py`` so ``fake_clock`` / ``seeded_rng`` are plain
+fixture arguments everywhere; ``FakeClock`` itself is importable for
+tests that need several independently-ticking clocks.
+"""
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+
+class FakeClock:
+    """A callable, manually-advanced clock.
+
+    Drop-in for ``time.perf_counter`` / ``time.time`` style sources:
+    calling it returns the current fake seconds; :meth:`advance` moves
+    it forward (thread-safe — worker threads read while the test
+    advances).  It never moves on its own, so pair it with components
+    configured not to *wait on it* (``max_wait_ms=0`` for the
+    scheduler's coalescing window, which derives timeouts from the
+    injected clock).
+    """
+
+    def __init__(self, start: float = 1_000.0):
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, seconds: float) -> float:
+        """Move time forward; returns the new reading."""
+        if seconds < 0:
+            raise ValueError("a monotonic clock cannot go backwards")
+        with self._lock:
+            self._t += float(seconds)
+            return self._t
+
+
+@pytest.fixture()
+def fake_clock() -> FakeClock:
+    return FakeClock()
+
+
+@pytest.fixture()
+def seeded_rng(request) -> np.random.Generator:
+    """Per-test deterministic generator: seeded from the test's nodeid,
+    so every test gets a distinct but reproducible stream (no cross-test
+    coupling through a shared session rng)."""
+    seed = zlib.crc32(request.node.nodeid.encode()) & 0xFFFFFFFF
+    return np.random.default_rng(seed)

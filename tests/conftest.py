@@ -2,6 +2,7 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))   # _fixtures imports
 
 try:  # the container has no hypothesis; fall back to the deterministic shim
     import hypothesis  # noqa: F401
@@ -11,6 +12,7 @@ except ModuleNotFoundError:
 import numpy as np
 import pytest
 
+from _fixtures import FakeClock, fake_clock, seeded_rng  # noqa: F401
 from repro.core import LakeSpec, generate_lake, profile_lake
 
 

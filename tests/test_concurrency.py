@@ -154,18 +154,27 @@ def test_duplicate_name_race_cleans_orphan(tmp_path, monkeypatch):
 # writer lease
 # ---------------------------------------------------------------------------
 
-def test_writer_lease_mutual_exclusion_and_expiry(tmp_path):
+def test_writer_lease_mutual_exclusion_and_expiry(tmp_path, fake_clock):
+    """Expiry under an injected clock: the old version faked expiry with
+    ``ttl_s=-1`` (a lease born dead); here a *valid* lease genuinely ages
+    past its TTL when the clock advances — no wall-clock wait, and the
+    pre-expiry exclusion check exercises the real code path."""
     root = str(tmp_path)
     os.makedirs(root, exist_ok=True)
-    a = WriterLease(root, owner="a", ttl_s=60).acquire()
+    a = WriterLease(root, owner="a", ttl_s=60, clock=fake_clock).acquire()
     with pytest.raises(LeaseHeldError):
-        WriterLease(root, owner="b", ttl_s=60).acquire()
-    a.release()
-    b = WriterLease(root, owner="b", ttl_s=-1).acquire()   # expires at once
-    c = WriterLease(root, owner="c", ttl_s=60).acquire()   # steals expired
+        WriterLease(root, owner="b", ttl_s=60, clock=fake_clock).acquire()
+    fake_clock.advance(59)                 # aged but still live: still held
+    with pytest.raises(LeaseHeldError):
+        WriterLease(root, owner="b", ttl_s=60, clock=fake_clock).acquire()
+    fake_clock.advance(2)                  # now past a's 60 s TTL
+    c = WriterLease(root, owner="c", ttl_s=60,
+                    clock=fake_clock).acquire()    # steals expired
+    a.release()                            # stale token: must not unlink c's
+    with pytest.raises(LeaseHeldError):
+        WriterLease(root, owner="b", ttl_s=60, clock=fake_clock).acquire()
     c.release()
-    b.release()                            # stale token: must not unlink c's
-    d = WriterLease(root, owner="d", ttl_s=60)
+    d = WriterLease(root, owner="d", ttl_s=60, clock=fake_clock)
     with d:
         assert d._held
     assert not os.path.exists(d.path)

@@ -106,16 +106,20 @@ def test_priority_orders_batches_out_of_order(engine):
         assert r.matches is not None       # each future got ITS response
 
 
-def test_deadline_expiry(engine):
+def test_deadline_expiry(engine, fake_clock):
+    """Deadline lapse under an injected clock: no wall-clock sleep, no
+    race between the 5 ms deadline and a hoped-for-slow scheduler."""
     gate = _Gate(engine)
-    with RequestScheduler(engine, SchedulerConfig(max_wait_ms=0.0)) as sch:
+    with RequestScheduler(engine,
+                          SchedulerConfig(max_wait_ms=0.0,
+                                          clock=fake_clock)) as sch:
         f_decoy = sch.submit(DiscoveryRequest(name="decoy", column_id=0))
         assert gate.entered.wait(30)
         f_dead = sch.submit(DiscoveryRequest(name="dead", column_id=1),
                             deadline_ms=5.0)
         f_live = sch.submit(DiscoveryRequest(name="live", column_id=2),
                             deadline_ms=60_000.0)
-        time.sleep(0.05)                   # let the deadline lapse queued
+        fake_clock.advance(0.050)          # deadline lapses while queued
         gate.release.set()
         with pytest.raises(DeadlineExpired):
             f_dead.result(timeout=30)
@@ -288,3 +292,47 @@ def test_serve_discovery_backpressures_instead_of_shedding(engine):
         sch.close()
     assert [r.name for r in got] == [r.name for r in reqs]
     assert stats["shed"] == 0 and stats["completed"] == 12
+
+
+# ---------------------------------------------------------------------------
+# stats() consistency under a live worker (torn-read regression)
+# ---------------------------------------------------------------------------
+
+def test_stats_snapshot_consistent_under_live_worker(engine):
+    """Regression for torn stats() reads: the worker used to bump
+    ``batches`` / ``batch_size_hist`` / ``bucket_hits`` outside the lock,
+    so a concurrent stats() could observe a batch counted in one counter
+    but not yet in its sibling.  Hammer stats() against a live worker and
+    assert the cross-counter invariants on EVERY snapshot."""
+    torn = []
+    stop = threading.Event()
+
+    def hammer(sch):
+        while not stop.is_set():
+            s = sch.stats()
+            if sum(s["batch_size_hist"].values()) != s["batches"]:
+                torn.append(("hist", s))
+            if s["bucket_hits"] + s["bucket_misses"] != s["batches"]:
+                torn.append(("bucket", s))
+            if s["completed"] + s["failed"] + s["expired"] > s["submitted"]:
+                torn.append(("resolved", s))
+
+    with RequestScheduler(engine, SchedulerConfig(max_wait_ms=0.0,
+                                                  max_batch=2)) as sch:
+        readers = [threading.Thread(target=hammer, args=(sch,))
+                   for _ in range(2)]
+        for t in readers:
+            t.start()
+        futs = [sch.submit(DiscoveryRequest(name=f"q{i}",
+                                            column_id=i % engine.n_columns))
+                for i in range(40)]
+        for f in futs:
+            f.result(timeout=60)
+        stop.set()
+        for t in readers:
+            t.join(10)
+        s = sch.stats()
+    assert not torn, f"torn stats snapshots: {torn[:3]}"
+    assert s["completed"] == 40
+    assert sum(s["batch_size_hist"].values()) == s["batches"]
+    assert s["bucket_hits"] + s["bucket_misses"] == s["batches"]
