@@ -141,6 +141,25 @@ FLEET_OVERLOAD = 1.3                   # offered / per-config capacity
 FLEET_SCALING_GATE = 2.5               # goodput(4 replicas) / goodput(1)
 FLEET_KILL_LOAD = 0.7                  # offered / capacity for the kill run
 
+# --ingest-sweep: delta-proportional incremental refresh under live
+# ingest.  A >= 2e4-column planted lake takes 1%-sized append batches;
+# the incremental follower's refresh (frozen stats + LSH extend + delta
+# placement) is timed against a full-rebuild follower on the SAME
+# manifest advances, and a 2-replica fleet rolls its refresh while an
+# open query loop runs (zero dropped queries gated).
+INGEST_COLUMNS = 50_000
+INGEST_DELTA_FRAC = 0.01               # each append batch ~1% of the lake
+INGEST_N_DELTAS = 3
+INGEST_N_QUERIES = 16
+INGEST_SPEEDUP_GATE = 5.0              # full-rebuild wall / delta wall
+INGEST_RECALL_GATE = 0.9               # recall@10 post-ingest, frozen stats
+INGEST_FLEET_REPLICAS = 2
+# explicit ladder with a rung just above the lake: the production ladder
+# comes from derive_column_buckets (measured lake sizes), but the bench
+# controls its own padding so the DUS copy cost reflects a tuned rung,
+# not whatever lakes a prior scale sweep happened to measure
+INGEST_COLUMN_BUCKETS = (53_248, 65_536)   # 50k + 5 deltas stay in rung 0
+
 # --open-loop: Poisson-arrival serving through the scheduler
 OPEN_LOOP_TABLES = 90
 OPEN_LOOP_DEADLINE_MS = 200.0          # end-to-end incl. queue wait
@@ -450,6 +469,195 @@ def scale_sweep(smoke: bool = False) -> dict:
             entry["modes"]["tiered"]["qps"]
             / max(entry["modes"]["lsh"]["qps"], 1e-9))
         out["lakes"].append(entry)
+    return out
+
+
+def ingest_sweep(smoke: bool = False) -> dict:
+    """Delta-proportional incremental refresh under live ingest.
+
+    Bulk-ingests a planted >= 2e4-column lake, then appends
+    ``INGEST_N_DELTAS`` batches of ~1% of the lake each.  Two followers
+    ride the same manifest advances: an ``incremental=True`` engine
+    (frozen-stats z-scoring, ``LSHIndex.extend``, delta device placement
+    inside a column-bucket ladder) and a full-rebuild baseline.  Per
+    advance we record both refresh walls, the bytes uploaded, and the
+    recompile count; after the deltas, recall@10 on the delta-built head
+    and the count of serving-path compile events in steady state (gated
+    to zero — the bucket ladder keeps traced shapes fixed).  A final
+    segment rolls a 2-replica fleet's refresh replica-by-replica while a
+    query loop runs, gating zero dropped/failed queries.
+    """
+    import threading
+
+    from repro.core import (ScaledLakeSpec, generate_scaled_lake,
+                            select_scaled_queries)
+    from repro.service import (CatalogReader, ColumnCatalog, DiscoveryEngine,
+                               DiscoveryRequest, EngineConfig, EngineFleet,
+                               EventBus, FleetConfig, LSHConfig,
+                               measure_recall)
+    from repro.service.events import COMPILE_END
+
+    model = bench_model()
+    n = INGEST_COLUMNS
+    d_cols = max(int(n * INGEST_DELTA_FRAC), 1)
+    buckets = INGEST_COLUMN_BUCKETS
+    base = generate_scaled_lake(ScaledLakeSpec(n_columns=n, seed=5))
+    qids = select_scaled_queries(base, INGEST_N_QUERIES, seed=2)
+    reqs = [DiscoveryRequest(name=f"i{int(q)}", column_id=int(q))
+            for q in qids]
+
+    def _delta_batch(j):
+        dl = generate_scaled_lake(ScaledLakeSpec(n_columns=d_cols,
+                                                 seed=40 + j))
+        return dl.batch, [f"d{j}_t{i}"
+                          for i in range(int(dl.table.max()) + 1)]
+
+    def _cfg(incremental):
+        return EngineConfig(k=10, mode="lsh",
+                            lsh=LSHConfig(n_bands=64, n_coarse_bands=16),
+                            candidate_frac=0.2, cache_entries=0,
+                            incremental=incremental,
+                            column_buckets=buckets,
+                            # rung 0 holds every delta; disable the
+                            # next-bucket prewarm thread so it cannot
+                            # steal CPU from the timed sections
+                            prewarm_fraction=2.0)
+
+    root = tempfile.mkdtemp(prefix="freyja_ingest_")
+    out = {"smoke": smoke, "delta_columns": d_cols,
+           "column_buckets": list(buckets), "refreshes": []}
+    try:
+        cat = ColumnCatalog(root, n_perm=128)
+        with Timer() as t_ingest:
+            cat.add_batch(base.batch,
+                          [f"t{i}" for i in range(int(base.table.max()) + 1)])
+        out["base_ingest_s"] = t_ingest.s
+
+        # lazy followers: refresh-time disk reads stay proportional to
+        # the delta (the tail slices `_try_delta` touches), not the lake
+        bus = EventBus()
+        reader = CatalogReader(root, lazy=True)
+        eng = DiscoveryEngine(reader.snapshot(), model, _cfg(True),
+                              events=bus)
+        eng.follow(reader, auto=False)
+        out["n_columns_base"] = int(eng.snapshot.n_columns)
+        reader_full = CatalogReader(root, lazy=True)
+        eng_full = DiscoveryEngine(reader_full.snapshot(), model,
+                                   _cfg(False))
+        eng_full.follow(reader_full, auto=False)
+
+        eng.query_batch(reqs)              # compile the serving shapes once
+        # one untimed warmup delta: the first refresh pays one-time costs
+        # (jit of the fused row-updater, snapshot capacity-buffer
+        # allocation) that a live follower amortizes over its lifetime —
+        # the gate measures the steady state, so warm past them first
+        cat.add_batch(*_delta_batch(9))
+        eng._maybe_follow(force=True)
+        eng_full._maybe_follow(force=True)
+        eng.query_batch(reqs)
+        inc0 = eng.stats()["refresh"]["incremental"]
+        cursor = bus.subscribe("ingest-bench")   # steady state starts here
+
+        for j in range(INGEST_N_DELTAS):
+            cat.add_batch(*_delta_batch(j))
+            b0 = eng.stats()["refresh"]["bytes_uploaded_total"]
+            with Timer() as t_delta:
+                eng._maybe_follow(force=True)
+            with Timer() as t_full:
+                eng_full._maybe_follow(force=True)
+            eng.query_batch(reqs)          # serve on the fresh head
+            rs = eng.stats()["refresh"]
+            out["refreshes"].append({
+                "delta_columns": rs["last_delta_columns"],
+                "delta_ms": t_delta.s * 1e3,
+                "full_rebuild_ms": t_full.s * 1e3,
+                "bytes_uploaded": rs["bytes_uploaded_total"] - b0,
+                "incremental": rs["incremental"],
+            })
+
+        steady_compiles = sum(1 for ev in cursor.poll()
+                              if ev.type == COMPILE_END)
+        rs = eng.stats()["refresh"]
+        delta_ms = [e["delta_ms"] for e in out["refreshes"]]
+        full_ms = [e["full_rebuild_ms"] for e in out["refreshes"]]
+        out.update({
+            "n_columns_final": int(eng.snapshot.n_columns),
+            "column_bucket": rs["column_bucket"],
+            "incremental_refreshes": rs["incremental"] - inc0,
+            "delta_refresh_ms_mean": float(np.mean(delta_ms)),
+            "full_rebuild_ms_mean": float(np.mean(full_ms)),
+            "speedup_full_over_delta": (float(np.mean(full_ms))
+                                        / max(float(np.mean(delta_ms)),
+                                              1e-9)),
+            "bytes_uploaded_total": rs["bytes_uploaded_total"],
+            "refresh_recompiles_total": rs["recompiles_total"],
+            "steady_state_compiles": steady_compiles,
+            "stats_drift": rs["stats_drift"],
+            "recall_at_10_post_ingest":
+                measure_recall(eng, qids, k=10)["recall"],
+        })
+        eng.close()
+        eng_full.close()
+
+        # rolling fleet refresh under live queries: replicas advance one
+        # at a time (MVCC pins keep the old head serving mid-swap), so
+        # the roll must lose nothing
+        fleet = EngineFleet.from_catalog(
+            root, model, _cfg(True), n_replicas=INGEST_FLEET_REPLICAS,
+            config=FleetConfig(health_interval_s=0.05), lazy=True)
+        errors: list = []
+        served = [0]
+        try:
+            deadline = time.monotonic() + 60.0
+            while not fleet.warm_event.is_set():
+                if time.monotonic() > deadline:
+                    raise RuntimeError("ingest fleet never warmed")
+                time.sleep(0.02)
+            stop = threading.Event()
+
+            def _load():
+                i = 0
+                while not stop.is_set():
+                    batch = [DiscoveryRequest(
+                        name=f"r{i}_{k}",
+                        column_id=int(qids[(i + k) % len(qids)]))
+                        for k in range(4)]
+                    try:
+                        got = fleet.query_batch(batch, timeout=120.0)
+                        if len(got) != len(batch):
+                            errors.append(f"short batch: {len(got)}")
+                            return
+                        served[0] += len(got)
+                    except Exception as exc:
+                        errors.append(repr(exc))
+                        return
+                    i += 1
+
+            t = threading.Thread(target=_load)
+            t.start()
+            try:
+                rolled = 0
+                for j in range(2):
+                    cat.add_batch(*_delta_batch(INGEST_N_DELTAS + j))
+                    rolled += fleet.roll_refresh()
+            finally:
+                stop.set()
+                t.join(timeout=120.0)
+            stats = fleet.stats()
+            out["fleet"] = {
+                "replicas": INGEST_FLEET_REPLICAS,
+                "served": served[0],
+                "errors": errors,
+                "rolled": rolled,
+                "rolling_refreshes": stats["rolling_refreshes"],
+                "incremental_refreshes": [
+                    r.engine.stats()["refresh"]["incremental"]
+                    for r in fleet.replicas],
+            }
+        finally:
+            fleet.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
     return out
 
 
@@ -1000,7 +1208,7 @@ def open_loop_bench(record: dict | None = None, smoke: bool = False) -> dict:
 def run(smoke: bool = False, sweep_blocks: bool = False,
         batch_sweep_flag: bool = False, open_loop_flag: bool = False,
         scale_sweep_flag: bool = False, warmstart_flag: bool = False,
-        fleet_sweep_flag: bool = False):
+        fleet_sweep_flag: bool = False, ingest_sweep_flag: bool = False):
     from repro.core import select_queries
     from repro.service import (ColumnCatalog, DiscoveryEngine,
                                DiscoveryRequest, EngineConfig, LSHConfig,
@@ -1017,8 +1225,11 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
     warmstart_gate = smoke and warmstart_flag
     # --fleet-sweep --smoke is the replica-fleet CI gate; same skip
     fleet_gate = smoke and fleet_sweep_flag
+    # --ingest-sweep --smoke is the live-ingest / incremental-refresh CI
+    # gate; same skip
+    ingest_gate = smoke and ingest_sweep_flag
     table_sizes = (() if (open_loop_gate or scale_gate or warmstart_gate
-                          or fleet_gate)
+                          or fleet_gate or ingest_gate)
                    else SMOKE_TABLE_SIZES if smoke else TABLE_SIZES)
     n_queries = SMOKE_N_QUERIES if smoke else N_QUERIES
     model = bench_model()
@@ -1033,7 +1244,7 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
         with open(OUT_JSON) as f:
             record = json.load(f)
         if not (open_loop_gate or scale_gate or warmstart_gate
-                or fleet_gate):
+                or fleet_gate or ingest_gate):
             record["lakes"] = []
             record["smoke"] = smoke
     except (FileNotFoundError, json.JSONDecodeError):
@@ -1305,6 +1516,62 @@ def run(smoke: bool = False, sweep_blocks: bool = False,
                         f"lazy={op['lazy_was_lazy']}) "
                         f"at C={e['n_columns']}")
 
+    if ingest_sweep_flag:
+        ig = ingest_sweep(smoke=smoke)
+        record["ingest_sweep" if not ingest_gate else
+               "ingest_sweep_smoke"] = ig
+        rows.append((
+            "service/ingest/refresh", ig["delta_refresh_ms_mean"],
+            f"delta({ig['delta_columns']} cols) "
+            f"{ig['delta_refresh_ms_mean']:.0f}ms vs rebuild"
+            f"({ig['n_columns_final']} cols) "
+            f"{ig['full_rebuild_ms_mean']:.0f}ms -> "
+            f"{ig['speedup_full_over_delta']:.1f}x "
+            f"(gate >= {INGEST_SPEEDUP_GATE}x)"))
+        rows.append((
+            "service/ingest/steady_state", 0.0,
+            f"compiles={ig['steady_state_compiles']} "
+            f"refresh_recompiles={ig['refresh_recompiles_total']} "
+            f"uploaded={ig['bytes_uploaded_total']}B "
+            f"bucket={ig['column_bucket']} "
+            f"drift={ig['stats_drift']:.3f} "
+            f"recall={ig['recall_at_10_post_ingest']:.3f}"))
+        fli = ig["fleet"]
+        rows.append((
+            "service/ingest/fleet_roll", 0.0,
+            f"{fli['replicas']} replicas served {fli['served']} during "
+            f"{fli['rolling_refreshes']} rolling refreshes, "
+            f"errors={len(fli['errors'])}"))
+        if smoke:
+            if ig["speedup_full_over_delta"] < INGEST_SPEEDUP_GATE:
+                gate_failures.append(
+                    f"INGEST SPEEDUP REGRESSION: delta refresh only "
+                    f"{ig['speedup_full_over_delta']:.2f}x faster than "
+                    f"the full rebuild (gate >= {INGEST_SPEEDUP_GATE}x)")
+            if (ig["steady_state_compiles"]
+                    or ig["refresh_recompiles_total"]):
+                gate_failures.append(
+                    f"INGEST RECOMPILE REGRESSION: "
+                    f"{ig['steady_state_compiles']} serving-path compiles "
+                    f"/ {ig['refresh_recompiles_total']} refresh "
+                    f"recompiles in steady state (expected 0)")
+            if ig["incremental_refreshes"] != INGEST_N_DELTAS:
+                gate_failures.append(
+                    f"INGEST DELTA-PATH REGRESSION: only "
+                    f"{ig['incremental_refreshes']} of {INGEST_N_DELTAS} "
+                    f"advances took the incremental path")
+            if ig["recall_at_10_post_ingest"] < INGEST_RECALL_GATE:
+                gate_failures.append(
+                    f"INGEST RECALL REGRESSION: recall@10 "
+                    f"{ig['recall_at_10_post_ingest']:.3f} < "
+                    f"{INGEST_RECALL_GATE} after the delta refreshes")
+            if fli["errors"] or not fli["served"]:
+                gate_failures.append(
+                    f"INGEST FLEET REGRESSION: {len(fli['errors'])} "
+                    f"failed/dropped query batches during the rolling "
+                    f"refresh (served={fli['served']}): "
+                    f"{fli['errors'][:3]}")
+
     with open(OUT_JSON, "w") as f:
         json.dump(record, f, indent=1)
     rows.append(("service/json", 0.0, os.path.abspath(OUT_JSON)))
@@ -1367,11 +1634,21 @@ if __name__ == "__main__":
                          "compute; gated near-linear scaling) plus the "
                          "zero-lost-requests gate under one injected "
                          "replica kill; with --smoke, the fleet CI gate")
+    ap.add_argument("--ingest-sweep", action="store_true",
+                    help="measure delta-proportional incremental refresh "
+                         "under live ingest on a >= 2e4-column lake: "
+                         "delta-refresh wall vs a full-rebuild follower "
+                         f"(gated >= {INGEST_SPEEDUP_GATE:.0f}x), zero "
+                         "steady-state recompiles, post-ingest recall@10, "
+                         "and a rolling 2-replica fleet refresh with zero "
+                         "dropped queries; with --smoke, the ingest CI "
+                         "gate")
     args = ap.parse_args()
     for r in run(smoke=args.smoke, sweep_blocks=args.sweep_blocks,
                  batch_sweep_flag=args.batch_sweep,
                  open_loop_flag=args.open_loop,
                  scale_sweep_flag=args.scale_sweep,
                  warmstart_flag=args.warmstart,
-                 fleet_sweep_flag=args.fleet_sweep):
+                 fleet_sweep_flag=args.fleet_sweep,
+                 ingest_sweep_flag=args.ingest_sweep):
         print(",".join(map(str, r)))

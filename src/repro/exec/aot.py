@@ -40,7 +40,10 @@ from pathlib import Path
 
 import jax
 
-_SCHEMA = 1
+# Bump whenever a pipeline's jaxpr changes without its signature moving
+# (signatures hash statics+avals, not the traced program): schema 2 =
+# live-column counting in ``_local_all`` for bucket-padded corpora.
+_SCHEMA = 2
 
 
 def environment_signature() -> dict:

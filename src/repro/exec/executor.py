@@ -42,15 +42,99 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import features as FT
 from repro.exec import stages
 from repro.exec.aot import tree_aval_descriptors
 from repro.exec.plan import QueryPlan
-from repro.exec.sharded import build_sharded_pipeline, place_sharded_corpus
+from repro.exec.sharded import (_pad_to, build_sharded_pipeline,
+                                place_sharded_corpus)
+from repro.kernels.lsh_probe import PAD_CORPUS
 from repro.kernels.profile_distance import dequantize, quantize_profiles
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# Ingest deltas are padded up to this many rows before the on-device row
+# update, so the update executable's shapes come from a tiny fixed set
+# (one per grain multiple) instead of one per odd delta size.
+DELTA_ROW_GRAIN = 256
+
+
+class PlacementBundle:
+    """Refcounted bundle of device-resident arrays.
+
+    Successor executors built by :meth:`Executor.extended` retain their
+    predecessor's immutable bundles (the GBDT parameters) instead of
+    re-placing them, while per-version row arrays live in a bundle owned
+    by exactly one executor.  ``Executor.close`` releases its bundles;
+    device memory is freed only when the last holder releases —
+    retiring an old snapshot version never yanks arrays a newer version
+    still serves from, and the class-level live count gives leak tests a
+    direct handle on how many placements exist.
+    """
+
+    _live = 0
+    _live_lock = threading.Lock()
+
+    def __init__(self, arrays: dict):
+        self.arrays = dict(arrays)
+        self.refs = 1
+        self._lock = threading.Lock()
+        with PlacementBundle._live_lock:
+            PlacementBundle._live += 1
+
+    def retain(self) -> "PlacementBundle":
+        with self._lock:
+            if self.refs <= 0:
+                raise RuntimeError("retain() on a released bundle")
+            self.refs += 1
+        return self
+
+    def release(self) -> None:
+        with self._lock:
+            self.refs -= 1
+            if self.refs > 0:
+                return
+            self.arrays.clear()
+        with PlacementBundle._live_lock:
+            PlacementBundle._live -= 1
+
+    def nbytes(self) -> int:
+        return sum(int(getattr(a, "nbytes", 0))
+                   for a in self.arrays.values() if a is not None)
+
+
+def live_placement_bundles() -> int:
+    """Device placement bundles currently holding memory — bounded by
+    (live versions) × (bundles per executor) when nothing leaks."""
+    with PlacementBundle._live_lock:
+        return PlacementBundle._live
+
+
+@jax.jit
+def _update_rows2(arr, rows, row0):
+    """Write ``rows`` into ``arr[row0:row0+len(rows)]`` on device — the
+    delta-placement primitive: only ``rows`` crosses the host-device
+    link; the unchanged prefix is forked at HBM bandwidth."""
+    return jax.lax.dynamic_update_slice(arr, rows, (row0, jnp.int32(0)))
+
+
+@jax.jit
+def _update_rows1(arr, rows, row0):
+    return jax.lax.dynamic_update_slice(arr, rows, (row0,))
+
+
+@jax.jit
+def _update_rows_tree(arrs, rows, row0):
+    """Fused delta fork: ONE dispatch DUS-forks every array of the
+    corpus bundle (dict pytree) — XLA schedules the prefix copies
+    together instead of paying per-array dispatch latency."""
+    return jax.tree_util.tree_map(
+        lambda a, r: jax.lax.dynamic_update_slice(
+            a, r, (row0,) if a.ndim == 1 else (row0, jnp.int32(0))),
+        arrs, rows)
 
 
 # quantized scans over-fetch this multiple of k, then an exact fp32
@@ -106,7 +190,8 @@ def _local_all(zq, wq, tq, qid, z, zscale, w, cids, tids, gbdt_tuple,
                               block=block)
     s = jnp.where(stages.exclusion_mask(cids, tids, tq, qid), -jnp.inf, s)
     sc, ids = stages.merge_topk(s, cids, k)
-    n = jnp.full((zq.shape[0],), z.shape[0], jnp.int32)
+    # count live columns, not the (possibly bucket-padded) corpus rows
+    n = jnp.full((zq.shape[0],), stages.live_count(cids), jnp.int32)
     return sc, ids, n
 
 
@@ -169,8 +254,15 @@ class Executor:
                  profile_dtype: str = "fp32", z_scale=None,
                  fp32_rows=None, survivor_block: int = 32,
                  mesh=None, score_block: int = 4096, events=None,
-                 exec_cache=None):
-        self.n_columns = int(z.shape[0])
+                 exec_cache=None, n_padded: int | None = None):
+        # n_live = true resident columns; n_columns = the (optionally
+        # bucket-padded) corpus dimension every traced shape and every
+        # plan static is computed from.  Pad rows are inert sentinels
+        # (cid -1 → exclusion mask → -inf), bought so an ingest delta
+        # that stays inside its column bucket changes no compiled shape.
+        self.n_live = int(z.shape[0])
+        self.n_columns = max(int(n_padded), self.n_live) \
+            if n_padded is not None else self.n_live
         self.profile_dtype = str(profile_dtype)
         self.survivor_block = int(survivor_block)
         # the resident profile matrix: quantized sidecar + per-feature
@@ -204,24 +296,55 @@ class Executor:
         self._w_np = np.asarray(w)
         self._tids_np = (np.asarray(table_ids, np.int32)
                          if table_ids is not None
-                         else np.zeros((self.n_columns,), np.int32))
+                         else np.zeros((self.n_live,), np.int32))
         self._ckeys_np = (np.asarray(band_keys, np.uint32)
                           if band_keys is not None else None)
         self._coarse_np = (np.asarray(coarse_keys, np.uint32)
                            if coarse_keys is not None else None)
+        self._cids_np = np.arange(self.n_live, dtype=np.int32)
+        if self.n_columns > self.n_live:
+            # sentinel pad rows, mirroring place_sharded_corpus: the
+            # exclusion mask scores cid < 0 rows -inf everywhere
+            n = self.n_columns
+            self._z_np = _pad_to(self._z_np, n,
+                                 np.zeros((), self._z_np.dtype))
+            self._w_np = _pad_to(self._w_np, n, FT.HASH_SENTINEL)
+            self._tids_np = _pad_to(self._tids_np, n, -2)
+            self._cids_np = _pad_to(self._cids_np, n, -1)
+            if self._ckeys_np is not None:
+                self._ckeys_np = _pad_to(self._ckeys_np, n, PAD_CORPUS)
+            if self._coarse_np is not None:
+                self._coarse_np = _pad_to(self._coarse_np, n, PAD_CORPUS)
+        # spare-tail claim for the padded host mirrors: the FIRST same-
+        # bucket successor writes its delta rows into this executor's pad
+        # region in place (safe: cids/tids liveness masks are always per-
+        # executor copies, so our views keep masking those rows dead);
+        # later forks from the same predecessor fall back to a copy.  The
+        # claim cell is SHARED by zero-delta successors (they alias the
+        # same buffers, so a claim through either must stick for both).
+        self._host_lock = threading.Lock()
+        self._host_spare = [False]
         self._gbdt = tuple(map(jnp.asarray, gbdt_tuple))
+        self._gbdt_bundle = PlacementBundle(
+            {f"gbdt{i}": a for i, a in enumerate(self._gbdt)})
         self.mesh = mesh
         self.score_block = int(score_block)
         # device-resident copies for the local pipelines
         self._z = jnp.asarray(self._z_np)
         self._zscale = jnp.asarray(self._zscale_np)
         self._w = jnp.asarray(self._w_np)
-        self._cids = jnp.arange(self.n_columns, dtype=jnp.int32)
+        self._cids = jnp.asarray(self._cids_np)
         self._tids = jnp.asarray(self._tids_np)
         self._ckeys = (jnp.asarray(self._ckeys_np)
                        if self._ckeys_np is not None else None)
         self._coarse = (jnp.asarray(self._coarse_np)
                         if self._coarse_np is not None else None)
+        self._rows_bundle = PlacementBundle(dict(
+            z=self._z, zscale=self._zscale, w=self._w, cids=self._cids,
+            tids=self._tids, ckeys=self._ckeys, coarse=self._coarse))
+        # host→device bytes spent placing this corpus view (a successor
+        # built by ``extended`` uploads only its delta rows)
+        self.bytes_uploaded = self._rows_bundle.nbytes()
         # sharded state, built lazily per placement (shard_axes / grid)
         self._placed: dict[tuple, dict] = {}
         self._pipelines: dict[tuple, object] = {}
@@ -263,10 +386,191 @@ class Executor:
         self._compiled.clear()
         self._z = self._w = self._cids = self._tids = self._ckeys = None
         self._zscale = self._coarse = None
+        # release the refcounted bundles: the row bundle is owned (freed
+        # now unless a successor forked mid-flight), the GBDT bundle is
+        # shared across versions and frees only at its last release
+        self._rows_bundle.release()
+        self._gbdt_bundle.release()
 
     @property
     def closed(self) -> bool:
         return self._closed
+
+    # -- delta placement ----------------------------------------------------
+
+    def extended(self, z_rows, w_rows, *, table_ids, band_keys=None,
+                 coarse_keys=None, fp32_rows=None,
+                 n_padded: int | None = None) -> "Executor":
+        """Successor executor for an append-only corpus delta.
+
+        Only the new rows (grain-padded to :data:`DELTA_ROW_GRAIN`) cross
+        the host-device link: when the padded corpus stays inside the
+        same column bucket, every device tensor is forked on-device by
+        one ``dynamic_update_slice`` over the predecessor's resident
+        array — compiled once per grain multiple and reused for every
+        later ingest.  The successor shares the predecessor's GBDT
+        placement (refcounted), its AOT dispatch table, pipelines and
+        first-contact set, so a same-bucket successor serves with **zero
+        recompiles**; a zero-row delta shares the row bundle outright.
+        Sharded ``_placed`` corpora are rebuilt lazily on first sharded
+        execute.  Crossing a bucket boundary re-places the corpus at the
+        new padded size (ideally pre-warmed in the background first).
+
+        ``z_rows`` must be fp32 z-scored rows under the predecessor's
+        normalization stats — quantized-resident corpora fall back to a
+        full rebuild at the engine layer.
+        """
+        if self._closed:
+            raise RuntimeError("executor is closed")
+        if self.profile_dtype != "fp32":
+            raise NotImplementedError(
+                "delta placement requires an fp32-resident corpus; "
+                "quantized corpora take the full-rebuild path")
+        z_rows = np.asarray(z_rows, np.float32)
+        w_rows = np.asarray(w_rows, self._w_np.dtype)
+        d = int(z_rows.shape[0])
+        if (self._ckeys_np is None) != (band_keys is None):
+            raise ValueError("band_keys must match the predecessor's")
+        if (self._coarse_np is None) != (coarse_keys is None):
+            raise ValueError("coarse_keys must match the predecessor's")
+        n_live2 = self.n_live + d
+        n_pad2 = max(int(n_padded), n_live2) if n_padded is not None \
+            else max(self.n_columns, n_live2)
+
+        ex = object.__new__(Executor)
+        ex.n_live = n_live2
+        ex.n_columns = n_pad2
+        ex.profile_dtype = self.profile_dtype
+        ex.survivor_block = self.survivor_block
+        ex.mesh = self.mesh
+        ex.score_block = self.score_block
+        ex._zscale_np = self._zscale_np
+        ex._zf_np = None
+        ex._fp32_rows = fp32_rows
+        ex._gbdt = self._gbdt
+        ex._gbdt_bundle = self._gbdt_bundle.retain()
+        ex._exec_cache = self._exec_cache
+        ex._events = self._events
+        ex._placed = {}
+        ex._pipelines = dict(self._pipelines)
+        ex._grid_meshes = dict(self._grid_meshes)
+        ex._compiled = dict(self._compiled)
+        ex._seen_shapes = set(self._seen_shapes)
+        ex._dispatch_stats = {"aot": 0, "fallback": 0}
+        ex._tls = threading.local()
+        ex._closed = False
+
+        def cat(old, rows, fill):
+            out = np.concatenate([np.asarray(old[:self.n_live]), rows]) \
+                if d else np.asarray(old[:self.n_live])
+            return _pad_to(out, n_pad2, fill)
+
+        cid_rows = np.arange(self.n_live, n_live2, dtype=np.int32)
+        tid_rows = np.asarray(table_ids, np.int32)
+        # same-bucket successors write the big value mirrors into the
+        # predecessor's spare pad tail in place (first claimant only) —
+        # O(delta) instead of an O(bucket) host copy.  The pad rows'
+        # VALUES changing under the predecessor is harmless: liveness is
+        # decided by cids/tids, which stay per-executor copies below, so
+        # every predecessor view keeps masking those rows dead.  A
+        # zero-delta same-pad successor aliases the buffers outright and
+        # shares the claim cell, so a later claim through either sticks.
+        ex._host_lock = threading.Lock()
+        same_pad = n_pad2 == self.n_columns
+        inplace = False
+        if d and same_pad:
+            with self._host_lock:
+                inplace = not self._host_spare[0]
+                if inplace:
+                    self._host_spare[0] = True
+        ex._host_spare = self._host_spare if (d == 0 and same_pad) \
+            else [False]
+
+        def share(old, rows):
+            old[self.n_live:n_live2] = rows
+            return old
+
+        if d == 0 and same_pad:
+            ex._z_np, ex._w_np = self._z_np, self._w_np
+            ex._ckeys_np, ex._coarse_np = self._ckeys_np, self._coarse_np
+        elif inplace:
+            ex._z_np = share(self._z_np, z_rows)
+            ex._w_np = share(self._w_np, w_rows)
+            ex._ckeys_np = None if band_keys is None else \
+                share(self._ckeys_np, np.asarray(band_keys, np.uint32))
+            ex._coarse_np = None if coarse_keys is None else \
+                share(self._coarse_np, np.asarray(coarse_keys, np.uint32))
+        else:
+            ex._z_np = cat(self._z_np, z_rows, 0.0)
+            ex._w_np = cat(self._w_np, w_rows, FT.HASH_SENTINEL)
+            ex._ckeys_np = None if band_keys is None else \
+                cat(self._ckeys_np, np.asarray(band_keys, np.uint32),
+                    PAD_CORPUS)
+            ex._coarse_np = None if coarse_keys is None else \
+                cat(self._coarse_np, np.asarray(coarse_keys, np.uint32),
+                    PAD_CORPUS)
+        if d == 0 and same_pad:
+            ex._tids_np, ex._cids_np = self._tids_np, self._cids_np
+        else:
+            ex._tids_np = cat(self._tids_np, tid_rows, -2)
+            ex._cids_np = cat(self._cids_np, cid_rows, -1)
+
+        if d == 0 and n_pad2 == self.n_columns:
+            # nothing to upload: share the row bundle outright
+            ex._z, ex._zscale, ex._w = self._z, self._zscale, self._w
+            ex._cids, ex._tids = self._cids, self._tids
+            ex._ckeys, ex._coarse = self._ckeys, self._coarse
+            ex._rows_bundle = self._rows_bundle.retain()
+            ex.bytes_uploaded = 0
+        elif n_pad2 == self.n_columns:
+            # same bucket: upload the grain-padded delta, fork on device
+            grain = min(-(-d // DELTA_ROW_GRAIN) * DELTA_ROW_GRAIN,
+                        n_pad2 - self.n_live)
+            row0 = jnp.int32(self.n_live)
+            olds: dict = {}
+            news: dict = {}
+
+            def stage(key, old_dev, rows, fill):
+                olds[key] = old_dev
+                news[key] = _pad_to(rows, grain, fill)
+
+            stage("z", self._z, z_rows, 0.0)
+            stage("w", self._w, w_rows, FT.HASH_SENTINEL)
+            stage("cids", self._cids, cid_rows, -1)
+            stage("tids", self._tids, tid_rows, -2)
+            if band_keys is not None:
+                stage("ckeys", self._ckeys,
+                      np.asarray(band_keys, np.uint32), PAD_CORPUS)
+            if coarse_keys is not None:
+                stage("coarse", self._coarse,
+                      np.asarray(coarse_keys, np.uint32), PAD_CORPUS)
+            ex.bytes_uploaded = sum(int(v.nbytes) for v in news.values())
+            upd = _update_rows_tree(olds, news, row0)
+            ex._z, ex._w = upd["z"], upd["w"]
+            ex._cids, ex._tids = upd["cids"], upd["tids"]
+            ex._ckeys = upd.get("ckeys")
+            ex._coarse = upd.get("coarse")
+            ex._zscale = self._zscale        # per-feature: no row axis
+        else:
+            # bucket boundary crossed: re-place at the new padded size
+            ex._z = jnp.asarray(ex._z_np)
+            ex._zscale = self._zscale
+            ex._w = jnp.asarray(ex._w_np)
+            ex._cids = jnp.asarray(ex._cids_np)
+            ex._tids = jnp.asarray(ex._tids_np)
+            ex._ckeys = (jnp.asarray(ex._ckeys_np)
+                         if ex._ckeys_np is not None else None)
+            ex._coarse = (jnp.asarray(ex._coarse_np)
+                          if ex._coarse_np is not None else None)
+            ex.bytes_uploaded = sum(
+                int(a.nbytes) for a in (ex._z, ex._w, ex._cids, ex._tids,
+                                        ex._ckeys, ex._coarse)
+                if a is not None)
+        ex._rows_bundle = getattr(ex, "_rows_bundle", None) or \
+            PlacementBundle(dict(
+                z=ex._z, zscale=ex._zscale, w=ex._w, cids=ex._cids,
+                tids=ex._tids, ckeys=ex._ckeys, coarse=ex._coarse))
+        return ex
 
     # -- sharded state ------------------------------------------------------
 
@@ -314,7 +618,8 @@ class Executor:
                 z = np.asarray(z, np.float32) * self._zscale_np
             self._placed[key] = place_sharded_corpus(
                 mesh, axes, z, self._w_np,
-                table_ids=self._tids_np, band_keys=self._ckeys_np)
+                table_ids=self._tids_np, band_keys=self._ckeys_np,
+                cids=self._cids_np)
         return self._placed[key]
 
     def _pipeline(self, plan: QueryPlan):
@@ -333,7 +638,8 @@ class Executor:
 
     # -- AOT warmup ---------------------------------------------------------
 
-    def aot_compile(self, entries, *, cache=None) -> dict:
+    def aot_compile(self, entries, *, cache=None,
+                    n_columns: int | None = None) -> dict:
         """AOT-compile (or load from the persistent executable cache) every
         pipeline the ``(plan, padded_batch)`` pairs in ``entries`` would
         touch, register them in the dispatch table, and pre-seed the
@@ -351,13 +657,22 @@ class Executor:
         pair for every fresh compile, so warmup compiles land in the same
         ``compile_ms`` histogram first-contact serving compiles do.
         Inadmissible plans (no band keys / coarse digest / mesh) are
-        counted as skips, not errors.  Returns a report dict."""
+        counted as skips, not errors.
+
+        ``n_columns`` pre-warms for a DIFFERENT corpus size than the
+        resident one — the background next-column-bucket warm ahead of a
+        bucket-boundary crossing.  Corpus avals are shape stand-ins at
+        that size (local plans only; sharded plans are skipped), and the
+        compiled executables land in both the dispatch table and the
+        persistent cache, keyed by the override size — a successor built
+        at that bucket inherits them and serves its first request with
+        zero compiles.  Returns a report dict."""
         if self._closed:
             raise RuntimeError("executor is closed")
         cache = cache if cache is not None else self._exec_cache
         units, seen_units, planned, skipped = [], set(), [], 0
         for plan, q in entries:
-            us = self._plan_units(plan, int(q))
+            us = self._plan_units(plan, int(q), n_columns=n_columns)
             if us is None:
                 skipped += 1
                 continue
@@ -412,20 +727,25 @@ class Executor:
                                    plan.grid, q))
         return report
 
-    def _plan_units(self, plan: QueryPlan, q: int):
+    def _plan_units(self, plan: QueryPlan, q: int,
+                    n_columns: int | None = None):
         """Executable units — dispatch key, dynamic avals, lazy ``lower``
         thunk, cache-signature fields — that ``plan`` touches at padded
         batch ``q``: the scan pipeline, plus the exact-rescore re-rank when
         the resident profiles are quantized.  None when this executor
-        cannot serve the plan at all."""
-        if self.n_columns == 0 or q <= 0:
+        cannot serve the plan at all.  ``n_columns`` overrides the corpus
+        size (next-bucket pre-warm: corpus avals become shape stand-ins;
+        local plans only)."""
+        c_over = None if n_columns is None or \
+            int(n_columns) == self.n_columns else int(n_columns)
+        if (self.n_columns == 0 and c_over is None) or q <= 0:
             return None
         if plan.candidates != "all" and self._ckeys_np is None:
             return None
         if plan.candidates == "tiered" and (plan.sharded or
                                             self._coarse_np is None):
             return None
-        if plan.sharded and self.mesh is None:
+        if plan.sharded and (self.mesh is None or c_over is not None):
             return None
         fnum = int(self._z_np.shape[1])
         fw = int(self._w_np.shape[1])
@@ -472,16 +792,18 @@ class Executor:
                 r = min(plan.k, min(plan.k, max(width, 1)) * d_total)
                 units.append(self._rescore_unit(q, r, plan.k, fnum, fw, wdt))
         else:
-            name, fn, statics = self._local_spec(plan)
+            name, fn, statics = self._local_spec(plan, n_columns=c_over)
             zq, wq = S((q, fnum), np.float32), S((q, fw), wdt)
             tqv, qidv = S((q,), np.int32), S((q,), np.int32)
             qk = (S((q, int(self._ckeys_np.shape[1])), np.uint32)
                   if plan.candidates != "all" else None)
             qc = (S((q, int(self._coarse_np.shape[1])), np.uint32)
                   if plan.candidates == "tiered" else None)
-            dyn = self._local_dyn(plan, zq, wq, tqv, qidv, qk, qc)
+            dyn = self._local_dyn(plan, zq, wq, tqv, qidv, qk, qc,
+                                  n_columns=c_over)
             units.append(dict(
-                key=self._exe_key(name, q, statics), name=name, q=q,
+                key=self._exe_key(name, q, statics, n_columns=c_over),
+                name=name, q=q,
                 statics=statics, dyn=dyn, mesh_desc=None,
                 lower=lambda fn=fn, dyn=dyn, statics=statics:
                     fn.lower(*dyn, **statics)))
@@ -489,16 +811,18 @@ class Executor:
                 # local scans over-fetch: the pipeline's static k IS the
                 # width of the top set handed to the exact re-rank
                 units.append(self._rescore_unit(q, int(statics["k"]),
-                                                plan.k, fnum, fw, wdt))
+                                                plan.k, fnum, fw, wdt,
+                                                n_columns=c_over))
         return units
 
-    def _rescore_unit(self, q, r, k, fnum, fw, wdt):
+    def _rescore_unit(self, q, r, k, fnum, fw, wdt, n_columns=None):
         S = jax.ShapeDtypeStruct
         statics = dict(k=k)
         dyn = (S((q, fnum), np.float32), S((q, fw), wdt),
                S((q, r, fnum), np.float32), S((q, r, fw), wdt),
                self._gbdt, S((q, r), np.float32), S((q, r), np.int32))
-        return dict(key=self._exe_key("_rescore_exact", q, statics, (r,)),
+        return dict(key=self._exe_key("_rescore_exact", q, statics, (r,),
+                                      n_columns=n_columns),
                     name="_rescore_exact", q=q, statics=statics, dyn=dyn,
                     mesh_desc=None,
                     lower=lambda dyn=dyn, k=k:
@@ -521,7 +845,7 @@ class Executor:
             raise RuntimeError("executor is closed (its snapshot version "
                                "was retired); pin a live version instead")
         q = int(np.asarray(zq).shape[0])
-        if self.n_columns == 0 or q == 0:
+        if self.n_live == 0 or q == 0:
             return (np.full((q, plan.k), -np.inf, np.float32),
                     np.full((q, plan.k), -1, np.int32),
                     np.zeros((q,), np.int32))
@@ -577,9 +901,9 @@ class Executor:
         tier = getattr(self._tls, "tier_stats", None)
         if tier is not None and self._events is not None:
             n_hits, n_surv = tier
-            frac = float(n_surv.mean()) / max(self.n_columns, 1)
+            frac = float(n_surv.mean()) / max(self.n_live, 1)
             self._events.publish(
-                "coarse_pass", n_queries=q, n_columns=self.n_columns,
+                "coarse_pass", n_queries=q, n_columns=self.n_live,
                 survivor_budget=plan.survivor_budget,
                 hits_mean=float(n_hits.mean()),
                 survivors_mean=float(n_surv.mean()),
@@ -602,7 +926,10 @@ class Executor:
         re-rank them exactly.  The gather is (Q, R, F) with R a small
         multiple of k, so the cost is independent of the lake size."""
         ids_np = np.asarray(ids)
-        safe = np.clip(ids_np, 0, self.n_columns - 1)
+        # clip to live rows, not the bucket-padded corpus: the fp32 source
+        # may be an unpadded view (invalid slots are -1 → row 0, already
+        # excluded by the scan's non-finite score)
+        safe = np.clip(ids_np, 0, self.n_live - 1)
         dyn = (jnp.asarray(zq, jnp.float32), jnp.asarray(wq),
                jnp.asarray(np.asarray(self._fp32_rows(safe), np.float32)),
                jnp.asarray(self._w_np[safe]), self._gbdt,
@@ -612,9 +939,16 @@ class Executor:
 
     # -- AOT dispatch -------------------------------------------------------
 
-    @staticmethod
-    def _exe_key(name: str, q: int, statics: dict, extra=()) -> tuple:
-        return (name, int(q), tuple(sorted(statics.items())), tuple(extra))
+    def _exe_key(self, name: str, q: int, statics: dict, extra=(),
+                 n_columns: int | None = None) -> tuple:
+        # the corpus dimension is part of the executable's identity: a
+        # successor inheriting ``_compiled`` across a bucket crossing must
+        # not dispatch an old-bucket executable (same statics, different
+        # corpus avals), and next-bucket pre-warm entries must land under
+        # keys the post-crossing successor actually looks up
+        c = self.n_columns if n_columns is None else int(n_columns)
+        return (name, int(q), int(c), tuple(sorted(statics.items())),
+                tuple(extra))
 
     def _call(self, name, fn, dyn, statics: dict, extra=()):
         """Dispatch one pipeline call: the AOT-compiled executable when
@@ -633,20 +967,22 @@ class Executor:
         only ladder shapes must show zero fallbacks (test-gated)."""
         return dict(self._dispatch_stats)
 
-    def _local_spec(self, plan: QueryPlan):
+    def _local_spec(self, plan: QueryPlan, n_columns: int | None = None):
         """(name, fn, statics) of the local pipeline ``plan`` runs — one
         resolution shared by the serving dispatch and AOT warmup, so their
-        dispatch keys agree byte-for-byte."""
+        dispatch keys agree byte-for-byte.  ``n_columns`` overrides the
+        clamp dimension for next-bucket pre-warm."""
+        c = self.n_columns if n_columns is None else int(n_columns)
         # quantized scans hand an over-fetched top set to the exact fp32
         # re-rank in execute(); fp32 scans keep k as-is
         k = (plan.k if self._fp32_rows is None
              else max(plan.k, RESCORE_MULT * plan.k))
         if plan.candidates == "all":
             return ("_local_all", _local_all,
-                    dict(k=min(k, self.n_columns), block=self.score_block))
-        budget = min(plan.budget, self.n_columns)
+                    dict(k=min(k, c), block=self.score_block))
+        budget = min(plan.budget, c)
         if plan.candidates == "tiered":
-            surv = min(max(plan.survivor_budget, budget), self.n_columns)
+            surv = min(max(plan.survivor_budget, budget), c)
             return ("_local_tiered", _local_tiered,
                     dict(k=min(k, budget, surv), budget=min(budget, surv),
                          survivor_budget=surv, block_c=self.survivor_block,
@@ -655,17 +991,35 @@ class Executor:
                 dict(kind=plan.candidates, k=min(k, budget), budget=budget,
                      interpret=_interpret()))
 
-    def _local_dyn(self, plan: QueryPlan, zq, wq, tq, qid, qkeys, qcoarse):
-        """Dynamic-argument tuple of the local pipeline, in call order."""
+    def _local_dyn(self, plan: QueryPlan, zq, wq, tq, qid, qkeys, qcoarse,
+                   n_columns: int | None = None):
+        """Dynamic-argument tuple of the local pipeline, in call order.
+        With ``n_columns`` set, corpus arrays become shape stand-ins at
+        that size (next-bucket pre-warm lowers against the future corpus
+        shapes without materializing them)."""
+        if n_columns is None:
+            z, w = self._z, self._w
+            cids, tids = self._cids, self._tids
+            ckeys, coarse = self._ckeys, self._coarse
+        else:
+            S = jax.ShapeDtypeStruct
+            c = int(n_columns)
+            z = S((c, int(self._z_np.shape[1])), self._z_np.dtype)
+            w = S((c, int(self._w_np.shape[1])), self._w_np.dtype)
+            cids = S((c,), np.int32)
+            tids = S((c,), np.int32)
+            ckeys = (S((c, int(self._ckeys_np.shape[1])), np.uint32)
+                     if self._ckeys_np is not None else None)
+            coarse = (S((c, int(self._coarse_np.shape[1])), np.uint32)
+                      if self._coarse_np is not None else None)
         if plan.candidates == "all":
-            return (zq, wq, tq, qid, self._z, self._zscale, self._w,
-                    self._cids, self._tids, self._gbdt)
+            return (zq, wq, tq, qid, z, self._zscale, w, cids, tids,
+                    self._gbdt)
         if plan.candidates == "tiered":
-            return (zq, wq, qkeys, qcoarse, tq, qid, self._z, self._zscale,
-                    self._w, self._ckeys, self._coarse, self._cids,
-                    self._tids, self._gbdt)
-        return (zq, wq, qkeys, tq, qid, self._z, self._zscale, self._w,
-                self._ckeys, self._cids, self._tids, self._gbdt)
+            return (zq, wq, qkeys, qcoarse, tq, qid, z, self._zscale,
+                    w, ckeys, coarse, cids, tids, self._gbdt)
+        return (zq, wq, qkeys, tq, qid, z, self._zscale, w,
+                ckeys, cids, tids, self._gbdt)
 
     def _sharded_statics(self, plan: QueryPlan) -> dict:
         """Identity of a sharded pipeline for dispatch/cache keys — the

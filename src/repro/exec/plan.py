@@ -66,6 +66,17 @@ MODES = ("auto", "lsh", "full", "sharded", "tiered")
 # with the exact sizes a ``bench_service --batch-sweep`` run timed.
 DEFAULT_BATCH_BUCKETS = (8, 16, 32, 64, 128, 256)
 
+# The same idea on the CORPUS axis: engines taking live ingest snap the
+# resident column count to this ladder (padding with sentinel rows the
+# exclusion mask scores -inf), so a delta refresh that stays inside its
+# bucket changes no traced shape — every AOT executable is reused verbatim
+# and steady-state refresh performs zero recompiles.  Powers of two so
+# every admissible d_shards divides every bucket and the streamed scorer's
+# block path stays aligned; ``launch.costmodel.derive_column_buckets``
+# replaces this default with a ladder fit to measured ingest-sweep data.
+DEFAULT_COLUMN_BUCKETS = (1024, 2048, 4096, 8192, 16384, 32768,
+                          65536, 131072)
+
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
@@ -130,6 +141,11 @@ class PlannerConfig:
     # batch up to the smallest bucket that fits so compiled executables
     # and per-bucket grid choices are reused across batch sizes
     batch_buckets: tuple = ()
+    # column-count bucket ladder (sorted ascending); empty = no snapping.
+    # ``snap_columns`` rounds the resident column count up to the smallest
+    # bucket that fits, so ingest deltas that stay inside a bucket keep
+    # every traced corpus shape — and hence every AOT executable — stable
+    column_buckets: tuple = ()
     # ---- tiered candidate stage knobs ----
     n_coarse_bands: int = 16        # super-band digest width S
     survivor_block: int = 32        # coarse survivor-block granularity
@@ -197,6 +213,32 @@ class Planner:
                 return int(b)
         top = int(buckets[-1])
         return -(-n // top) * top
+
+    def snap_columns(self, n_columns: int) -> int:
+        """Padded corpus size for ``n_columns``: the smallest configured
+        column bucket that fits, the next multiple of the top bucket beyond
+        the ladder, or ``n_columns`` itself when no ladder is configured.
+        The pad rows are inert sentinels (column id -1 → masked to -inf by
+        the exclusion stage), bought so an ingest delta that stays inside
+        its bucket re-dispatches the same compiled executables."""
+        n = max(int(n_columns), 1)
+        buckets = tuple(sorted(self.config.column_buckets))
+        if not buckets:
+            return n
+        for b in buckets:
+            if n <= b:
+                return int(b)
+        top = int(buckets[-1])
+        return -(-n // top) * top
+
+    def next_column_bucket(self, n_columns: int) -> int | None:
+        """The bucket one rung above ``n_columns``'s — what a background
+        pre-warm compiles ahead of a bucket-boundary crossing — or None
+        when no ladder is configured."""
+        if not self.config.column_buckets:
+            return None
+        cur = self.snap_columns(n_columns)
+        return self.snap_columns(cur + 1)
 
     def _n_shards(self, mesh) -> int:
         """Grid capacity of ``mesh``: the data-shardable devices, times a

@@ -47,27 +47,32 @@ def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
 
 def place_sharded_corpus(mesh: Mesh, shard_axes, z: np.ndarray, w: np.ndarray,
                          table_ids: np.ndarray | None = None,
-                         band_keys: np.ndarray | None = None) -> dict:
+                         band_keys: np.ndarray | None = None,
+                         cids: np.ndarray | None = None) -> dict:
     """Pad the column axis to a multiple of the data-shard count and
     device_put the corpus tensors for a sharded pipeline.
 
     Returns ``{"z", "w", "cids"[, "tids"][, "ckeys"]}`` — ``cids`` are
-    global column ids (-1 on padding), ``tids`` pad with -2 (matches no
-    real table and no disabled-query sentinel), ``ckeys`` pad with the
-    probe kernel's corpus sentinel. On a grid mesh, ``P(shard_axes)``
-    replicates each column shard across the query (and model) axes
-    automatically; query-side tensors are placed by the executor with
-    the plan's own query-axis sharding.
+    global column ids (-1 on padding; pass ``cids`` explicitly when the
+    caller's rows are already bucket-padded with sentinel rows, so
+    arange does not assign real ids to them), ``tids`` pad with -2
+    (matches no real table and no disabled-query sentinel), ``ckeys``
+    pad with the probe kernel's corpus sentinel. On a grid mesh,
+    ``P(shard_axes)`` replicates each column shard across the query (and
+    model) axes automatically; query-side tensors are placed by the
+    executor with the plan's own query-axis sharding.
     """
     n = z.shape[0]
     n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
     n_pad = -(-n // n_shards) * n_shards
     shard = NamedSharding(mesh, P(tuple(shard_axes)))
+    if cids is None:
+        cids = np.arange(n, dtype=np.int32)
     out = {
         "z": jax.device_put(_pad_to(z.astype(np.float32), n_pad, 0.0), shard),
         "w": jax.device_put(_pad_to(w, n_pad, FT.HASH_SENTINEL), shard),
         "cids": jax.device_put(
-            _pad_to(np.arange(n, dtype=np.int32), n_pad, -1), shard),
+            _pad_to(np.asarray(cids, np.int32), n_pad, -1), shard),
     }
     if table_ids is not None:
         out["tids"] = jax.device_put(

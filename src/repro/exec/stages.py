@@ -38,6 +38,13 @@ _LSH_PRIORITY_BOOST = 4.0
 # stage 1: candidate generation
 # ---------------------------------------------------------------------------
 
+def live_count(cids):
+    """Number of live (non-padding) columns on this corpus axis — counts
+    ``cids >= 0`` so bucket-padded sentinel rows never inflate per-query
+    scored-column accounting."""
+    return jnp.sum((cids >= 0).astype(jnp.int32))
+
+
 def exclusion_mask(cids, tids, tq, qid):
     """(Q, C) bool — True where a column must NOT be returned for a query.
 

@@ -417,6 +417,53 @@ def derive_batch_buckets(bench="BENCH_service.json"):
     return tuple(sizes) if sizes else DEFAULT_BATCH_BUCKETS
 
 
+def derive_column_buckets(bench="BENCH_service.json"):
+    """Corpus-column bucket ladder for delta-proportional refresh, derived
+    from a measured ``BENCH_service.json``.
+
+    The scale sweep records which lake sizes this deployment actually
+    serves; snapping the PLACED corpus dimension to those rungs (padded
+    with inert sentinel rows) keeps every traced shape stable across
+    ingest deltas, so an in-bucket refresh re-dispatches the compiled
+    executables verbatim — zero steady-state recompiles.  The ladder is
+    the measured lake sizes rounded UP to the analytic default rungs
+    (a rung per measured point would make crossings too frequent to
+    amortize).  Without a sweep (or without a readable file) the
+    analytic default ``repro.exec.DEFAULT_COLUMN_BUCKETS`` is returned.
+
+    ``bench`` is a path or an already-loaded record.  Returns a sorted
+    tuple of bucket sizes.
+    """
+    import json
+
+    from repro.exec.plan import DEFAULT_COLUMN_BUCKETS
+    record = bench
+    if isinstance(bench, (str, os.PathLike)):
+        try:
+            with open(bench) as f:
+                record = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return DEFAULT_COLUMN_BUCKETS
+    sweep = (record or {}).get("scale_sweep", {})
+    lakes = sorted({int(e["n_columns"]) for e in sweep.get("lakes", [])
+                    if int(e.get("n_columns", 0)) >= 1})
+    if not lakes:
+        return DEFAULT_COLUMN_BUCKETS
+    rungs = set()
+    for n in lakes:
+        snapped = next((b for b in DEFAULT_COLUMN_BUCKETS if n <= b),
+                       -(-n // DEFAULT_COLUMN_BUCKETS[-1])
+                       * DEFAULT_COLUMN_BUCKETS[-1])
+        rungs.add(int(snapped))
+        # one headroom rung above the largest measured lake, so steady
+        # ingest has a pre-warmable bucket to grow into
+    top = max(rungs)
+    nxt = next((b for b in DEFAULT_COLUMN_BUCKETS if b > top),
+               top + DEFAULT_COLUMN_BUCKETS[-1])
+    rungs.add(int(nxt))
+    return tuple(sorted(rungs))
+
+
 def make_calibrated_cost_fn(constants: dict):
     """Wrap fitted per-stage constants into a planner ``cost_fn`` hook."""
 

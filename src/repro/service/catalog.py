@@ -238,6 +238,56 @@ def _stats_from_moments(moments: Iterable[dict]):
     return mean.astype(np.float32), std.astype(np.float32)
 
 
+def manifest_delta(old_m: dict | None, new_m: dict | None) -> list[str] | None:
+    """Appended segments when ``new_m`` is a pure append-only advance of
+    ``old_m``, else None.
+
+    Append-only means: same MinHash geometry, the *identical* tombstone
+    list (not merely both empty — equal drops filter the shared prefix
+    identically), and ``old_m``'s segment list a prefix of ``new_m``'s.
+    Under those conditions :func:`materialize_snapshot` concatenates
+    segments in manifest order with the same per-segment filtering, so
+    the new snapshot's first ``old.n_columns`` rows are byte-identical
+    to the old snapshot's — the contract the engine's delta-refresh path
+    (``EngineConfig.incremental``) builds on.  Drops, compactions and
+    re-signs all return None → full rebuild."""
+    if old_m is None or new_m is None:
+        return None
+    if (int(old_m["n_perm"]) != int(new_m["n_perm"])
+            or int(old_m["minhash_seed"]) != int(new_m["minhash_seed"])):
+        return None
+    if list(old_m.get("dropped_ids", ())) != \
+            list(new_m.get("dropped_ids", ())):
+        return None
+    old_segs = list(old_m.get("segments", ()))
+    new_segs = list(new_m.get("segments", ()))
+    if new_segs[:len(old_segs)] != old_segs:
+        return None
+    return new_segs[len(old_segs):]
+
+
+def moments_from_stats(mean: np.ndarray, std: np.ndarray,
+                       count: int) -> dict:
+    """Reconstruct accumulated float64 moments from (mean, std, count) —
+    the inverse of :func:`_stats_from_moments` (up to the <1e-6 std
+    clamp).  Lets a freshly built engine state seed its moment
+    accumulator without an O(lake) pass over the profile bytes."""
+    m = np.asarray(mean, np.float64)
+    s = np.asarray(std, np.float64)
+    n = int(count)
+    return {"count": n, "sum": m * n, "sumsq": (s * s + m * m) * n}
+
+
+def fold_moments(acc: dict, delta: dict) -> dict:
+    """Accumulate ``delta``'s float64 moments into a copy of ``acc`` —
+    the O(delta) stats update an incremental refresh performs."""
+    return {"count": int(acc["count"]) + int(delta["count"]),
+            "sum": np.asarray(acc["sum"], np.float64)
+            + np.asarray(delta["sum"], np.float64),
+            "sumsq": np.asarray(acc["sumsq"], np.float64)
+            + np.asarray(delta["sumsq"], np.float64)}
+
+
 def materialize_snapshot(root: str, manifest: dict, *,
                          lazy: bool = False) -> CatalogSnapshot:
     """Materialize the live columns of ``manifest`` into an immutable
@@ -295,6 +345,101 @@ def materialize_snapshot(root: str, manifest: dict, *,
                            table_names=table_names,
                            version=int(manifest["version"]),
                            minhash_seed=int(manifest["minhash_seed"]))
+
+
+# spare-capacity factor for extended-snapshot buffers: each append-only
+# advance writes its new rows into the previous buffer's tail when room
+# remains, so steady-state snapshot materialization copies only the
+# delta; the O(lake) copy recurs only on capacity growth (amortized)
+_SNAP_GROWTH = 1.5
+
+
+def extend_snapshot(root: str, prev: CatalogSnapshot, prev_manifest: dict,
+                    manifest: dict) -> CatalogSnapshot | None:
+    """Delta-materialize ``manifest`` by appending its new segments onto
+    an already-materialized predecessor snapshot — O(delta) disk reads
+    and (steady-state) O(delta) host copies, instead of re-reading and
+    re-concatenating every live segment.
+
+    Returns ``None`` when the advance is not append-only per
+    :func:`manifest_delta` (drops, compactions, geometry changes) — those
+    take the full :func:`materialize_snapshot` path.
+
+    The arrays of the returned snapshot are views over capacity buffers
+    carrying ``_SNAP_GROWTH`` headroom (stashed on the snapshot as
+    ``_capacity``).  Writing a successor's rows into a predecessor's
+    spare tail never mutates any published view: every view is bounded
+    by its own version's column count, and concurrent extensions of the
+    same predecessor write byte-identical rows (the bytes are a pure
+    function of the on-disk segments), so the race is benign.  Z-score
+    stats are recomputed over the concatenated matrix with the same
+    reduction as the eager path, keeping the result bit-identical to a
+    fresh materialization."""
+    new_segs = manifest_delta(prev_manifest, manifest)
+    if new_segs is None:
+        return None
+    version = int(manifest["version"])
+    caps_in = getattr(prev, "_capacity", {})
+    if not new_segs:
+        snap = dataclasses.replace(prev, version=version)
+        snap._capacity = caps_in
+        return snap
+    dropped = set(manifest["dropped_ids"])
+    acc: dict[str, list] = {k: [] for k in ("numeric", "words", "n_rows",
+                                            "sigs", "table_ids")}
+    names = list(prev.names)
+    table_names = dict(prev.table_names)
+    for seg in new_segs:
+        part = _load_segment(root, seg)
+        keep = ~np.isin(part["table_ids"], list(dropped))
+        for k in acc:
+            acc[k].append(part[k][keep])
+        names.extend([n for n, ok in zip(part["names"], keep) if ok])
+        table_names.update({i: t for t, i in part["tables"].items()
+                            if i not in dropped})
+
+    caps_out: dict[str, np.ndarray] = {}
+
+    def ext(key: str, prev_arr: np.ndarray, dtype=None) -> np.ndarray:
+        parts = [np.asarray(p, dtype) if dtype is not None else np.asarray(p)
+                 for p in acc[key]]
+        c0 = int(prev_arr.shape[0])
+        c1 = c0 + sum(int(p.shape[0]) for p in parts)
+        cap = caps_in.get(key)
+        if cap is None or cap.shape[0] < c1 \
+                or not np.shares_memory(cap[:c0], prev_arr):
+            tail = prev_arr.shape[1:]
+            cap = np.empty((max(int(c1 * _SNAP_GROWTH), c1),) + tail,
+                           parts[0].dtype if dtype is None and parts
+                           else (dtype or prev_arr.dtype))
+            cap[:c0] = prev_arr
+        o = c0
+        for p in parts:
+            cap[o:o + p.shape[0]] = p
+            o += p.shape[0]
+        caps_out[key] = cap
+        return cap[:c1]
+
+    prof = prev.profiles
+    numeric = ext("numeric", np.asarray(prof.numeric), np.float32)
+    c = numeric.shape[0]
+    mean = numeric.mean(axis=0) if c else np.zeros((FT.F_NUM,), np.float32)
+    std = numeric.std(axis=0) if c else np.ones((FT.F_NUM,), np.float32)
+    std = np.where(std < 1e-6, 1.0, std).astype(np.float32)
+    profiles = LakeProfiles(numeric=numeric,
+                            words=ext("words", np.asarray(prof.words)),
+                            n_rows=ext("n_rows", np.asarray(prof.n_rows)),
+                            mean=mean.astype(np.float32), std=std)
+    snap = CatalogSnapshot(profiles=profiles,
+                           signatures=ext("sigs",
+                                          np.asarray(prev.signatures)),
+                           table_ids=ext("table_ids",
+                                         np.asarray(prev.table_ids)),
+                           names=names, table_names=table_names,
+                           version=version,
+                           minhash_seed=int(manifest["minhash_seed"]))
+    snap._capacity = caps_out
+    return snap
 
 
 # ---------------------------------------------------------------------------
@@ -1100,8 +1245,24 @@ class CatalogReader:
         with self._lock:
             if key in self._snaps:
                 return self._snaps[key]
-        snap = materialize_snapshot(self.root, self.manifest(version),
-                                    lazy=lazy)
+            # newest cached predecessor: an append-only advance extends it
+            # with only the new segments (O(delta)) instead of re-reading
+            # the lake.  A multi-segment lazy request already falls back
+            # to the eager copy, so extension never loses lazy behavior.
+            prev_key = max((k for k in self._snaps if k[0] < version),
+                           default=None)
+            prev = self._snaps.get(prev_key)
+        snap = None
+        if prev is not None:
+            try:
+                snap = extend_snapshot(self.root, prev,
+                                       self.manifest(prev_key[0]),
+                                       self.manifest(version))
+            except KeyError:      # predecessor manifest aged out of the tail
+                snap = None
+        if snap is None:
+            snap = materialize_snapshot(self.root, self.manifest(version),
+                                        lazy=lazy)
         with self._lock:
             self._snaps[key] = snap
             while len(self._snaps) > self._max_cached:

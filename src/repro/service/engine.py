@@ -69,7 +69,8 @@ from repro.kernels.profile_distance import quantize_profiles_streamed
 from repro.service import events as EV
 from repro.service.api import ColumnMatch, DiscoveryRequest, DiscoveryResponse
 from repro.service.catalog import (CatalogSnapshot, CatalogStore,
-                                   profile_and_sign)
+                                   fold_moments, manifest_delta,
+                                   moments_from_stats, profile_and_sign)
 from repro.service.lsh import LSHConfig, LSHIndex
 
 
@@ -116,6 +117,21 @@ class EngineConfig:
     # persistent executable cache directory (shared across engine
     # processes); None keeps warmup in-process only — a restart re-compiles
     executable_cache_dir: str | None = None
+    # delta-proportional refresh: True lets a follower refresh extend the
+    # resident state in place when the manifest advance is append-only
+    # (same MinHash geometry, same tombstones, old segments a prefix) —
+    # O(delta) hashing + upload instead of an O(lake) rebuild.  Requires
+    # fp32 resident profiles; any other advance falls back to a rebuild
+    incremental: bool = False
+    # corpus-axis bucket ladder: pad the placed corpus UP to the smallest
+    # bucket that fits (sentinel rows score -inf), so in-bucket ingest
+    # deltas re-dispatch the same compiled executables — zero steady-state
+    # recompiles.  None = exact-size placement (legacy)
+    column_buckets: tuple | None = None
+    # when live columns exceed this fraction of the current bucket, a
+    # daemon thread AOT-compiles the next bucket's plan set ahead of the
+    # crossing, so the cutover swaps onto pre-built executables
+    prewarm_fraction: float = 0.75
 
 
 @dataclasses.dataclass(eq=False)
@@ -131,6 +147,16 @@ class _VersionState:
     lsh: LSHIndex
     executor: Executor
     refs: int = 1                      # the head reference
+    # the version's FROZEN normalization stats: a delta-built state keeps
+    # its predecessor's (mean, std) so resident device rows stay valid
+    # without a rescale; every query — resident or uploaded — z-scores
+    # against these, never the snapshot's recomputed stats
+    mean: np.ndarray | None = None
+    std: np.ndarray | None = None
+    # accumulated float64 profile moments {count, sum, sumsq}: folded
+    # O(delta) per incremental refresh, reconstructed exactly from
+    # (mean, std, count) on full builds — feeds stats_drift reporting
+    moments: dict | None = None
 
     @property
     def version(self) -> int:
@@ -157,7 +183,8 @@ class DiscoveryEngine:
             n_bands=config.lsh.n_bands,
             n_coarse_bands=config.lsh.n_coarse_bands,
             shard_axes=tuple(config.shard_axes),
-            batch_buckets=tuple(config.batch_buckets or ())),
+            batch_buckets=tuple(config.batch_buckets or ()),
+            column_buckets=tuple(config.column_buckets or ())),
             cost_fn=config.cost_fn)
         self._cache: OrderedDict[bytes, tuple[list[ColumnMatch], float]] = \
             OrderedDict()
@@ -166,14 +193,20 @@ class DiscoveryEngine:
                           "cache_misses": 0, "cache_admitted": 0,
                           "cache_rejected": 0, "cache_evicted": 0,
                           "scored_columns": 0, "scan_columns": 0,
-                          "refreshes": 0}
+                          "refreshes": 0, "refreshes_coalesced": 0}
         self._plan_counts: dict[str, int] = {}
         self.last_plan = None
         self._slock = threading.Lock()
         self._head: _VersionState | None = None
         self._live: set[_VersionState] = set()
         self._reader = None
+        self._follow_auto = True
         self._scheduler = None
+        self._prewarmed: set[int] = set()
+        self._refresh_stats = {"count": 0, "incremental": 0, "full": 0,
+                               "last_ms": 0.0, "last_delta_columns": 0,
+                               "bytes_uploaded_total": 0,
+                               "recompiles_total": 0}
         # observability plane: events/metrics exist only when configured
         # (publish sites guard on None so the disabled hot path pays one
         # attribute read, nothing else).  An externally supplied bus
@@ -206,17 +239,37 @@ class DiscoveryEngine:
 
     # -- snapshot management (MVCC) -----------------------------------------
 
-    def refresh(self, snapshot: CatalogSnapshot) -> None:
+    def refresh(self, snapshot: CatalogSnapshot, *,
+                _coalesced: int = 0) -> None:
         """Swap in a new catalog snapshot (after add/drop/compact).
 
         In-flight query batches keep the version they pinned — the old
         state is retired only once its last batch unpins it.  The result
         cache is cleared; entries racing this swap land under the retired
-        version's namespace and can never hit again."""
+        version's namespace and can never hit again.
+
+        With ``EngineConfig.incremental`` and an attached reader, an
+        append-only manifest advance takes the **delta path**: the new
+        state extends the predecessor in place (O(delta) hashing, only
+        the new rows uploaded, executables inherited — zero recompiles)
+        instead of rebuilding from scratch.  ``_coalesced`` counts the
+        intermediate manifest versions this refresh collapsed (the
+        follower passes it through for observability)."""
         with self._slock:
             if self._closed:     # a follower poll racing eviction: the
                 return           # closed engine must not grow new states
-        st = self._build_state(snapshot)
+            version_from = (self._head.version if self._head is not None
+                            else None)
+            c_from = (self._head.snapshot.n_columns
+                      if self._head is not None else 0)
+        t0 = time.perf_counter()
+        if self.events is not None:
+            self.events.publish(EV.REFRESH_BEGIN, version_from=version_from,
+                                version_to=int(snapshot.version))
+        st = self._try_delta(snapshot)
+        incremental = st is not None
+        if st is None:
+            st = self._build_state(snapshot)
         with self._slock:
             old, self._head = self._head, st
             self._live.add(st)
@@ -225,23 +278,163 @@ class DiscoveryEngine:
             self._counters["refreshes"] += 1
         if old is not None:
             self._release(old)
-        # a refreshed version means a fresh executor with an empty dispatch
-        # table — re-warm it so the swap doesn't reintroduce first-contact
-        # compiles (guarded on a prior warmup: __init__'s refresh runs
-        # before the configured warmup, which then warms the head itself)
-        if self.config.warmup and self.warmup_report is not None:
-            self.warmup()
+        recompiles = 0
+        if incremental:
+            # the delta executor inherited the predecessor's compiled
+            # dispatch table — no re-warm, zero steady-state recompiles;
+            # near bucket capacity, compile the NEXT bucket in background
+            self._maybe_prewarm(st)
+        elif self.config.warmup and self.warmup_report is not None:
+            # a rebuilt version means a fresh executor with an empty
+            # dispatch table — re-warm it so the swap doesn't reintroduce
+            # first-contact compiles (guarded on a prior warmup: __init__'s
+            # refresh runs before the configured warmup, which then warms
+            # the head itself)
+            report = self.warmup()
+            recompiles = int(report.get("cache_misses", 0))
+        ms = (time.perf_counter() - t0) * 1e3
+        delta_columns = (st.snapshot.n_columns - c_from if incremental
+                         else st.snapshot.n_columns)
+        bytes_up = int(st.executor.bytes_uploaded)
+        with self._slock:
+            rs = self._refresh_stats
+            rs["count"] += 1
+            rs["incremental" if incremental else "full"] += 1
+            rs["last_ms"] = ms
+            rs["last_delta_columns"] = delta_columns
+            rs["bytes_uploaded_total"] += bytes_up
+            rs["recompiles_total"] += recompiles
+        if self.events is not None:
+            self.events.publish(
+                EV.REFRESH_END, version_from=version_from,
+                version_to=st.version, incremental=incremental,
+                delta_columns=delta_columns, bytes_uploaded=bytes_up,
+                recompiles=recompiles, coalesced=_coalesced, ms=ms)
 
-    def follow(self, reader) -> None:
+    def _try_delta(self, snapshot: CatalogSnapshot) -> _VersionState | None:
+        """Build the new head as a delta over the current one, or None
+        when the delta path is inadmissible — no reader, incremental off,
+        quantized resident profiles, or a manifest advance that is not
+        append-only (drop / compaction / re-sign).  The caller then falls
+        back to a full rebuild.
+
+        The predecessor is pinned for the duration so a racing release
+        can never close its executor mid-extension."""
+        cfg = self.config
+        if (not cfg.incremental or self._reader is None
+                or cfg.profile_dtype != "fp32"):
+            return None
+        with self._slock:
+            if self._closed or self._head is None:
+                return None
+            old = self._head
+            old.refs += 1
+        try:
+            try:
+                old_m = self._reader.manifest(old.version)
+                new_m = self._reader.manifest(snapshot.version)
+            except KeyError:       # fell off the reader's bounded tail
+                return None
+            if manifest_delta(old_m, new_m) is None:
+                return None
+            c_old = old.snapshot.n_columns
+            d = snapshot.n_columns - c_old
+            if d < 0 or old.mean is None:
+                return None
+            prof = snapshot.profiles
+            # frozen stats: the delta rows z-score with the PREDECESSOR's
+            # (mean, std), so the resident device rows need no rescale
+            num_new = np.asarray(prof.numeric[c_old:], np.float64)
+            z_rows = ((num_new - old.mean) / old.std).astype(np.float32)
+            w_rows = np.asarray(prof.words[c_old:])
+            lsh = old.lsh.extend(snapshot.signatures[c_old:])
+            n_pad = (self.planner.snap_columns(snapshot.n_columns)
+                     if self.planner.config.column_buckets else None)
+            executor = old.executor.extended(
+                z_rows, w_rows,
+                table_ids=np.asarray(snapshot.table_ids[c_old:], np.int32),
+                band_keys=lsh.keys[c_old:],
+                coarse_keys=(None if lsh.coarse is None
+                             else lsh.coarse[c_old:]),
+                n_padded=n_pad)
+            # host z concat is an accepted O(lake) memcpy (MB-scale);
+            # the delta-proportionality claim is about device placement,
+            # hashing and recompiles
+            z = (np.concatenate([np.asarray(old.z, np.float32), z_rows])
+                 if d else old.z)
+            moments = fold_moments(old.moments, {
+                "count": d, "sum": num_new.sum(axis=0),
+                "sumsq": (num_new * num_new).sum(axis=0)})
+            return _VersionState(snapshot=snapshot, z=z, w=prof.words,
+                                 lsh=lsh, executor=executor,
+                                 mean=old.mean, std=old.std,
+                                 moments=moments)
+        except NotImplementedError:
+            return None            # executor can't extend this placement
+        finally:
+            self._release(old)
+
+    # -- next-bucket prewarm -------------------------------------------------
+
+    def _maybe_prewarm(self, st: _VersionState) -> None:
+        """Kick a background AOT compile of the NEXT column bucket once
+        occupancy crosses ``prewarm_fraction``, so a future bucket-boundary
+        crossing swaps onto pre-built executables."""
+        if not (self.planner.config.column_buckets
+                and self.planner.config.batch_buckets):
+            return
+        cur = st.executor.n_columns
+        if st.snapshot.n_columns < self.config.prewarm_fraction * cur:
+            return
+        nxt = self.planner.next_column_bucket(cur)
+        if nxt is None or nxt in self._prewarmed:
+            return
+        self._prewarmed.add(nxt)
+        threading.Thread(target=self._prewarm_safe, args=(int(nxt),),
+                         daemon=True, name="freyja-prewarm").start()
+
+    def _prewarm_safe(self, bucket: int) -> None:
+        try:
+            self.prewarm_bucket(bucket)
+        except Exception:
+            pass    # best effort: a failed prewarm only means a
+                    # first-contact compile at the actual crossing
+
+    def prewarm_bucket(self, bucket: int) -> dict:
+        """Synchronously AOT-compile the serving plan set at ``bucket``
+        corpus columns on the current head's executor.  The executables
+        land in the head's dispatch table under corpus-width-qualified
+        keys, which ``Executor.extended`` carries forward — the crossing
+        inherits them and pays no compile.  ``refresh`` calls this on a
+        daemon thread near bucket capacity; tests call it directly."""
+        st = self._pin()
+        try:
+            bb = (self.planner.config.batch_buckets
+                  or tuple(DEFAULT_BATCH_BUCKETS))
+            entries = [(plan, b) for b in sorted({int(x) for x in bb})
+                       for plan in self.planner.plan_set(
+                           n_columns=int(bucket), n_queries=b,
+                           mode=self.config.mode, mesh=self.mesh,
+                           grid=self.config.grid, scope="serve")]
+            return st.executor.aot_compile(entries, cache=self._exec_cache,
+                                           n_columns=int(bucket))
+        finally:
+            self._release(st)
+
+    def follow(self, reader, *, auto: bool = True) -> None:
         """Attach a :class:`~repro.service.catalog.CatalogReader`; every
         query batch first tails the manifest chain and refreshes onto the
-        newest published version."""
+        newest published version.  ``auto=False`` attaches without the
+        per-batch polling — an external driver (the fleet's rolling
+        refresher) calls ``_maybe_follow(force=True)`` on its own cadence
+        so replicas never all rebuild at once."""
         self._reader = reader
+        self._follow_auto = bool(auto)
         # adopt the follower into this engine's observability plane so
         # its manifest_advanced events land on the same bus
         if self.events is not None and getattr(reader, "events", None) is None:
             reader.events = self.events
-        self._maybe_follow()
+        self._maybe_follow(force=True)
 
     def attach_scheduler(self, scheduler) -> None:
         """Register the continuous-batching runtime driving this engine so
@@ -287,7 +480,7 @@ class DiscoveryEngine:
         try:
             entries = [(plan, b) for b in buckets
                        for plan in self.planner.plan_set(
-                           n_columns=st.snapshot.n_columns, n_queries=b,
+                           n_columns=st.executor.n_columns, n_queries=b,
                            mode=self.config.mode, mesh=self.mesh,
                            grid=self.config.grid, scope=scope)]
             if self.events is not None:
@@ -312,20 +505,35 @@ class DiscoveryEngine:
         self.warmup_report = report
         return report
 
-    def _maybe_follow(self) -> None:
+    def _maybe_follow(self, force: bool = False) -> None:
         reader = self._reader
-        if reader is None:
+        if reader is None or (not force and not self._follow_auto):
             return
-        if reader.poll():
-            # latest-snapshot path: race-proof against a compaction that
-            # deletes the polled version's segments before we materialize
-            self.refresh(reader.snapshot())
+        new = reader.poll()
+        if new:
+            # a burst of manifest advances collapses into ONE refresh onto
+            # the newest version (latest-snapshot path: race-proof against
+            # a compaction deleting an intermediate version's segments) —
+            # a follower behind by N versions pays one build, not N
+            coalesced = len(new) - 1
+            if coalesced:
+                with self._slock:
+                    self._counters["refreshes_coalesced"] += coalesced
+            self.refresh(reader.snapshot(), _coalesced=coalesced)
 
     def _build_state(self, snapshot: CatalogSnapshot) -> _VersionState:
         prof = snapshot.profiles
         w = prof.words
         lsh = LSHIndex.build(snapshot.signatures, self.config.lsh)
         dt = self.config.profile_dtype
+        # corpus-axis bucket padding applies to full builds too, so the
+        # traced shapes match what later delta refreshes re-dispatch
+        n_pad = (self.planner.snap_columns(snapshot.n_columns)
+                 if self.planner.config.column_buckets else None)
+        # moments reconstruct EXACTLY from the snapshot stats — no O(lake)
+        # float64 pass; delta refreshes fold onto these
+        mean, std = prof.mean, prof.std
+        moments = moments_from_stats(mean, std, snapshot.n_columns)
         if snapshot.lazy and dt != "fp32":
             # lazy snapshot + quantized sidecar: stream the quantizer over
             # the memmapped raw profiles in blocks (byte-identical sidecar
@@ -341,9 +549,10 @@ class DiscoveryEngine:
                 coarse_keys=lsh.coarse, profile_dtype=dt,
                 z_scale=scale, fp32_rows=zv.__getitem__,
                 mesh=self.mesh, events=self.events,
-                exec_cache=self._exec_cache)
+                exec_cache=self._exec_cache, n_padded=n_pad)
             return _VersionState(snapshot=snapshot, z=zv, w=w, lsh=lsh,
-                                 executor=executor)
+                                 executor=executor, mean=mean, std=std,
+                                 moments=moments)
         z = prof.zscored.astype(np.float32)
         executor = Executor(
             z, w, self.model.gbdt.astuple(),
@@ -351,9 +560,10 @@ class DiscoveryEngine:
             coarse_keys=lsh.coarse,
             profile_dtype=dt,
             mesh=self.mesh, events=self.events,
-            exec_cache=self._exec_cache)
+            exec_cache=self._exec_cache, n_padded=n_pad)
         return _VersionState(snapshot=snapshot, z=z, w=w, lsh=lsh,
-                             executor=executor)
+                             executor=executor, mean=mean, std=std,
+                             moments=moments)
 
     def _pin(self) -> _VersionState:
         with self._slock:
@@ -562,9 +772,13 @@ class DiscoveryEngine:
         # admission can never see a torn view (e.g. hits+misses != queries)
         with self._slock:
             plans = dict(self._plan_counts)
-            version = self._head.version
-            n_columns = self._head.snapshot.n_columns
+            head = self._head
+            version = head.version
+            n_columns = head.snapshot.n_columns
+            exec_columns = head.executor.n_columns
             live = len(self._live)
+            rs = dict(self._refresh_stats)
+            prewarmed = sorted(self._prewarmed)
             with self._cache_lock:     # admission counters live under it
                 c = dict(self._counters)
                 cache_size = len(self._cache)
@@ -584,6 +798,11 @@ class DiscoveryEngine:
             "n_columns": n_columns,
             "snapshot": {"version": version, "refreshes": c["refreshes"],
                          "live_states": live},
+            "refresh": {**rs,
+                        "coalesced": c["refreshes_coalesced"],
+                        "stats_drift": _stats_drift(head),
+                        "column_bucket": exec_columns,
+                        "prewarmed": prewarmed},
         }
         if self._scheduler is not None:
             out["scheduler"] = self._scheduler.stats()
@@ -619,7 +838,11 @@ class DiscoveryEngine:
             self._pad_target(np.asarray(zq).shape[0]))
         pad = zq.shape[0]
 
-        plan = self.planner.plan(n_columns=st.snapshot.n_columns,
+        # plan against the executor's (bucket-padded) corpus width, not
+        # the live count: plan statics then stay fixed inside a bucket,
+        # which is what lets an in-bucket ingest delta re-dispatch the
+        # same compiled executables with zero recompiles
+        plan = self.planner.plan(n_columns=st.executor.n_columns,
                                  n_queries=pad, mode=self.config.mode,
                                  mesh=self.mesh, grid=self.config.grid)
         if marks is not None:
@@ -668,11 +891,14 @@ class DiscoveryEngine:
             profs = self._ensure_profiled([requests[i] for i in external],
                                           st)
             prof = snap.profiles
+            # the version's FROZEN stats, not the snapshot's recomputed
+            # ones: a delta-built state z-scored its resident rows with
+            # the predecessor's (mean, std), and uploaded queries must
+            # live in the same space or scores skew post-ingest
+            mean = st.mean if st.mean is not None else prof.mean
+            std = st.std if st.std is not None else prof.std
             for (_, num, words, sigs), i in zip(profs, external):
-                # z-scoring is per-version (lake-wide mean/std move with
-                # the snapshot) but pure numpy — the stashed raw profile
-                # is what the device computed
-                zq[i] = (num - prof.mean) / prof.std
+                zq[i] = (num - mean) / std
                 wq[i] = words
                 sigq[i] = sigs
         return zq, wq, sigq, tq, qid
@@ -789,6 +1015,24 @@ class DiscoveryEngine:
             self._counters["cache_admitted"] += 1
 
 
+def _stats_drift(st: _VersionState) -> float:
+    """How far the lake's TRUE normalization has drifted from the state's
+    frozen (mean, std), in current-std units: ``max |mean_now - frozen| /
+    std_now``.  Delta refreshes fold true moments O(delta), so this stays
+    exact without rescoring anything; operators watch it to decide when a
+    full rebuild (which re-freezes the stats) is worth scheduling."""
+    m, frozen = st.moments, st.mean
+    if m is None or frozen is None or not int(m["count"]):
+        return 0.0
+    n = float(m["count"])
+    mean_now = np.asarray(m["sum"], np.float64) / n
+    var = np.maximum(np.asarray(m["sumsq"], np.float64) / n
+                     - mean_now * mean_now, 0.0)
+    std_now = np.maximum(np.sqrt(var), 1e-6)
+    return float(np.max(np.abs(mean_now - np.asarray(frozen, np.float64))
+                        / std_now))
+
+
 def sigq_width(snapshot: CatalogSnapshot) -> int:
     return int(snapshot.signatures.shape[1])
 
@@ -821,7 +1065,7 @@ def measure_recall(engine: DiscoveryEngine, query_ids: np.ndarray,
         # the baseline at the same size so its q_shards stay admissible
         pad = engine._pad_target(len(reqs))
         base_plan = engine.planner.plan(
-            n_columns=st.snapshot.n_columns, n_queries=pad,
+            n_columns=st.executor.n_columns, n_queries=pad,
             mode="sharded" if plan.sharded else "full",
             mesh=engine.mesh if plan.sharded else None,
             grid=plan.grid if plan.sharded else None)

@@ -49,6 +49,11 @@ Event taxonomy (the ``type`` strings components publish):
                             replica (replica, n, queue_depth)
 ``batch_redispatched``      a batch was re-dispatched off a failed/evicted
                             replica (replica, n, attempts)
+``refresh_begin``           engine snapshot refresh started
+                            (version_from, version_to)
+``refresh_end``             refresh swapped (version_from, version_to,
+                            incremental, delta_columns, bytes_uploaded,
+                            recompiles, coalesced, ms)
 ==========================  =================================================
 
 Payloads are free-form keyword dicts; the constants below are the
@@ -85,6 +90,8 @@ EXECUTABLE_CACHE_MISS = "executable_cache_miss"
 REPLICA_STATE = "replica_state"
 BATCH_ROUTED = "batch_routed"
 BATCH_REDISPATCHED = "batch_redispatched"
+REFRESH_BEGIN = "refresh_begin"
+REFRESH_END = "refresh_end"
 
 EVENT_TYPES = (
     REQUEST_ADMITTED, REQUEST_SHED, REQUEST_EXPIRED, BATCH_FORMED,
@@ -94,6 +101,7 @@ EVENT_TYPES = (
     COARSE_PASS, FINE_PROBE,
     WARMUP_BEGIN, WARMUP_END, EXECUTABLE_CACHE_HIT, EXECUTABLE_CACHE_MISS,
     REPLICA_STATE, BATCH_ROUTED, BATCH_REDISPATCHED,
+    REFRESH_BEGIN, REFRESH_END,
 )
 
 # trace ids: cheap, process-unique, monotonic within a session — NOT

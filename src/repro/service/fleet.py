@@ -423,6 +423,12 @@ class FleetConfig:
     warmup_timeout_s: float = 300.0
     # re-dispatch budget per batch; None = one attempt per replica
     max_redispatch: int | None = None
+    # rolling-refresh cadence: the fleet polls the catalog and refreshes
+    # replicas onto new manifest versions ONE AT A TIME (each keeps
+    # serving its pinned MVCC head while its new state builds, so a
+    # manifest advance never pauses the fleet).  0 disables the
+    # background thread (tests call roll_refresh() by hand)
+    refresh_interval_s: float = 0.0
     # scheduler-compat: ladder the scheduler reads/installs (None adopts
     # the first engine's configured ladder)
     batch_buckets: tuple | None = None
@@ -464,7 +470,7 @@ class EngineFleet:
         self._pending: collections.deque[_FleetBatch] = collections.deque()
         self._counters = {"dispatched": 0, "completed": 0, "failed": 0,
                           "redispatches": 0, "evictions": 0,
-                          "state_changes": 0}
+                          "state_changes": 0, "rolling_refreshes": 0}
         self._scheduler = None
         self._closed = False
         self.replicas = [
@@ -480,6 +486,12 @@ class EngineFleet:
                                             daemon=True,
                                             name="freyja-fleet-health")
             self._health.start()
+        self._refresher = None
+        if self.config.refresh_interval_s > 0:
+            self._refresher = threading.Thread(target=self._refresh_loop,
+                                               daemon=True,
+                                               name="freyja-fleet-refresh")
+            self._refresher.start()
 
     @classmethod
     def from_catalog(cls, catalog, model, engine_config=None, *,
@@ -519,7 +531,11 @@ class EngineFleet:
             # worker runs it inside the WARMING state instead of the
             # constructor running it serially here
             cfg.warmup = engine_config.warmup
-            eng.follow(reader)
+            # auto=False: replicas do NOT poll per query batch — the
+            # fleet's rolling refresher advances them one at a time, so
+            # a manifest advance can never trigger N simultaneous
+            # rebuilds across the fleet (the refresh storm)
+            eng.follow(reader, auto=False)
             engines.append(eng)
         return cls(engines, config=config, events=bus, metrics=metrics,
                    injector=injector)
@@ -703,6 +719,43 @@ class EngineFleet:
         if self.events is not None:
             self.events.publish(type, **payload)
 
+    # -- rolling refresh -----------------------------------------------------
+
+    def _refresh_loop(self) -> None:
+        while not self._stop.wait(self.config.refresh_interval_s):
+            try:
+                self.roll_refresh()
+            except Exception:
+                pass                    # a torn replica refresh must not
+                                        # kill the cadence thread
+
+    def roll_refresh(self) -> int:
+        """One rolling-refresh sweep: poll each live replica's follower
+        and refresh it onto the newest catalog version, strictly one
+        replica at a time.  MVCC keeps the refreshing replica serving
+        its pinned head until the new state swaps in, and the other
+        replicas are untouched until their turn — so serving never
+        pauses and queries are never dropped by an ingest.  Returns how
+        many replicas actually moved to a new version."""
+        n = 0
+        for r in self.replicas:
+            if self._closed or r.state == EVICTED:
+                continue
+            eng = r.engine
+            head = getattr(eng, "_head", None)
+            v0 = head.version if head is not None else None
+            try:
+                eng._maybe_follow(force=True)
+            except Exception:
+                continue                # this replica retries next sweep
+            head = getattr(eng, "_head", None)
+            if head is not None and head.version != v0:
+                n += 1
+        if n:
+            with self._lock:
+                self._counters["rolling_refreshes"] += n
+        return n
+
     # -- health --------------------------------------------------------------
 
     def _health_loop(self) -> None:
@@ -747,6 +800,8 @@ class EngineFleet:
         self._stop.set()
         if self._health is not None:
             self._health.join()
+        if self._refresher is not None:
+            self._refresher.join()
         if drain:
             for r in self.replicas:
                 r.begin_drain()

@@ -132,6 +132,40 @@ class LSHIndex:
     def n_columns(self) -> int:
         return int(self.keys.shape[0])
 
+    def extend(self, new_signatures: np.ndarray) -> "LSHIndex":
+        """Index with ``new_signatures``'s rows appended — byte-identical
+        to a fresh :meth:`build` over the concatenated signature matrix.
+
+        Both key functions are pure per row (the remainder fold touches
+        only each row's own trailing permutations), so an append-only
+        ingest delta costs O(delta), not O(lake): only the new rows are
+        hashed and the resident key matrices are reused as-is.
+        """
+        new_signatures = np.asarray(new_signatures)
+        if new_signatures.shape[0] == 0:
+            return self
+        new_keys = band_keys(new_signatures, self.config.n_bands)
+        coarse = self.coarse
+        if coarse is not None:
+            coarse = np.concatenate(
+                [coarse, coarse_band_keys(new_signatures,
+                                          self.config.n_coarse_bands)])
+        return LSHIndex(config=self.config,
+                        keys=np.concatenate([self.keys, new_keys]),
+                        coarse=coarse)
+
+    def retract(self, keep_mask: np.ndarray) -> "LSHIndex":
+        """Index restricted to the rows where ``keep_mask`` is True —
+        byte-identical to a fresh :meth:`build` over the kept signatures
+        (per-row purity again: dropping rows never perturbs survivors)."""
+        keep = np.asarray(keep_mask, bool)
+        if keep.shape != (self.n_columns,):
+            raise ValueError(
+                f"keep_mask shape {keep.shape} != ({self.n_columns},)")
+        return LSHIndex(config=self.config, keys=self.keys[keep],
+                        coarse=None if self.coarse is None
+                        else self.coarse[keep])
+
     def query_keys(self, signatures_q: np.ndarray) -> np.ndarray:
         return band_keys(signatures_q, self.config.n_bands)
 

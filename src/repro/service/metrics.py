@@ -37,6 +37,9 @@ BATCH_SIZE_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 COMPILE_BUCKETS_MS = (10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
                       5000.0, 10000.0, 30000.0)
 SURVIVOR_FRACTION_BUCKETS = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0)
+REFRESH_BUCKETS_MS = (1.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+                      1000.0, 2500.0, 5000.0, 15000.0, 60000.0)
+DELTA_COLUMNS_BUCKETS = (16, 64, 256, 1024, 4096, 16384, 65536)
 
 
 def _fmt(v: float) -> str:
@@ -316,6 +319,28 @@ class ServiceMetrics:
         self.router_queue_depth = r.gauge(
             "router_queue_depth",
             "per-replica request queue depth at the last routed placement")
+        self.refresh_ms = r.histogram(
+            "refresh_ms", "snapshot refresh wall time (ms)",
+            buckets=REFRESH_BUCKETS_MS)
+        self.refresh_delta_columns = r.histogram(
+            "refresh_delta_columns",
+            "columns (re)placed per refresh — the delta on incremental "
+            "refreshes, the full lake on rebuilds",
+            buckets=DELTA_COLUMNS_BUCKETS)
+        self.refreshes_incremental = r.counter(
+            "refreshes_incremental_total",
+            "refreshes served by the delta path (no rebuild)")
+        self.refreshes_full = r.counter(
+            "refreshes_full_total", "refreshes that rebuilt from scratch")
+        self.placement_bytes_uploaded = r.counter(
+            "placement_bytes_uploaded_total",
+            "host->device bytes moved by refresh placements")
+        self.refresh_recompiles = r.counter(
+            "refresh_recompiles_total",
+            "executables compiled fresh during a refresh re-warm")
+        self.refreshes_coalesced = r.counter(
+            "refreshes_coalesced_total",
+            "pending manifest advances folded into a single refresh")
         self.queue_ms = r.histogram(
             "request_queue_ms", "submit -> batch formation wait (ms)")
         self.compute_ms = r.histogram(
@@ -416,6 +441,18 @@ class ServiceMetrics:
                                                 replica=str(rep))
             elif ev.type == EV.BATCH_REDISPATCHED:
                 self.redispatches.inc()
+            elif ev.type == EV.REFRESH_END:
+                p = ev.payload
+                self.refresh_ms.observe(p.get("ms", 0.0))
+                self.refresh_delta_columns.observe(p.get("delta_columns", 0))
+                if p.get("incremental"):
+                    self.refreshes_incremental.inc()
+                else:
+                    self.refreshes_full.inc()
+                self.placement_bytes_uploaded.inc(p.get("bytes_uploaded", 0))
+                self.refresh_recompiles.inc(p.get("recompiles", 0))
+                if p.get("coalesced"):
+                    self.refreshes_coalesced.inc(p["coalesced"])
             elif ev.type == EV.REPLICA_STATE:
                 self.replica_state_changes.inc(
                     state=str(ev.payload.get("state", "")))
